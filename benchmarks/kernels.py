@@ -1,0 +1,78 @@
+"""Kernel microbenchmarks: gather_matmul + lstm_pointwise vs XLA reference.
+
+On this CPU container the Pallas kernels execute in interpret mode (Python)
+— wall-clock there is meaningless, so we (a) validate allclose at bench
+shapes and (b) time the XLA compaction path (jnp.take + dense dot), which is
+what the structured-dropout speedup rides on for the CPU backend, at the
+paper's three phase shapes.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import masks
+from repro.kernels import ops, ref
+
+
+def _t(f, *a, n=10):
+    jax.block_until_ready(f(*a))
+    t0 = time.time()
+    for _ in range(n):
+        out = f(*a)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / n * 1e3
+
+
+def main(quick: bool = False):
+    print("=" * 72)
+    print("Kernels — gather_matmul / lstm_pointwise")
+    print("=" * 72)
+    key = jax.random.PRNGKey(0)
+    out = {}
+
+    # correctness at bench shapes (interpret mode = TPU kernel body semantics)
+    B, H, N, bs, rate = (64, 256, 512, 8, 0.5) if quick else \
+        (128, 1024, 2048, 128, 0.5)
+    a = jax.random.normal(key, (B, H), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (H, N)) / H ** 0.5
+    kb = masks.sample_keep_blocks(key, H, rate, bs)
+    y = ops.gather_matmul(a, w, kb, block_size=bs, gather="b_rows")
+    y_ref = ref.gather_matmul_ref(a, w, kb, block_size=bs, gather="b_rows")
+    err = float(jnp.abs(y - y_ref).max())
+    print(f"gather_matmul b_rows  ({B}x{H}@{H}x{N}, rate {rate}): "
+          f"max|err| = {err:.2e}")
+    assert err < 1e-3
+    out["gather_matmul_err"] = err
+
+    g = jax.random.normal(key, (B, 4 * H))
+    c = jax.random.normal(jax.random.fold_in(key, 2), (B, H))
+    h1, c1 = ops.lstm_pointwise(g, c)
+    h2, c2 = ref.lstm_pointwise_ref(g, c)
+    err2 = float(max(jnp.abs(h1 - h2).max(), jnp.abs(c1 - c2).max()))
+    print(f"lstm_pointwise        (B={B}, H={H}): max|err| = {err2:.2e}")
+    assert err2 < 1e-5
+    out["lstm_pointwise_err"] = err2
+
+    # XLA compaction-path speedups at the paper's phase shapes
+    rows = []
+    for rate in (0.5, 0.65):
+        ids = masks.keep_blocks_to_unit_ids(
+            masks.sample_keep_blocks(key, H, rate, bs), bs)
+        m = jnp.zeros((H,)).at[ids].set(1.0)
+        dense = _t(jax.jit(lambda a, w: (a * m) @ w), a, w)
+        comp = _t(jax.jit(lambda a, w: jnp.take(a, ids, 1)
+                          @ jnp.take(w, ids, 0)), a, w)
+        rows.append((rate, dense, comp, dense / comp))
+        print(f"rate {rate}: masked-dense {dense:7.2f} ms  "
+              f"compacted {comp:7.2f} ms  speedup {dense/comp:.2f}x "
+              f"(ideal {1/(1-rate):.2f}x)")
+    out["compaction_speedups"] = rows
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Benchmark aggregator: one section per paper table/figure + kernel table.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Emits a summary JSON to results/bench.json as well.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer steps (CI-speed)")
+    ap.add_argument("--out", default="results/bench.json")
+    args = ap.parse_args(argv)
+
+    from benchmarks import fig3_curve, table1_ptb, table2_nmt, table3_ner
+    from benchmarks import kernels as kernel_bench
+
+    t0 = time.time()
+    out = {}
+    steps1 = 12 if args.quick else 40
+    steps23 = 8 if args.quick else 30
+    steps_f = 24 if args.quick else 80
+
+    out["table1_ptb"] = table1_ptb.main(steps=steps1, quick=args.quick)
+    out["table2_nmt"] = table2_nmt.main(steps=steps23, quick=args.quick)
+    out["table3_ner"] = table3_ner.main(steps=steps23, quick=args.quick)
+    out["fig3_curve"] = fig3_curve.main(steps=steps_f, quick=args.quick)
+    out["kernels"] = kernel_bench.main(quick=args.quick)
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1, default=float)
+    print(f"\nall benchmarks done in {time.time()-t0:.0f}s -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Table 3: NER sequence labelling — F1 + speedup (BiLSTM-CNN-CRF)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro import optim
+from repro.data import synthetic
+from repro.models import tagger
+
+
+def _cfg(mode: str):
+    rate = 0.5
+    kw = dict(vocab=300, char_vocab=40, hidden=200, num_tags=9,
+              word_embed=100, char_filters=28)   # 128-dim concat feature
+    if mode == "baseline":
+        return tagger.TaggerConfig(inp=common.spec_random(rate), **kw)
+    if mode == "nr_st":
+        return tagger.TaggerConfig(inp=common.spec_structured(rate), **kw)
+    return tagger.TaggerConfig(inp=common.spec_structured(rate),
+                               rh=common.spec_structured(rate), **kw)
+
+
+def f1_score(params, cfg, val):
+    pred = np.asarray(tagger.viterbi(params, jax.tree.map(jnp.asarray, val),
+                                     cfg))
+    gold = val["tags"]
+    tp = ((pred == gold) & (gold > 0)).sum()
+    fp = ((pred != gold) & (pred > 0)).sum()
+    fn = ((pred != gold) & (gold > 0)).sum()
+    prec = tp / max(tp + fp, 1)
+    rec = tp / max(tp + fn, 1)
+    return 2 * prec * rec / max(prec + rec, 1e-9)
+
+
+def run_mode(mode: str, steps: int, batch=32):
+    cfg = _cfg(mode)
+    key = jax.random.PRNGKey(0)
+    params = tagger.init_params(key, cfg)
+    opt = optim.chain(optim.clip_by_global_norm(5.0), optim.adamw(2e-3))
+    opt_state = opt.init(params)
+    val = synthetic.ner_examples(64, cfg.vocab, cfg.char_vocab, cfg.num_tags,
+                                 seed=9999)
+
+    @jax.jit
+    def step_fn(params, opt_state, b, key):
+        l, g = jax.value_and_grad(lambda p: tagger.loss_fn(
+            p, b, cfg, drop_key=key))(params)
+        upd, opt_state = opt.update(g, opt_state, params)
+        return optim.apply_updates(params, upd), opt_state, l
+
+    def batches(i):
+        return jax.tree.map(jnp.asarray, synthetic.ner_examples(
+            batch, cfg.vocab, cfg.char_vocab, cfg.num_tags, seed=i))
+
+    params, loss, ms = common.train_and_time(step_fn, batches, params,
+                                             opt_state, key, steps)
+    f1 = f1_score(params, cfg, val)
+    return common.RunResult(mode, f1, "F1", ms, loss)
+
+
+def main(steps: int = 40, quick: bool = False):
+    print("=" * 72)
+    print("Table 3 — NER (BiLSTM-CNN-CRF, synthetic CoNLL-like tag patterns)")
+    print("=" * 72)
+    results = [run_mode(m, steps) for m in ("baseline", "nr_st", "nr_rh_st")]
+    print(common.speedup_table(results))
+    return {"results": [r.__dict__ for r in results]}
+
+
+if __name__ == "__main__":
+    main()

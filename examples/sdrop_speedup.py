@@ -1,0 +1,71 @@
+"""Measure the paper's FP/BP/WG speedups in isolation (Table-1 style).
+
+For a Zaremba-large-sized gate matmul (B*T x 2H x 4H-ish), times
+  dense          : x @ W                      (no dropout)
+  NR+Random      : (x * mask) @ W             (baseline: no reclaim)
+  NR+ST (paper)  : sdrop_matmul(x, W, keep)   (compacted FP/BP/WG)
+at rates {0.5, 0.65} on the CPU backend, reporting per-phase speedup
+(FP = fwd, BP+WG = grad), mirroring the paper's Table 1 breakdown.
+
+    PYTHONPATH=src python examples/sdrop_speedup.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import masks, sparse_matmul as sm
+
+B, H, N = 700, 1500, 6000            # Zaremba-large LSTM gate matmul shape
+
+
+def timeit(f, *args, n=20):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
+        jax.block_until_ready(f(*args))
+    t0 = time.time()
+    for _ in range(n):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / n
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (B, H))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (H, N)) / H ** 0.5
+
+    dense_f = jax.jit(lambda x, w: x @ w)
+    dense_g = jax.jit(jax.grad(lambda x, w: ((x @ w) ** 2).sum(),
+                               argnums=(0, 1)))
+    t_df = timeit(dense_f, x, w)
+    t_dg = timeit(lambda x, w: dense_g(x, w)[0], x, w)
+    print(f"dense         : FP {t_df*1e3:7.2f} ms   BP+WG {t_dg*1e3:7.2f} ms")
+
+    for rate in (0.5, 0.65):
+        kb = masks.sample_keep_blocks(key, H, rate, 4)
+        m = masks.keep_blocks_to_mask(kb, H, 4)
+
+        rand_f = jax.jit(lambda x, w, m: (x * m) @ w)
+        rand_g = jax.jit(jax.grad(
+            lambda x, w, m: (((x * m) @ w) ** 2).sum(), argnums=(0, 1)))
+        t_rf = timeit(rand_f, x, w, m)
+        t_rg = timeit(lambda x, w, m: rand_g(x, w, m)[0], x, w, m)
+
+        st_f = jax.jit(lambda x, w, kb: sm.sdrop_matmul(
+            x, w, kb, rate=rate, block_size=4))
+        st_g = jax.jit(jax.grad(
+            lambda x, w, kb: (sm.sdrop_matmul(x, w, kb, rate=rate,
+                                              block_size=4) ** 2).sum(),
+            argnums=(0, 1)))
+        t_sf = timeit(st_f, x, w, kb)
+        t_sg = timeit(lambda x, w, kb: st_g(x, w, kb)[0], x, w, kb)
+
+        print(f"rate={rate}:")
+        print(f"  NR+Random   : FP {t_rf*1e3:7.2f} ms   BP+WG {t_rg*1e3:7.2f} ms"
+              f"   (speedup {t_rf/t_rf:.2f}x / {t_rg/t_rg:.2f}x vs itself)")
+        print(f"  NR+ST(paper): FP {t_sf*1e3:7.2f} ms   BP+WG {t_sg*1e3:7.2f} ms"
+              f"   speedup vs random: FP {t_rf/t_sf:.2f}x  BP+WG {t_rg/t_sg:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Fault-tolerant checkpointing: sharded npz + manifest + auto-resume."""
+from repro.checkpoint.store import (save_checkpoint, restore_checkpoint,
+                                    latest_step, PreemptionHook)

@@ -1,0 +1,42 @@
+"""Architecture registry: ``--arch <id>`` -> ArchSpec.
+
+10 assigned archs (public pool) + the paper's own 5 configs.
+"""
+from __future__ import annotations
+
+from repro.configs import (arctic_480b, gemma_2b, minitron_8b, mixtral_8x22b,
+                           pixtral_12b, qwen1_5_32b, qwen3_8b, whisper_base,
+                           xlstm_1_3b, zamba2_1_2b)
+from repro.configs import paper_models
+from repro.configs.base import ArchSpec
+from repro.configs.shapes import SHAPES, SHAPE_NAMES, ShapeSpec
+
+ASSIGNED = [
+    xlstm_1_3b.SPEC,
+    mixtral_8x22b.SPEC,
+    arctic_480b.SPEC,
+    qwen3_8b.SPEC,
+    minitron_8b.SPEC,
+    gemma_2b.SPEC,
+    qwen1_5_32b.SPEC,
+    pixtral_12b.SPEC,
+    zamba2_1_2b.SPEC,
+    whisper_base.SPEC,
+]
+
+REGISTRY = {s.name: s for s in ASSIGNED + paper_models.PAPER_SPECS}
+
+ASSIGNED_NAMES = tuple(s.name for s in ASSIGNED)
+
+
+def get_arch(name: str) -> ArchSpec:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+def all_cells():
+    """The 40 assigned (arch x shape) cells, with skip reasons resolved."""
+    for spec in ASSIGNED:
+        for sname in SHAPE_NAMES:
+            yield spec, SHAPES[sname], spec.applicable(sname)

@@ -1,0 +1,202 @@
+"""Uniform model API over every arch kind (used by launch/, tests, benches).
+
+  loss_fn(kind)        (params, batch, cfg, *, rules, drop_key, step) -> loss
+  init_params(kind)    (key, cfg) -> Param-tagged pytree
+  prefill_fn / decode_fn / init_decode_state — serving entry points
+  input_specs(spec, cfg, shape) — ShapeDtypeStruct stand-ins for every model
+  input of that (arch x shape) cell: weak-type-correct, shardable, no device
+  allocation. This is what the multi-pod dry-run lowers against.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec
+from repro.configs.shapes import SHAPES, ShapeSpec
+from repro.models import lstm_lm, seq2seq, ssm, tagger, transformer, xlstm
+
+I32 = jnp.int32
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# dispatch tables
+# ---------------------------------------------------------------------------
+
+_MODULES = {
+    "transformer": transformer,
+    "xlstm": xlstm,
+    "ssm": ssm,
+    "lstm_lm": lstm_lm,
+    "nmt": seq2seq,
+    "tagger": tagger,
+}
+
+
+def module(kind: str):
+    return _MODULES[kind]
+
+
+def init_params(kind: str, key, cfg):
+    return _MODULES[kind].init_params(key, cfg)
+
+
+def loss_fn(kind: str):
+    return _MODULES[kind].loss_fn
+
+
+# ---------------------------------------------------------------------------
+# training / prefill batch specs
+# ---------------------------------------------------------------------------
+
+
+def train_batch_specs(spec: ArchSpec, cfg, shape: ShapeSpec):
+    B, S = shape.global_batch, shape.seq_len
+    if spec.kind == "transformer":
+        d: dict = {"labels": _sds((B, S), I32)}
+        if getattr(cfg, "embeds_in", False):
+            d["embeds"] = _sds((B, S, cfg.d_model), cfg.compute_dtype)
+        else:
+            d["tokens"] = _sds((B, S), I32)
+        if getattr(cfg, "is_encoder_decoder", False):
+            d["frames"] = _sds((B, cfg.enc_seq, cfg.d_model),
+                               cfg.compute_dtype)
+        return d
+    if spec.kind in ("xlstm", "ssm"):
+        return {"tokens": _sds((B, S), I32), "labels": _sds((B, S), I32)}
+    if spec.kind == "lstm_lm":
+        return {"tokens": _sds((B, S), I32), "labels": _sds((B, S), I32)}
+    if spec.kind == "nmt":
+        return {"src": _sds((B, S), I32), "tgt_in": _sds((B, S), I32),
+                "tgt_out": _sds((B, S), I32)}
+    if spec.kind == "tagger":
+        return {"words": _sds((B, S), I32),
+                "chars": _sds((B, S, 12), I32),
+                "tags": _sds((B, S), I32),
+                "mask": _sds((B, S), jnp.bool_)}
+    raise ValueError(spec.kind)
+
+
+def batch_logical_axes(spec: ArchSpec, cfg, shape: ShapeSpec):
+    """Logical axes per batch leaf (-> PartitionSpecs via sharding rules)."""
+    def ax(leaf_shape_len, has_feat=False):
+        base = [("batch",), ("batch", "seq"), ("batch", "seq", None),
+                ("batch", "seq", None, None)]
+        return base[leaf_shape_len - 1]
+
+    specs = train_batch_specs(spec, cfg, shape)
+    return {k: ax(len(v.shape)) for k, v in specs.items()}
+
+
+# ---------------------------------------------------------------------------
+# serving specs
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(spec: ArchSpec, cfg, batch: int, max_seq: int):
+    if spec.kind == "transformer":
+        return transformer.init_cache(cfg, batch, max_seq)
+    if spec.kind == "xlstm":
+        return xlstm.init_state(cfg, batch)
+    if spec.kind == "ssm":
+        return ssm.init_state(cfg, batch, max_seq=max_seq)
+    raise ValueError(f"{spec.kind} has no decode path")
+
+
+def decode_state_specs(spec: ArchSpec, cfg, batch: int, max_seq: int):
+    return jax.eval_shape(
+        lambda: init_decode_state(spec, cfg, batch, max_seq))
+
+
+def decode_fn(spec: ArchSpec):
+    if spec.kind == "transformer":
+        return transformer.decode_step
+    if spec.kind == "xlstm":
+        return xlstm.decode_step
+    if spec.kind == "ssm":
+        return ssm.decode_step
+    raise ValueError(f"{spec.kind} has no decode path")
+
+
+def prefill_fn(spec: ArchSpec):
+    """(params, batch, cfg, state, rules) -> (feats_or_logits, state)."""
+    if spec.kind == "transformer":
+        def f(params, batch, cfg, cache, rules=None):
+            memory = None
+            if getattr(cfg, "is_encoder_decoder", False):
+                memory = transformer.encode(params, batch["frames"], cfg,
+                                            rules=rules)
+            inputs = (batch["embeds"] if getattr(cfg, "embeds_in", False)
+                      else batch["tokens"])
+            return transformer.prefill(params, inputs, cfg, cache,
+                                       rules=rules, memory=memory)
+        return f
+    if spec.kind == "xlstm":
+        def f(params, batch, cfg, state, rules=None):
+            return xlstm.forward(params, batch["tokens"], cfg,
+                                 rules=rules), state
+        return f
+    if spec.kind == "ssm":
+        def f(params, batch, cfg, state, rules=None):
+            return ssm.forward(params, batch["tokens"], cfg,
+                               rules=rules), state
+        return f
+    raise ValueError(f"{spec.kind} has no prefill path")
+
+
+def prefill_batch_specs(spec: ArchSpec, cfg, shape: ShapeSpec):
+    d = train_batch_specs(spec, cfg, shape)
+    d.pop("labels", None)
+    d.pop("tags", None)
+    d.pop("tgt_out", None)
+    return d
+
+
+def decode_token_specs(spec: ArchSpec, cfg, shape: ShapeSpec):
+    B = shape.global_batch
+    if spec.kind == "transformer" and getattr(cfg, "embeds_in", False):
+        return _sds((B, 1, cfg.d_model), cfg.compute_dtype)
+    return _sds((B, 1), I32)
+
+
+def decode_state_axes(spec: ArchSpec, cfg):
+    """Logical axes for every decode-state leaf (mirror of its structure)."""
+    if spec.kind == "transformer":
+        kv = ("layer", "batch", "kv_seq", "kv_heads", "head_dim")
+        ax = {"k": kv, "v": kv}
+        if getattr(cfg, "is_encoder_decoder", False):
+            ax["xk"] = kv
+            ax["xv"] = kv
+        return ax
+    if spec.kind == "xlstm":
+        ax = {
+            "m_C": ("layer", "batch", "heads", "state_k", "state_v"),
+            "m_n": ("layer", "batch", "heads", "state_k"),
+            "m_m": ("layer", "batch", "heads"),
+            "m_conv": ("layer", "batch", "conv", "mlp"),
+        }
+        if cfg.layer_kinds.count("s"):
+            ax.update({
+                "s_h": ("layer", "batch", "heads", "head_dim"),
+                "s_c": ("layer", "batch", "heads", "head_dim"),
+                "s_n": ("layer", "batch", "heads", "head_dim"),
+                "s_m": ("layer", "batch", "heads", "head_dim"),
+            })
+        return ax
+    if spec.kind == "ssm":
+        ax = {
+            "ssm": ("layer", "batch", "heads", "head_dim", "state"),
+            "conv": ("layer", "batch", "conv", "mlp"),
+        }
+        if cfg.shared_attn:
+            kv = ("layer", "batch", "kv_seq", "kv_heads", "head_dim")
+            ax["attn_k"] = kv
+            ax["attn_v"] = kv
+        return ax
+    raise ValueError(spec.kind)

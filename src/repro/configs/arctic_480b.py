@@ -1,0 +1,41 @@
+"""arctic-480b [moe]: 35L d_model=7168 56H (GQA kv=8) d_ff=4864 vocab=32000,
+MoE 128e top-2 + dense residual [hf:Snowflake/snowflake-arctic-base]."""
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec, FULL_ATTN_SKIP
+from repro.core.sdrop import DropoutSpec
+from repro.models.transformer import MoEConfig, TransformerConfig
+
+
+def full(**kw):
+    d = dict(
+        name="arctic-480b", num_layers=35, d_model=7168, n_heads=56,
+        n_kv_heads=8, head_dim=128, d_ff=4864, vocab=32000,
+        moe=MoEConfig(num_experts=128, top_k=2, dense_ff=4864),
+        mlp="swiglu", max_seq=1 << 20,
+        param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
+        kv_repeat=1,   # 56 q / 8 kv = 7 groups: only 1 or 7 divide; 7 would
+        q_chunk=1024, kv_chunk=1024,   # 7x the cache — keep GQA, flat-shard
+
+        nr_drop=DropoutSpec(rate=0.25, block_size=128),
+    )
+    d.update(kw)
+    return TransformerConfig(**d)
+
+
+def smoke(**kw):
+    d = dict(
+        name="arctic-smoke", num_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=96, vocab=128,
+        moe=MoEConfig(num_experts=8, top_k=2, dense_ff=96),
+        q_chunk=8, kv_chunk=8, max_seq=64,
+        nr_drop=DropoutSpec(rate=0.25, block_size=8),
+    )
+    d.update(kw)
+    return TransformerConfig(**d)
+
+
+SPEC = ArchSpec(
+    name="arctic-480b", family="moe", kind="transformer", full=full,
+    smoke=smoke, skip_shapes={"long_500k": FULL_ATTN_SKIP},
+    notes="dense-residual MoE; largest param count in the pool")

@@ -1,0 +1,32 @@
+"""ArchSpec: uniform handle over every selectable architecture.
+
+Each ``src/repro/configs/<id>.py`` defines SPEC — a factory pair
+(full / smoke) plus family metadata and per-shape applicability. The launch
+layer (train/serve/dryrun) and the smoke tests consume only this interface.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+from repro.configs.shapes import SHAPES, ShapeSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    name: str
+    family: str                  # dense | moe | ssm | hybrid | vlm | audio | rnn
+    kind: str                    # transformer | xlstm | ssm | lstm_lm | nmt | tagger
+    full: Callable[..., object]  # full-size config factory (kw overrides ok)
+    smoke: Callable[..., object]  # reduced CPU-runnable config factory
+    # Shapes this arch skips entirely, with the reason (DESIGN §Arch-applic.)
+    skip_shapes: dict = dataclasses.field(default_factory=dict)
+    notes: str = ""
+
+    def applicable(self, shape_name: str) -> Optional[str]:
+        """None if runnable; else the documented skip reason."""
+        return self.skip_shapes.get(shape_name)
+
+
+FULL_ATTN_SKIP = ("full quadratic attention; 500k dense-KV decode is out of "
+                  "scope for pure full-attention archs (DESIGN §Arch-applicability)")

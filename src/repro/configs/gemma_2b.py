@@ -1,0 +1,38 @@
+"""gemma-2b [dense]: 18L d_model=2048 8H (MQA kv=1) d_ff=16384 vocab=256000 —
+GeGLU, head_dim=256, scaled embeddings [arXiv:2403.08295]."""
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec, FULL_ATTN_SKIP
+from repro.core.sdrop import DropoutSpec
+from repro.models.transformer import TransformerConfig
+
+
+def full(**kw):
+    d = dict(
+        name="gemma-2b", num_layers=18, d_model=2048, n_heads=8,
+        n_kv_heads=1, head_dim=256, d_ff=16384, vocab=256000,
+        mlp="geglu", scale_embed=True, tie_embeddings=True, max_seq=1 << 20,
+        param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
+        kv_repeat=8,                  # MQA -> one kv copy per pair of shards
+        q_chunk=1024, kv_chunk=1024,
+        nr_drop=DropoutSpec(rate=0.25, block_size=128),
+    )
+    d.update(kw)
+    return TransformerConfig(**d)
+
+
+def smoke(**kw):
+    d = dict(
+        name="gemma-smoke", num_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=1, head_dim=16, d_ff=128, vocab=128, mlp="geglu",
+        scale_embed=True, tie_embeddings=True, kv_repeat=4,
+        q_chunk=8, kv_chunk=8, max_seq=64,
+        nr_drop=DropoutSpec(rate=0.25, block_size=8),
+    )
+    d.update(kw)
+    return TransformerConfig(**d)
+
+
+SPEC = ArchSpec(
+    name="gemma-2b", family="dense", kind="transformer", full=full,
+    smoke=smoke, skip_shapes={"long_500k": FULL_ATTN_SKIP})

@@ -1,0 +1,36 @@
+"""minitron-8b [dense]: 32L d_model=4096 32H (GQA kv=8) d_ff=16384
+vocab=256000 — pruned nemotron, squared-ReLU MLP [arXiv:2407.14679]."""
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec, FULL_ATTN_SKIP
+from repro.core.sdrop import DropoutSpec
+from repro.models.transformer import TransformerConfig
+
+
+def full(**kw):
+    d = dict(
+        name="minitron-8b", num_layers=32, d_model=4096, n_heads=32,
+        n_kv_heads=8, head_dim=128, d_ff=16384, vocab=256000,
+        mlp="relu2", max_seq=1 << 20,
+        param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
+        kv_repeat=2, q_chunk=1024, kv_chunk=1024,
+        nr_drop=DropoutSpec(rate=0.25, block_size=128),
+    )
+    d.update(kw)
+    return TransformerConfig(**d)
+
+
+def smoke(**kw):
+    d = dict(
+        name="minitron-smoke", num_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab=128, mlp="relu2",
+        q_chunk=8, kv_chunk=8, max_seq=64,
+        nr_drop=DropoutSpec(rate=0.25, block_size=8),
+    )
+    d.update(kw)
+    return TransformerConfig(**d)
+
+
+SPEC = ArchSpec(
+    name="minitron-8b", family="dense", kind="transformer", full=full,
+    smoke=smoke, skip_shapes={"long_500k": FULL_ATTN_SKIP})

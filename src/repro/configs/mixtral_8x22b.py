@@ -1,0 +1,40 @@
+"""mixtral-8x22b [moe]: 56L d_model=6144 48H (GQA kv=8) d_ff=16384
+vocab=32768, MoE 8e top-2, SWA [arXiv:2401.04088]."""
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec
+from repro.core.sdrop import DropoutSpec
+from repro.models.transformer import MoEConfig, TransformerConfig
+
+
+def full(**kw):
+    d = dict(
+        name="mixtral-8x22b", num_layers=56, d_model=6144, n_heads=48,
+        n_kv_heads=8, head_dim=128, d_ff=16384, vocab=32768,
+        moe=MoEConfig(num_experts=8, top_k=2), window=4096,
+        mlp="swiglu", rope_theta=1e6, max_seq=1 << 20,
+        param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
+        kv_repeat=2,                    # 8 kv heads -> 16 for TP=16
+        q_chunk=1024, kv_chunk=1024,
+        nr_drop=DropoutSpec(rate=0.25, block_size=128),
+    )
+    d.update(kw)
+    return TransformerConfig(**d)
+
+
+def smoke(**kw):
+    d = dict(
+        name="mixtral-smoke", num_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab=128,
+        moe=MoEConfig(num_experts=4, top_k=2), window=8,
+        q_chunk=8, kv_chunk=8, max_seq=64,
+        nr_drop=DropoutSpec(rate=0.25, block_size=8),
+    )
+    d.update(kw)
+    return TransformerConfig(**d)
+
+
+SPEC = ArchSpec(
+    name="mixtral-8x22b", family="moe", kind="transformer", full=full,
+    smoke=smoke,
+    notes="SWA bounds the 500k decode window to 4096 -> long_500k runs")

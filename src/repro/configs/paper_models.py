@@ -1,0 +1,65 @@
+"""The paper's own benchmark configs, selectable via --arch like any arch."""
+from repro.configs.base import ArchSpec
+from repro.core.sdrop import DropoutSpec
+from repro.models import lstm_lm, seq2seq, tagger
+from repro.models.lstm_lm import LMDropouts
+
+_LM_SKIPS = {
+    "prefill_32k": "word-level LSTM LM; paper shapes are (batch 20, unroll 35)",
+    "decode_32k": "see prefill_32k",
+    "long_500k": "see prefill_32k",
+}
+
+
+def _st(rate, bs=1):
+    return DropoutSpec(rate=rate, block_size=bs)
+
+
+ZAREMBA_MEDIUM = ArchSpec(
+    name="zaremba-medium", family="rnn", kind="lstm_lm",
+    full=lambda **kw: lstm_lm.zaremba_medium(
+        drops=LMDropouts(inp=_st(0.5), nr=_st(0.5), rh=_st(0.5),
+                         out=_st(0.5)), **kw),
+    smoke=lambda **kw: lstm_lm.zaremba_medium(
+        vocab=128, embed=64, hidden=64,
+        drops=LMDropouts(inp=_st(0.5), nr=_st(0.5, 8), rh=_st(0.5, 8),
+                         out=_st(0.5)), **kw),
+    skip_shapes=_LM_SKIPS)
+
+ZAREMBA_LARGE = ArchSpec(
+    name="zaremba-large", family="rnn", kind="lstm_lm",
+    full=lambda **kw: lstm_lm.zaremba_large(
+        drops=LMDropouts(inp=_st(0.65), nr=_st(0.65), rh=_st(0.65),
+                         out=_st(0.65)), **kw),
+    smoke=lambda **kw: lstm_lm.zaremba_large(
+        vocab=128, embed=64, hidden=64,
+        drops=LMDropouts(inp=_st(0.65), nr=_st(0.65, 8), rh=_st(0.65, 8),
+                         out=_st(0.65)), **kw),
+    skip_shapes=_LM_SKIPS)
+
+AWD_LSTM = ArchSpec(
+    name="awd-lstm", family="rnn", kind="lstm_lm",
+    full=lambda **kw: lstm_lm.awd_lstm(**kw),
+    smoke=lambda **kw: lstm_lm.awd_lstm(vocab=128, embed=32, hidden=48, **kw),
+    skip_shapes=_LM_SKIPS)
+
+LUONG_NMT = ArchSpec(
+    name="luong-nmt", family="rnn", kind="nmt",
+    full=lambda **kw: seq2seq.NMTConfig(
+        nr=_st(0.3), rh=_st(0.3), out=_st(0.3), **kw),
+    smoke=lambda **kw: seq2seq.NMTConfig(
+        src_vocab=96, tgt_vocab=96, embed=32, hidden=32,
+        nr=_st(0.3, 8), rh=_st(0.3, 8), out=_st(0.3, 8), **kw),
+    skip_shapes=_LM_SKIPS)
+
+BILSTM_NER = ArchSpec(
+    name="bilstm-ner", family="rnn", kind="tagger",
+    full=lambda **kw: tagger.TaggerConfig(
+        inp=_st(0.5), rh=_st(0.5), **kw),
+    smoke=lambda **kw: tagger.TaggerConfig(
+        vocab=96, char_vocab=30, hidden=32, num_tags=9,
+        word_embed=34, char_filters=30,    # 64-dim concat: 8-block divisible
+        inp=_st(0.5, 8), rh=_st(0.5, 8), **kw),
+    skip_shapes=_LM_SKIPS)
+
+PAPER_SPECS = [ZAREMBA_MEDIUM, ZAREMBA_LARGE, AWD_LSTM, LUONG_NMT, BILSTM_NER]

@@ -1,0 +1,39 @@
+"""pixtral-12b [vlm]: 40L d_model=5120 32H (GQA kv=8) d_ff=14336
+vocab=131072 — pixtral-ViT frontend (STUB: input_specs provides patch
+embeddings) + mistral-nemo backbone [hf:mistralai/Pixtral-12B-2409]."""
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec, FULL_ATTN_SKIP
+from repro.core.sdrop import DropoutSpec
+from repro.models.transformer import TransformerConfig
+
+
+def full(**kw):
+    d = dict(
+        name="pixtral-12b", num_layers=40, d_model=5120, n_heads=32,
+        n_kv_heads=8, head_dim=128, d_ff=14336, vocab=131072,
+        embeds_in=True, mlp="swiglu", rope_theta=1e6, max_seq=1 << 20,
+        param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
+        kv_repeat=2, q_chunk=1024, kv_chunk=1024,
+        nr_drop=DropoutSpec(rate=0.25, block_size=128),
+    )
+    d.update(kw)
+    return TransformerConfig(**d)
+
+
+def smoke(**kw):
+    d = dict(
+        name="pixtral-smoke", num_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab=128, embeds_in=True,
+        q_chunk=8, kv_chunk=8, max_seq=64,
+        nr_drop=DropoutSpec(rate=0.25, block_size=8),
+    )
+    d.update(kw)
+    return TransformerConfig(**d)
+
+
+SPEC = ArchSpec(
+    name="pixtral-12b", family="vlm", kind="transformer", full=full,
+    smoke=smoke, skip_shapes={"long_500k": FULL_ATTN_SKIP},
+    notes="ViT patch frontend is a stub per assignment; backbone sees "
+          "precomputed (B,S,D) patch/token embeddings")

@@ -1,0 +1,38 @@
+"""qwen1.5-32b [dense]: 64L d_model=5120 40H (MHA kv=40) d_ff=27392
+vocab=152064 — QKV bias [hf:Qwen/Qwen1.5 family]."""
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec, FULL_ATTN_SKIP
+from repro.core.sdrop import DropoutSpec
+from repro.models.transformer import TransformerConfig
+
+
+def full(**kw):
+    d = dict(
+        name="qwen1.5-32b", num_layers=64, d_model=5120, n_heads=40,
+        n_kv_heads=40, head_dim=128, d_ff=27392, vocab=152064,
+        qkv_bias=True, mlp="swiglu", max_seq=1 << 20,
+        param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
+        q_chunk=1024, kv_chunk=1024,
+        nr_drop=DropoutSpec(rate=0.25, block_size=128),
+    )
+    d.update(kw)
+    return TransformerConfig(**d)
+
+
+def smoke(**kw):
+    d = dict(
+        name="qwen1.5-smoke", num_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=4, d_ff=160, vocab=128, qkv_bias=True,
+        q_chunk=8, kv_chunk=8, max_seq=64,
+        nr_drop=DropoutSpec(rate=0.25, block_size=8),
+    )
+    d.update(kw)
+    return TransformerConfig(**d)
+
+
+SPEC = ArchSpec(
+    name="qwen1.5-32b", family="dense", kind="transformer", full=full,
+    smoke=smoke, skip_shapes={"long_500k": FULL_ATTN_SKIP},
+    notes="40 heads not divisible by TP=16 -> attention falls back to "
+          "replicated head compute (divisibility guard); hillclimb target")

@@ -1,0 +1,42 @@
+"""whisper-base [audio]: 6L enc + 6L dec, d_model=512 8H d_ff=2048
+vocab=51865 — enc-dec, conv frontend STUB (input_specs provides precomputed
+frame embeddings) [arXiv:2212.04356]."""
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec, FULL_ATTN_SKIP
+from repro.core.sdrop import DropoutSpec
+from repro.models.transformer import TransformerConfig
+
+
+def full(**kw):
+    d = dict(
+        name="whisper-base", num_layers=6, enc_layers=6, d_model=512,
+        n_heads=8, n_kv_heads=8, d_ff=2048, vocab=51865,
+        is_encoder_decoder=True, enc_seq=1500, norm="layernorm",
+        pos="sinusoidal", mlp="gelu_mlp", max_seq=1 << 20,
+        param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
+        kv_repeat=1,                   # MHA (8 q = 8 kv): no headroom to
+        q_chunk=1024, kv_chunk=1024,   # repeat; heads fall back to flat shard
+        nr_drop=DropoutSpec(rate=0.25, block_size=64),
+    )
+    d.update(kw)
+    return TransformerConfig(**d)
+
+
+def smoke(**kw):
+    d = dict(
+        name="whisper-smoke", num_layers=2, enc_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=4, d_ff=128, vocab=128,
+        is_encoder_decoder=True, enc_seq=12, norm="layernorm",
+        pos="sinusoidal", mlp="gelu_mlp", q_chunk=8, kv_chunk=8, max_seq=64,
+        nr_drop=DropoutSpec(rate=0.25, block_size=8),
+    )
+    d.update(kw)
+    return TransformerConfig(**d)
+
+
+SPEC = ArchSpec(
+    name="whisper-base", family="audio", kind="transformer", full=full,
+    smoke=smoke, skip_shapes={"long_500k": FULL_ATTN_SKIP},
+    notes="conv audio frontend is a stub per assignment; decoder shapes use "
+          "self-KV cache + precomputed cross-KV over 1500 encoder frames")

@@ -1,0 +1,36 @@
+"""xlstm-1.3b [ssm]: 48L d_model=2048 4H vocab=50304 — sLSTM + mLSTM blocks
+[arXiv:2405.04517]. The arch closest to the paper: sLSTM blocks carry a true
+h->h recurrence, so NR+RH+ST structured dropout applies natively."""
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec
+from repro.core.sdrop import DropoutSpec
+from repro.models.xlstm import XLSTMConfig
+
+
+def full(**kw):
+    d = dict(
+        name="xlstm-1.3b", num_layers=48, d_model=2048, n_heads=4,
+        vocab=50304, proj_factor=2.0, slstm_every=8, conv_kernel=4,
+        chunk=256, param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
+        nr_drop=DropoutSpec(rate=0.25, block_size=128),
+        rh_drop=DropoutSpec(rate=0.25, block_size=64),
+    )
+    d.update(kw)
+    return XLSTMConfig(**d)
+
+
+def smoke(**kw):
+    d = dict(
+        name="xlstm-smoke", num_layers=8, d_model=64, n_heads=4, vocab=128,
+        proj_factor=2.0, slstm_every=4, chunk=8,
+        nr_drop=DropoutSpec(rate=0.25, block_size=8),
+        rh_drop=DropoutSpec(rate=0.5, block_size=1),
+    )
+    d.update(kw)
+    return XLSTMConfig(**d)
+
+
+SPEC = ArchSpec(
+    name="xlstm-1.3b", family="ssm", kind="xlstm", full=full, smoke=smoke,
+    notes="paper-native RH recurrence (sLSTM); long_500k runs on recurrent state")

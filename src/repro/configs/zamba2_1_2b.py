@@ -1,0 +1,38 @@
+"""zamba2-1.2b [hybrid]: 38L d_model=2048 (attn 32H kv=32) d_ff=8192
+ssm_state=64 — Mamba2 backbone + weight-shared attention block
+[arXiv:2411.15242]."""
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec
+from repro.core.sdrop import DropoutSpec
+from repro.models.ssm import Mamba2Config
+
+
+def full(**kw):
+    d = dict(
+        name="zamba2-1.2b", num_layers=38, d_model=2048, ssm_state=64,
+        n_heads=64, expand=2, conv_kernel=4, chunk=256, vocab=32000,
+        shared_attn=True, shared_every=6, attn_heads=32, attn_kv_heads=32,
+        attn_ff=8192,
+        param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
+        nr_drop=DropoutSpec(rate=0.25, block_size=128),
+    )
+    d.update(kw)
+    return Mamba2Config(**d)
+
+
+def smoke(**kw):
+    d = dict(
+        name="zamba2-smoke", num_layers=8, d_model=64, ssm_state=8,
+        n_heads=4, chunk=8, vocab=128, shared_attn=True, shared_every=3,
+        attn_heads=4, attn_kv_heads=4, attn_ff=128,
+        nr_drop=DropoutSpec(rate=0.25, block_size=8),
+    )
+    d.update(kw)
+    return Mamba2Config(**d)
+
+
+SPEC = ArchSpec(
+    name="zamba2-1.2b", family="hybrid", kind="ssm", full=full, smoke=smoke,
+    notes="RH inapplicable to the linear SSD recurrence (no h->h weight); "
+          "NR structured dropout on block inputs; long_500k runs on SSM state")

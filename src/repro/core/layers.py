@@ -1,0 +1,98 @@
+"""Parameterized layers (pure-JAX pytree params, no framework dependency).
+
+Every layer is an ``init_*`` returning a param dict and a functional ``apply``.
+``dense_sdrop`` is the workhorse: a linear layer whose input is consumed
+through structured dropout (sparse_matmul.sdrop_matmul), i.e. the paper's
+"plug-in replacement" for ``dropout(x) @ W``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sparse_matmul as sm
+from repro.core.sdrop import DropoutState
+
+
+def uniform_init(key, shape, scale, dtype=jnp.float32):
+    return jax.random.uniform(key, shape, dtype, minval=-scale, maxval=scale)
+
+
+def normal_init(key, shape, stddev, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype) * stddev
+
+
+def init_dense(key, in_dim, out_dim, *, bias=True, scale=None, dtype=jnp.float32):
+    if scale is None:
+        scale = in_dim ** -0.5
+    p = {"w": uniform_init(key, (in_dim, out_dim), scale, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((out_dim,), dtype)
+    return p
+
+
+def dense(params, x):
+    y = jax.lax.dot_general(x, params["w"],
+                            (((x.ndim - 1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32).astype(x.dtype)
+    if "b" in params:
+        y = y + params["b"]
+    return y
+
+
+def dense_sdrop(params, x, drop: Optional[DropoutState], *, x_is_compact=False):
+    """Linear consuming x through (structured) dropout.
+
+    Structured state -> compacted matmul (FP/BP/WG sparsity reclaimed).
+    Random state     -> mask-multiply then dense matmul (baseline).
+    None/inactive    -> dense matmul.
+    """
+    b = params.get("b")
+    if drop is None or not drop.spec.active or drop.inactive:
+        y = jax.lax.dot_general(x, params["w"],
+                                (((x.ndim - 1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32).astype(x.dtype)
+        return y + b if b is not None else y
+    if drop.structured:
+        return sm.sdrop_matmul(x, params["w"], drop.keep_blocks,
+                               rate=drop.spec.rate,
+                               block_size=drop.spec.block_size,
+                               x_is_compact=x_is_compact,
+                               impl=drop.spec.impl,
+                               bias=b, scale=drop.scale)
+    xm = drop.apply(x)
+    y = jax.lax.dot_general(xm, params["w"],
+                            (((x.ndim - 1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32).astype(x.dtype)
+    return y + b if b is not None else y
+
+
+def init_embedding(key, vocab, dim, *, scale=0.1, dtype=jnp.float32):
+    return {"emb": uniform_init(key, (vocab, dim), scale, dtype)}
+
+
+def embed(params, ids):
+    return jnp.take(params["emb"], ids, axis=0)
+
+
+def init_layernorm(dim, dtype=jnp.float32):
+    return {"g": jnp.ones((dim,), dtype), "b": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(params, x, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return y * params["g"] + params["b"]
+
+
+def init_rmsnorm(dim, dtype=jnp.float32):
+    return {"g": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params, x, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * params["g"]).astype(x.dtype)

@@ -1,0 +1,119 @@
+"""LSTM cell and stack with the paper's structured dropout (NR and RH).
+
+The cell follows Eqs. (1)-(6): fused gate matmuls ``x@W + h@U + b`` with
+W:(D,4H), U:(H,4H), gate order (i, f, g, o), then
+``c' = sigmoid(f)*c + sigmoid(i)*tanh(g)``, ``h' = sigmoid(o)*tanh(c')``.
+
+Dropout application points (Case-III: structured in batch, re-sampled per
+time step):
+  * NR — the non-recurrent input x_t entering W  (Zaremba'14 placement);
+  * RH — the recurrent hidden h_{t-1} entering U (the paper's extension).
+The cell state c is never dropped (paper §3.2). Both matmuls are
+``sdrop_matmul`` calls, so FP/BP/WG all run compacted.
+
+Time iteration is ``jax.lax.scan`` (compact HLO, O(1) program size in T).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import layers as L
+from repro.core import sdrop
+from repro.core.sdrop import DropoutSpec
+
+
+class LSTMState(NamedTuple):
+    h: jax.Array   # (num_layers, B, H)
+    c: jax.Array   # (num_layers, B, H)
+
+
+def init_lstm_params(key, in_dim: int, hidden: int, num_layers: int,
+                     *, init_scale: float = 0.05, dtype=jnp.float32):
+    """Per-layer {W, U, b}; layer 0 consumes in_dim, the rest consume hidden."""
+    params = []
+    for l in range(num_layers):
+        k1, k2, key = jax.random.split(key, 3)
+        d = in_dim if l == 0 else hidden
+        params.append({
+            "W": L.uniform_init(k1, (d, 4 * hidden), init_scale, dtype),
+            "U": L.uniform_init(k2, (hidden, 4 * hidden), init_scale, dtype),
+            "b": jnp.zeros((4 * hidden,), dtype),
+        })
+    return params
+
+
+def zero_state(num_layers: int, batch: int, hidden: int, dtype=jnp.float32) -> LSTMState:
+    z = jnp.zeros((num_layers, batch, hidden), dtype)
+    return LSTMState(h=z, c=z)
+
+
+def lstm_pointwise(gates: jax.Array, c_prev: jax.Array, *,
+                   forget_bias: float = 0.0, impl: str = "xla"):
+    """Gate nonlinearities + state update. Pallas-fusable hot spot."""
+    if impl == "pallas":
+        from repro.kernels import ops as _kops
+        return _kops.lstm_pointwise(gates, c_prev, forget_bias=forget_bias)
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    c = jax.nn.sigmoid(f + forget_bias) * c_prev + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h = jax.nn.sigmoid(o) * jnp.tanh(c)
+    return h, c
+
+
+def lstm_cell(params, x, h_prev, c_prev, nr_drop, rh_drop, *,
+              forget_bias: float = 0.0, pointwise_impl: str = "xla"):
+    """One LSTM step. nr_drop / rh_drop are DropoutStates (or None)."""
+    gx = L.dense_sdrop({"w": params["W"]}, x, nr_drop)
+    gh = L.dense_sdrop({"w": params["U"]}, h_prev, rh_drop)
+    gates = gx + gh + params["b"]
+    return lstm_pointwise(gates, c_prev, forget_bias=forget_bias,
+                          impl=pointwise_impl)
+
+
+def lstm_stack(params, x_seq: jax.Array, state: LSTMState, *,
+               nr_spec: DropoutSpec, rh_spec: DropoutSpec,
+               key: Optional[jax.Array] = None,
+               deterministic: bool = False,
+               forget_bias: float = 0.0,
+               pointwise_impl: str = "xla"):
+    """Run a multi-layer LSTM over a (T, B, D) sequence.
+
+    Returns (outputs (T, B, H), final LSTMState). Dropout keys are derived per
+    (layer, direction, t): PER_STEP specs fold the time index in (Case-III),
+    FIXED specs reuse the layer key (Case-II/IV).
+    """
+    num_layers = len(params)
+    hidden = state.h.shape[-1]
+    batch = x_seq.shape[1]
+    if key is None:
+        key = jax.random.PRNGKey(0)
+        deterministic = True
+
+    layer_keys = jax.random.split(key, num_layers * 2).reshape(num_layers, 2, -1)
+
+    def step(carry, xt_t):
+        hs, cs = carry
+        xt, t = xt_t
+        new_h, new_c = [], []
+        inp = xt
+        for l in range(num_layers):
+            k_nr = sdrop.step_key(layer_keys[l, 0], nr_spec, t)
+            k_rh = sdrop.step_key(layer_keys[l, 1], rh_spec, t)
+            nr = sdrop.make_state(k_nr, nr_spec, batch, inp.shape[-1],
+                                  deterministic=deterministic)
+            rh = sdrop.make_state(k_rh, rh_spec, batch, hidden,
+                                  deterministic=deterministic)
+            h, c = lstm_cell(params[l], inp, hs[l], cs[l], nr, rh,
+                             forget_bias=forget_bias,
+                             pointwise_impl=pointwise_impl)
+            new_h.append(h)
+            new_c.append(c)
+            inp = h
+        return (jnp.stack(new_h), jnp.stack(new_c)), inp
+
+    T = x_seq.shape[0]
+    (h_fin, c_fin), ys = jax.lax.scan(
+        step, (state.h, state.c), (x_seq, jnp.arange(T)))
+    return ys, LSTMState(h=h_fin, c=c_fin)

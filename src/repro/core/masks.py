@@ -1,0 +1,141 @@
+"""Dropout mask taxonomy from the paper (Fig. 1).
+
+Two axes:
+  * within-batch: RANDOM (each sample drops its own units) vs STRUCTURED
+    (every sample in the batch drops the same physical units -> column sparsity)
+  * across-time: PER_STEP (new mask each time step) vs FIXED (same mask all steps)
+
+  Case-I   = RANDOM     x PER_STEP   (Zaremba et al. 2014)
+  Case-II  = RANDOM     x FIXED      (Gal & Ghahramani 2016, AWD-LSTM)
+  Case-III = STRUCTURED x PER_STEP   (this paper - the technique we accelerate)
+  Case-IV  = STRUCTURED x FIXED      (most restricted; supported for completeness)
+
+Structured masks are generated as *exact-k* block subsets so that compacted
+matmul shapes are static under jit: the hidden dimension H is split into
+``H // block_size`` blocks and exactly ``ceil(p * nblocks)`` blocks are dropped
+(sampled uniformly without replacement). ``block_size=1`` is the paper-faithful
+column-granular variant; ``block_size=128`` aligns compaction with TPU lanes.
+
+All helpers are functional and jit-friendly: they take a PRNG key and static
+shape/rate arguments, and return either dense masks or kept-block index vectors.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class BatchPattern(enum.Enum):
+    RANDOM = "random"          # per-sample mask (no structured sparsity)
+    STRUCTURED = "structured"  # same units dropped across the whole batch
+
+
+class TimePattern(enum.Enum):
+    PER_STEP = "per_step"      # re-sampled at every time step / layer application
+    FIXED = "fixed"            # sampled once, reused across time steps
+
+
+# The paper's four cases, as (batch, time) pairs.
+CASE_I = (BatchPattern.RANDOM, TimePattern.PER_STEP)
+CASE_II = (BatchPattern.RANDOM, TimePattern.FIXED)
+CASE_III = (BatchPattern.STRUCTURED, TimePattern.PER_STEP)
+CASE_IV = (BatchPattern.STRUCTURED, TimePattern.FIXED)
+
+CASES = {
+    "case1": CASE_I,
+    "case2": CASE_II,
+    "case3": CASE_III,
+    "case4": CASE_IV,
+}
+
+
+def num_blocks(hidden: int, block_size: int) -> int:
+    if hidden % block_size != 0:
+        raise ValueError(f"hidden={hidden} not divisible by block_size={block_size}")
+    return hidden // block_size
+
+
+def num_dropped_blocks(hidden: int, rate: float, block_size: int) -> int:
+    """Exactly-dropped block count. ceil so realized rate >= requested rate."""
+    nb = num_blocks(hidden, block_size)
+    nd = int(-(-rate * nb // 1))  # ceil
+    return min(max(nd, 0), nb - 1) if rate > 0.0 else 0
+
+
+def num_kept_blocks(hidden: int, rate: float, block_size: int) -> int:
+    return num_blocks(hidden, block_size) - num_dropped_blocks(hidden, rate, block_size)
+
+
+def kept_units(hidden: int, rate: float, block_size: int) -> int:
+    return num_kept_blocks(hidden, rate, block_size) * block_size
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2, 3))
+def sample_keep_blocks(key: jax.Array, hidden: int, rate: float, block_size: int) -> jax.Array:
+    """Sample kept-block ids for a structured mask.
+
+    Returns sorted int32 vector of length ``num_kept_blocks`` (static). Sorted
+    order keeps the gather streaming-friendly (monotone HBM access) and makes
+    the mask canonical for testing.
+    """
+    nb = num_blocks(hidden, block_size)
+    nk = num_kept_blocks(hidden, rate, block_size)
+    perm = jax.random.permutation(key, nb)
+    return jnp.sort(perm[:nk]).astype(jnp.int32)
+
+
+def keep_blocks_to_mask(keep_blocks: jax.Array, hidden: int, block_size: int) -> jax.Array:
+    """Expand kept-block ids into a dense 0/1 mask of shape (hidden,)."""
+    nb = num_blocks(hidden, block_size)
+    blk_mask = jnp.zeros((nb,), jnp.float32).at[keep_blocks].set(1.0)
+    return jnp.repeat(blk_mask, block_size)
+
+
+def keep_blocks_to_unit_ids(keep_blocks: jax.Array, block_size: int) -> jax.Array:
+    """Expand kept-block ids into kept-unit column indices (length k*block_size)."""
+    offs = jnp.arange(block_size, dtype=jnp.int32)
+    return (keep_blocks[:, None] * block_size + offs[None, :]).reshape(-1)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2, 3, 4))
+def structured_mask(key: jax.Array, batch: int, hidden: int, rate: float,
+                    block_size: int = 1) -> jax.Array:
+    """Dense (batch, hidden) structured mask — all rows identical (Case-III/IV)."""
+    m = keep_blocks_to_mask(sample_keep_blocks(key, hidden, rate, block_size),
+                            hidden, block_size)
+    return jnp.broadcast_to(m[None, :], (batch, hidden))
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2, 3))
+def random_mask(key: jax.Array, batch: int, hidden: int, rate: float) -> jax.Array:
+    """Dense (batch, hidden) i.i.d. Bernoulli keep-mask (Case-I/II baselines)."""
+    return jax.random.bernoulli(key, 1.0 - rate, (batch, hidden)).astype(jnp.float32)
+
+
+def time_keys(key: jax.Array, steps: int, time_pattern: TimePattern) -> jax.Array:
+    """Per-time-step PRNG keys; FIXED repeats one key (same mask every step)."""
+    if time_pattern == TimePattern.FIXED:
+        return jnp.broadcast_to(key[None, :], (steps, *key.shape))
+    return jax.random.split(key, steps)
+
+
+def inverted_scale(rate: float, hidden: int, block_size: int = 1) -> float:
+    """Inverted-dropout scale for exact-k structured masks.
+
+    With exact-k the realized keep fraction is kept_units/hidden (may differ from
+    1-rate by rounding); scale by its reciprocal so E[scaled masked x] == x.
+    """
+    if rate <= 0.0:
+        return 1.0
+    return float(hidden) / float(kept_units(hidden, rate, block_size))
+
+
+def apply_mask(x: jax.Array, mask: jax.Array, rate: float, *, scale: float | None = None) -> jax.Array:
+    """Inverted dropout: x * mask * 1/(keep_fraction)."""
+    if scale is None:
+        scale = 1.0 / (1.0 - rate) if rate > 0.0 else 1.0
+    return x * mask.astype(x.dtype) * jnp.asarray(scale, x.dtype)

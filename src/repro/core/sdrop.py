@@ -1,0 +1,105 @@
+"""User-facing structured-dropout API (the paper's plug-in replacement).
+
+A ``DropoutSpec`` selects one of the four cases of the paper's taxonomy plus
+the TPU block granularity. ``DropoutState`` is what a model threads through
+its layers: for structured cases it carries kept-block ids (compute is
+reclaimed via sparse_matmul); for random cases it carries a dense mask
+(baseline — regularization only, no speedup), matching Zaremba'14 / Gal'16.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import masks
+from repro.core.masks import BatchPattern, TimePattern
+
+
+@dataclasses.dataclass(frozen=True)
+class DropoutSpec:
+    rate: float = 0.0
+    batch_pattern: BatchPattern = BatchPattern.STRUCTURED
+    time_pattern: TimePattern = TimePattern.PER_STEP
+    block_size: int = 1
+    impl: str = "xla"                  # "xla" | "pallas"
+
+    @property
+    def structured(self) -> bool:
+        return self.batch_pattern == BatchPattern.STRUCTURED and self.rate > 0.0
+
+    @property
+    def active(self) -> bool:
+        return self.rate > 0.0
+
+    def with_(self, **kw) -> "DropoutSpec":
+        return dataclasses.replace(self, **kw)
+
+    @staticmethod
+    def case(name: str, rate: float, block_size: int = 1, impl: str = "xla") -> "DropoutSpec":
+        bp, tp = masks.CASES[name]
+        return DropoutSpec(rate=rate, batch_pattern=bp, time_pattern=tp,
+                           block_size=block_size, impl=impl)
+
+
+@dataclasses.dataclass
+class DropoutState:
+    """Materialized dropout decision for one application point.
+
+    Exactly one of (keep_blocks) / (dense_mask) is set when active.
+    """
+    spec: DropoutSpec
+    keep_blocks: Optional[jax.Array] = None    # structured: sorted kept block ids
+    dense_mask: Optional[jax.Array] = None     # random: (batch, hidden) 0/1
+    scale: float = 1.0
+    # Optional secondary mask over an inner (e.g. FFN) dimension —
+    # used by the beyond-paper FFN-inner structured dropout.
+    inner_kb: Optional[jax.Array] = None
+    inner_scale: float = 1.0
+
+    @property
+    def structured(self) -> bool:
+        return self.keep_blocks is not None
+
+    @property
+    def inactive(self) -> bool:
+        """True when no mask was materialized (eval mode or rate=0)."""
+        return self.keep_blocks is None and self.dense_mask is None
+
+    def apply(self, x: jax.Array) -> jax.Array:
+        """Mask-multiply (no compute reclamation) — for elementwise consumers."""
+        if not self.spec.active or self.inactive:
+            return x
+        if self.structured:
+            m = masks.keep_blocks_to_mask(self.keep_blocks, x.shape[-1],
+                                          self.spec.block_size)
+            return x * m.astype(x.dtype) * jnp.asarray(self.scale, x.dtype)
+        return x * self.dense_mask.astype(x.dtype) * jnp.asarray(self.scale, x.dtype)
+
+
+def make_state(key: Optional[jax.Array], spec: DropoutSpec, batch: int,
+               hidden: int, *, deterministic: bool = False) -> DropoutState:
+    """Sample a DropoutState for one application (one time step / layer).
+
+    Case-III/IV time behaviour is realized by how the *caller* derives ``key``:
+    PER_STEP callers fold the step index into the key (see ``step_key``);
+    FIXED callers reuse the same key each step, which with our counter-based
+    sampling reproduces the identical mask.
+    """
+    if deterministic or not spec.active or key is None:
+        return DropoutState(spec=spec)
+    if spec.batch_pattern == BatchPattern.STRUCTURED:
+        kb = masks.sample_keep_blocks(key, hidden, spec.rate, spec.block_size)
+        scale = masks.inverted_scale(spec.rate, hidden, spec.block_size)
+        return DropoutState(spec=spec, keep_blocks=kb, scale=scale)
+    dm = masks.random_mask(key, batch, hidden, spec.rate)
+    return DropoutState(spec=spec, dense_mask=dm, scale=1.0 / (1.0 - spec.rate))
+
+
+def step_key(key: jax.Array, spec: DropoutSpec, t) -> jax.Array:
+    """Derive the time-step-t key per the spec's time pattern."""
+    if spec.time_pattern == TimePattern.FIXED:
+        return key
+    return jax.random.fold_in(key, t)

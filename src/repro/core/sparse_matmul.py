@@ -1,0 +1,240 @@
+"""Structured-dropout-aware matmuls (paper §3.2, Fig. 2).
+
+The paper exploits dropout-induced *structured* sparsity in three phases:
+
+  FP  — input  column sparsity:  y  = (x ⊙ m) @ W        → skip dropped rows of W
+  BP  — output column sparsity:  δx = (δy @ Wᵀ) ⊙ m      → compute only kept cols
+  WG  — input  row    sparsity:  δW = (x ⊙ m)ᵀ @ δy      → compute only kept rows
+
+On TPU we realize all three by *compaction*: kept hidden-unit blocks are gathered
+into dense MXU-aligned matmuls with static shapes (exact-k masks, see masks.py).
+``custom_vjp`` wires the three phases together so a single call site —
+``sdrop_matmul(x, w, keep_blocks, ...)`` — is a drop-in replacement for
+``dropout(x) @ w`` whose forward *and* backward run at (1-p) FLOPs.
+
+Two primitives cover every use in the framework:
+
+  * ``sdrop_matmul``       (direction="in"):  dropout on the matmul *input*.
+        Used for the paper's NR / RH directions (LSTM gate matmuls, transformer
+        QKV / FFN-up consuming the dropped residual stream).
+  * ``sdrop_matmul_out``   (direction="out"): dropout on the matmul *output*.
+        Used for FFN-inner structured dropout (beyond-paper extension): the
+        up-projection computes only kept columns, the down-projection consumes
+        the compact activation (``x_is_compact=True``).
+
+``impl``: "xla" (gather + dense dot, works everywhere) or "pallas"
+(kernels/gather_matmul.py — fused block-gather matmul, validated in interpret
+mode on CPU). Residuals are stored *compact* (B×k, not B×H) — an activation-
+memory saving the paper does not claim but which falls out of the approach.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import masks as _masks
+
+
+def _unit_ids(keep_blocks: jax.Array, block_size: int) -> jax.Array:
+    if block_size == 1:
+        return keep_blocks
+    return _masks.keep_blocks_to_unit_ids(keep_blocks, block_size)
+
+
+def _flatten_leading(x):
+    lead = x.shape[:-1]
+    return x.reshape((-1, x.shape[-1])), lead
+
+
+def _matmul(a, b, out_dtype):
+    return jax.lax.dot_general(
+        a, b, (((a.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def _float0_like(x):
+    return np.zeros(x.shape, dtype=jax.dtypes.float0)
+
+
+# ---------------------------------------------------------------------------
+# direction="in": y = scale * (x ⊙ mask) @ w, via compaction.
+# statics: (scale, block_size, x_is_compact, impl)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def _sdrop_matmul_in(scale, block_size, x_is_compact, impl, x, w, keep_blocks):
+    y, _ = _sdrop_matmul_in_fwd(scale, block_size, x_is_compact, impl, x, w, keep_blocks)
+    return y
+
+
+def _sdrop_matmul_in_fwd(scale, block_size, x_is_compact, impl, x, w, keep_blocks):
+    ids = _unit_ids(keep_blocks, block_size)
+    if x_is_compact:
+        x_c = x
+    else:
+        x_c = jnp.take(x, ids, axis=-1)
+    if impl == "pallas":
+        from repro.kernels import ops as _kops
+        x2, lead = _flatten_leading(x_c)
+        y = _kops.gather_matmul(x2, w, keep_blocks, block_size=block_size,
+                                gather="b_rows", a_is_compact=True)
+        y = y.reshape((*lead, w.shape[-1]))
+    else:
+        w_c = jnp.take(w, ids, axis=0)
+        y = _matmul(x_c, w_c, x.dtype)
+    y = y * jnp.asarray(scale, y.dtype)
+    # Residuals are compact: (B, k) activations — (1-p) of dense residency.
+    return y, (x_c, w, keep_blocks, x.shape[-1])
+
+
+def _sdrop_matmul_in_bwd(scale, block_size, x_is_compact, impl, res, dy):
+    x_c, w, keep_blocks, in_dim = res
+    ids = _unit_ids(keep_blocks, block_size)
+    # BP (output sparsity): only the kept columns of δx are ever computed.
+    if impl == "pallas":
+        from repro.kernels import ops as _kops
+        dy2, lead = _flatten_leading(dy)
+        dx_c = _kops.gather_matmul(dy2, w, keep_blocks, block_size=block_size,
+                                   gather="b_rows", a_is_compact=True,
+                                   transpose_b=True)
+        dx_c = dx_c.reshape((*lead, x_c.shape[-1]))
+    else:
+        w_c = jnp.take(w, ids, axis=0)
+        dx_c = _matmul(dy, w_c.T, dy.dtype)
+    dx_c = dx_c * jnp.asarray(scale, dx_c.dtype)
+    if x_is_compact:
+        dx = dx_c
+    else:
+        dx = (jnp.zeros((*dy.shape[:-1], in_dim), dx_c.dtype)
+              .at[..., ids].set(dx_c))
+    # WG (row sparsity): x_c is compact, so δW is a dense (k, N) matmul scattered
+    # into the kept rows; dropped neurons receive no weight gradient.
+    x2, _ = _flatten_leading(x_c)
+    dy2, _ = _flatten_leading(dy)
+    dw_c = jax.lax.dot_general(x2, dy2, (((0,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+    dw_c = (dw_c * scale).astype(w.dtype)
+    dw = jnp.zeros_like(w).at[ids].set(dw_c)
+    return dx, dw, _float0_like(keep_blocks)
+
+
+_sdrop_matmul_in.defvjp(_sdrop_matmul_in_fwd, _sdrop_matmul_in_bwd)
+
+
+# ---------------------------------------------------------------------------
+# direction="out": y_c = scale * (x @ w)[:, kept]  (compact output).
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _sdrop_matmul_out(scale, block_size, impl, x, w, keep_blocks):
+    y, _ = _sdrop_matmul_out_fwd(scale, block_size, impl, x, w, keep_blocks)
+    return y
+
+
+def _sdrop_matmul_out_fwd(scale, block_size, impl, x, w, keep_blocks):
+    ids = _unit_ids(keep_blocks, block_size)
+    if impl == "pallas":
+        from repro.kernels import ops as _kops
+        x2, lead = _flatten_leading(x)
+        y_c = _kops.gather_matmul(x2, w, keep_blocks, block_size=block_size,
+                                  gather="b_cols")
+        y_c = y_c.reshape((*lead, y_c.shape[-1]))
+    else:
+        w_c = jnp.take(w, ids, axis=1)
+        y_c = _matmul(x, w_c, x.dtype)
+    y_c = y_c * jnp.asarray(scale, y_c.dtype)
+    return y_c, (x, w, keep_blocks)
+
+
+def _sdrop_matmul_out_bwd(scale, block_size, impl, res, dy_c):
+    x, w, keep_blocks = res
+    ids = _unit_ids(keep_blocks, block_size)
+    w_c = jnp.take(w, ids, axis=1)                      # (K, k)
+    dx = _matmul(dy_c, w_c.T, x.dtype) * jnp.asarray(scale, x.dtype)
+    x2, _ = _flatten_leading(x)
+    dy2, _ = _flatten_leading(dy_c)
+    dw_c = jax.lax.dot_general(x2, dy2, (((0,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+    dw_c = (dw_c * scale).astype(w.dtype)
+    dw = jnp.zeros_like(w).at[:, ids].set(dw_c)
+    return dx, dw, _float0_like(keep_blocks)
+
+
+_sdrop_matmul_out.defvjp(_sdrop_matmul_out_fwd, _sdrop_matmul_out_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+def sdrop_matmul(x: jax.Array, w: jax.Array,
+                 keep_blocks: Optional[jax.Array],
+                 *,
+                 rate: float,
+                 block_size: int = 1,
+                 x_is_compact: bool = False,
+                 impl: str = "xla",
+                 bias: Optional[jax.Array] = None,
+                 scale: Optional[float] = None) -> jax.Array:
+    """``dropout(x) @ w (+ bias)`` with structured-sparsity compute reclamation.
+
+    ``keep_blocks`` — sorted kept-block ids from masks.sample_keep_blocks.
+    ``keep_blocks=None`` or ``rate=0`` falls back to a dense matmul (eval mode).
+    ``x_is_compact`` — x is already compact over kept units (e.g. FFN-down
+    consuming a compact FFN-inner activation).
+    """
+    if keep_blocks is None or rate <= 0.0:
+        y = _matmul(x, w, x.dtype)
+    else:
+        if scale is None:
+            scale = _masks.inverted_scale(rate, w.shape[0], block_size)
+        y = _sdrop_matmul_in(float(scale), int(block_size), bool(x_is_compact),
+                             impl, x, w, keep_blocks)
+    if bias is not None:
+        y = y + bias
+    return y
+
+
+def sdrop_matmul_out(x: jax.Array, w: jax.Array,
+                     keep_blocks: Optional[jax.Array],
+                     *,
+                     rate: float,
+                     block_size: int = 1,
+                     impl: str = "xla",
+                     bias: Optional[jax.Array] = None,
+                     scale: float = 1.0) -> jax.Array:
+    """Compute only the kept output columns of ``x @ w`` (compact result).
+
+    The dropout scale is usually deferred to the consuming ``sdrop_matmul``
+    (scale=1 here) so that elementwise nonlinearities between up/down
+    projections see un-rescaled activations, exactly matching
+    ``dropout(act(x @ w))`` semantics.
+    """
+    if keep_blocks is None or rate <= 0.0:
+        y = _matmul(x, w, x.dtype)
+        if bias is not None:
+            y = y + bias
+        return y
+    y = _sdrop_matmul_out(float(scale), int(block_size), impl, x, w, keep_blocks)
+    if bias is not None:
+        ids = _unit_ids(keep_blocks, block_size)
+        y = y + jnp.take(bias, ids, axis=0)
+    return y
+
+
+def scatter_compact(y_c: jax.Array, keep_blocks: jax.Array, full_dim: int,
+                    *, block_size: int = 1) -> jax.Array:
+    """Expand a compact (…, k) tensor back to (…, H) with zeros at dropped units."""
+    ids = _unit_ids(keep_blocks, block_size)
+    return (jnp.zeros((*y_c.shape[:-1], full_dim), y_c.dtype)
+            .at[..., ids].set(y_c))
+
+
+def gather_compact(x: jax.Array, keep_blocks: jax.Array, *, block_size: int = 1) -> jax.Array:
+    """Gather kept units: (…, H) → (…, k)."""
+    return jnp.take(x, _unit_ids(keep_blocks, block_size), axis=-1)

@@ -1,0 +1,4 @@
+"""Synthetic data pipeline (no datasets ship offline; see DESIGN §7)."""
+from repro.data.synthetic import (lm_stream, nmt_pairs, ner_examples,
+                                  token_batches)
+from repro.data.pipeline import ShardedBatcher, host_shard

@@ -1,0 +1,72 @@
+"""Host-sharded batching + background prefetch.
+
+Each host slices the deterministic synthetic stream by
+``(host_index, host_count)`` — no data server needed, identical semantics at
+1 or 1000 hosts, and a restart resumes from the step counter alone (the
+stream is a pure function of (seed, step)) — this is the fault-tolerance
+property the checkpoint layer relies on: data state is never checkpointed.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator, Optional
+
+import numpy as np
+
+
+def host_shard(global_batch: int, host_index: int, host_count: int):
+    """-> (local_batch, offset). Global batch is split evenly across hosts."""
+    assert global_batch % host_count == 0, (global_batch, host_count)
+    local = global_batch // host_count
+    return local, host_index * local
+
+
+class ShardedBatcher:
+    """Deterministic per-step batches: batch_fn(step, host_index) -> pytree.
+
+    ``prefetch`` background-materializes the next batches on a thread so the
+    accelerator never waits on numpy generation (CPU-side pipelining).
+    """
+
+    def __init__(self, batch_fn: Callable[[int], dict], *,
+                 prefetch: int = 2, start_step: int = 0):
+        self.batch_fn = batch_fn
+        self.step = start_step
+        self.prefetch = prefetch
+        self._q: Optional[queue.Queue] = None
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        if prefetch > 0:
+            self._q = queue.Queue(maxsize=prefetch)
+            self._thread = threading.Thread(target=self._worker, daemon=True)
+            self._thread.start()
+
+    def _worker(self):
+        step = self.step
+        while not self._stop.is_set():
+            batch = self.batch_fn(step)
+            while not self._stop.is_set():
+                try:
+                    self._q.put((step, batch), timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            step += 1
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def __next__(self):
+        if self._q is None:
+            b = self.batch_fn(self.step)
+            self.step += 1
+            return b
+        step, batch = self._q.get()
+        self.step = step + 1
+        return batch
+
+    def close(self):
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=1.0)

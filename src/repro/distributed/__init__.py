@@ -1,0 +1,4 @@
+"""Distribution: logical-axis sharding rules, collective helpers."""
+from repro.distributed.sharding import (Param, tag, unzip, strip, logical_to_pspec,
+                                        make_shardings, shard_act, ShardingRules,
+                                        DEFAULT_RULES)

@@ -1,0 +1,142 @@
+"""Block-gather matmul Pallas TPU kernel — the paper's compaction, fused.
+
+The structured dropout mask is a set of kept hidden-unit *blocks* (masks.py).
+Rather than materializing compacted copies of the operands in HBM, this kernel
+gathers kept blocks on the fly through the ``BlockSpec index_map`` using the
+kept-block ids scalar-prefetched into SMEM: the gather costs nothing beyond
+the (1-p)-sized matmul itself.
+
+Three variants cover the three training phases (sparse_matmul.py):
+  FP  : y  = a[:, kept] @ b[kept, :]   (gather="b_rows")   input  sparsity
+  BP  : dx = dy @ b[kept, :].T         (gather="b_rows", transpose_b)
+                                                           output sparsity
+  FFN : y  = a @ b[:, kept]            (gather="b_cols")   output sparsity
+(The WG matmul needs no gather — its inputs are already compact.)
+
+Tiling: grid = (M/bm, OUT/b_out, CONTRACT/b_k), k innermost; fp32 VMEM
+accumulator, write-out on the last k step. The dropout ``block_size`` doubles
+as the gathered dimension's tile, so production masks use 128/256 (MXU lane
+aligned); ``interpret=True`` validates any size on CPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mm_kernel(ids_ref, a_ref, b_ref, o_ref, acc_ref, *, n_k: int, transpose_b: bool):
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]
+    b = b_ref[...]
+    if transpose_b:
+        b = b.T
+    acc_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _pad_to(x, axis, mult):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_size", "gather", "a_is_compact", "transpose_b", "bm", "bn", "bk",
+    "interpret"))
+def gather_matmul(a: jax.Array, b: jax.Array, keep_blocks: jax.Array, *,
+                  block_size: int,
+                  gather: str = "b_rows",
+                  a_is_compact: bool = False,
+                  transpose_b: bool = False,
+                  bm: Optional[int] = None,
+                  bn: Optional[int] = None,
+                  bk: Optional[int] = None,
+                  interpret: Optional[bool] = None) -> jax.Array:
+    """See module docstring. a: (M, Ka), b: (K, N), keep_blocks: (nk,) int32."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    nk = keep_blocks.shape[0]
+    bs = block_size
+    M = a.shape[0]
+    bm = bm or min(128, M)
+    a = _pad_to(a, 0, bm)
+    Mp = a.shape[0]
+    gm = Mp // bm
+
+    if gather == "b_rows" and not transpose_b:
+        # y (M, N) = a_c (M, nk*bs) @ b[kept, :] (nk*bs, N); contract over kept.
+        N = b.shape[1]
+        bn = bn or min(128, N)
+        b = _pad_to(b, 1, bn)
+        gn = b.shape[1] // bn
+        grid = (gm, gn, nk)
+        if a_is_compact:
+            a_spec = pl.BlockSpec((bm, bs), lambda i, j, k, ids: (i, k))
+        else:
+            a_spec = pl.BlockSpec((bm, bs), lambda i, j, k, ids: (i, ids[k]))
+        b_spec = pl.BlockSpec((bs, bn), lambda i, j, k, ids: (ids[k], j))
+        o_spec = pl.BlockSpec((bm, bn), lambda i, j, k, ids: (i, j))
+        out_shape = jax.ShapeDtypeStruct((Mp, b.shape[1]), a.dtype)
+        acc = pltpu.VMEM((bm, bn), jnp.float32)
+        n_k, out_slice = nk, (slice(0, M), slice(0, N))
+    elif gather == "b_rows" and transpose_b:
+        # y (M, nk*bs) = a (M, N) @ b[kept, :].T; contract over N.
+        N = a.shape[1]
+        bk = bk or min(128, N)
+        a = _pad_to(a, 1, bk)
+        b = _pad_to(b, 1, bk)
+        gk = a.shape[1] // bk
+        grid = (gm, nk, gk)
+        a_spec = pl.BlockSpec((bm, bk), lambda i, j, k, ids: (i, k))
+        b_spec = pl.BlockSpec((bs, bk), lambda i, j, k, ids: (ids[j], k))
+        o_spec = pl.BlockSpec((bm, bs), lambda i, j, k, ids: (i, j))
+        out_shape = jax.ShapeDtypeStruct((Mp, nk * bs), a.dtype)
+        acc = pltpu.VMEM((bm, bs), jnp.float32)
+        n_k, out_slice = gk, (slice(0, M), slice(None))
+    elif gather == "b_cols":
+        # y (M, nk*bs) = a (M, K) @ b[:, kept]; contract over K.
+        K = b.shape[0]
+        bk = bk or min(128, K)
+        a = _pad_to(a, 1, bk)
+        b = _pad_to(b, 0, bk)
+        gk = b.shape[0] // bk
+        grid = (gm, nk, gk)
+        a_spec = pl.BlockSpec((bm, bk), lambda i, j, k, ids: (i, k))
+        b_spec = pl.BlockSpec((bk, bs), lambda i, j, k, ids: (k, ids[j]))
+        o_spec = pl.BlockSpec((bm, bs), lambda i, j, k, ids: (i, j))
+        out_shape = jax.ShapeDtypeStruct((Mp, nk * bs), a.dtype)
+        acc = pltpu.VMEM((bm, bs), jnp.float32)
+        n_k, out_slice = gk, (slice(0, M), slice(None))
+    else:
+        raise ValueError(f"bad gather={gather!r} transpose_b={transpose_b}")
+
+    kernel = functools.partial(_mm_kernel, n_k=n_k,
+                               transpose_b=(gather == "b_rows" and transpose_b))
+    y = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[a_spec, b_spec],
+            out_specs=o_spec,
+            scratch_shapes=[acc],
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(keep_blocks, a, b)
+    return y[out_slice]

@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every Pallas kernel (ground truth for allclose tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _unit_ids(keep_blocks, block_size):
+    offs = jnp.arange(block_size, dtype=jnp.int32)
+    return (keep_blocks[:, None] * block_size + offs[None, :]).reshape(-1)
+
+
+def gather_matmul_ref(a, b, keep_blocks, *, block_size, gather, a_is_compact=False,
+                      transpose_b=False):
+    """Oracle for kernels.gather_matmul (all variants), fp32 accumulation.
+
+    gather="b_rows", not transpose_b:
+        y = a_c @ b[kept_rows, :]      (a gathered on cols unless a_is_compact)
+    gather="b_rows", transpose_b:
+        y = a @ b[kept_rows, :].T      (compact output over kept blocks)
+    gather="b_cols":
+        y = a @ b[:, kept_cols]        (compact output over kept blocks)
+    """
+    ids = _unit_ids(keep_blocks, block_size)
+    if gather == "b_rows" and not transpose_b:
+        a_c = a if a_is_compact else jnp.take(a, ids, axis=1)
+        y = jnp.dot(a_c, jnp.take(b, ids, axis=0),
+                    preferred_element_type=jnp.float32)
+    elif gather == "b_rows" and transpose_b:
+        y = jnp.dot(a, jnp.take(b, ids, axis=0).T,
+                    preferred_element_type=jnp.float32)
+    elif gather == "b_cols":
+        y = jnp.dot(a, jnp.take(b, ids, axis=1),
+                    preferred_element_type=jnp.float32)
+    else:
+        raise ValueError(gather)
+    return y.astype(a.dtype)
+
+
+def lstm_pointwise_ref(gates, c_prev, *, forget_bias=0.0):
+    """Oracle for kernels.lstm_pointwise. gates: (B, 4H) order (i,f,g,o)."""
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    f32 = jnp.float32
+    i, f, g, o, c = (t.astype(f32) for t in (i, f, g, o, c_prev))
+    c_new = jax.nn.sigmoid(f + forget_bias) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h_new = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+    return h_new.astype(gates.dtype), c_new.astype(gates.dtype)

@@ -1,0 +1,390 @@
+"""Loop-aware cost analysis of optimized HLO text.
+
+``compiled.cost_analysis()`` counts each while-loop body ONCE, so for
+scan-over-layers models it undercounts FLOPs/bytes/collectives by ~L x (and
+by the time-scan length for recurrent cells). This module re-derives the
+three roofline inputs from the HLO text with loop multipliers applied:
+
+  1. parse computations + a module-wide name->shape map;
+  2. find every `while` op, resolve its body/cond computations, read the
+     trip count (the s32 constant in the cond — jax scans count 0..N);
+  3. build the call graph (while bodies, fusion `calls=`, to_apply) and
+     propagate execution multipliers from ENTRY;
+  4. accumulate per-computation:
+       * dot FLOPs (2 * prod(result) * prod(contracting dims)),
+       * HBM bytes ~ operands+result of traffic ops (dot / fusion /
+         collectives / copy / slice / gather / scatter / reduce / cumsum),
+       * collective bytes (all-reduce 2x ring factor).
+
+FLOPs are exact for matmul-dominated programs; bytes are a fusion-level
+approximation (CPU-backend fusion differs from TPU — stated in
+EXPERIMENTS.md methodology); collective bytes are exact per occurrence.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*{")
+_CALLS_RE = re.compile(r"(?:calls=|to_apply=|body=|condition=)%?([\w.\-]+)")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# TPU-oriented HBM-traffic model per opcode (CPU-backend fusion differs from
+# TPU, so: elementwise/convert/select/compare are assumed fused => free;
+# bitcast/reshape are layout-free; slicing counts the slice, not the buffer).
+#   key -> (count_result_x, count_operands)
+_TRAFFIC_MODEL = {
+    "dot": (1.0, True),
+    "fusion": (1.0, True),            # operands slice-capped, see below
+    # copy/broadcast: host-backend loop-aliasing & mask-materialization
+    # artifacts — TPU fuses these into consumers; excluded from the model.
+    "transpose": (1.0, False),
+    "dynamic-slice": (2.0, False),
+    "slice": (2.0, False),
+    "gather": (2.0, False),
+    "pad": (2.0, False),
+    "concatenate": (2.0, False),
+    "reduce": (0.0, True),
+    "reduce-window": (1.0, True),
+    "sort": (2.0, True),
+    "convolution": (1.0, True),
+    "rng-bit-generator": (1.0, False),
+    "all-reduce": (2.0, False),
+    "all-gather": (2.0, False),
+    "reduce-scatter": (2.0, False),
+    "all-to-all": (2.0, False),
+    "collective-permute": (2.0, False),
+    "all-reduce-start": (2.0, False),
+    "all-gather-start": (2.0, False),
+    "collective-permute-start": (2.0, False),
+    "scatter": (0.0, None),           # special-cased: 2 x updates operand
+    "dynamic-update-slice": (0.0, None),  # special-cased
+}
+
+# operands larger than this multiple of the result are assumed to be
+# sliced/gathered inside the fusion (stacked scan weights) — cap at result.
+_SLICE_CAP = 8.0
+
+# Opcodes that are pure element-glue: a fusion made only of these would fuse
+# into its producer/consumer on TPU, so we charge its RESULT once (the one
+# materialization) instead of operands+result.
+_ELEMENTWISE = frozenset((
+    "add", "subtract", "multiply", "divide", "negate", "abs", "exponential",
+    "exponential-minus-one", "log", "log-plus-one", "tanh", "logistic",
+    "sqrt", "rsqrt", "power", "maximum", "minimum", "compare", "select",
+    "and", "or", "xor", "not", "convert", "copy", "bitcast", "broadcast",
+    "constant", "parameter", "iota", "reshape", "tuple", "get-tuple-element",
+    "clamp", "sign", "floor", "ceil", "round-nearest-afz", "is-finite",
+    "reduce-precision", "cosine", "sine", "shift-left",
+    "shift-right-logical", "shift-right-arithmetic", "xor", "popcnt",
+    "remainder", "atan2", "expm1", "log1p", "slice", "transpose", "pad",
+))
+
+_OPCODE_RE = re.compile(r"(?:^|\s|\})([a-z][a-z0-9\-]*)\(")
+
+
+def _shapes_of(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dt = m.group(1)
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+        out.append((dt, dims))
+    return out
+
+
+def _nbytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _shapes_of(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    result_type: str
+    body: str          # everything right of '='
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+    is_entry: bool = False
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry = ""
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR_RE.match(line)
+            if m and ("->" in line):
+                cur = Computation(m.group(1), [],
+                                  is_entry=line.startswith("ENTRY"))
+                if cur.is_entry:
+                    entry = cur.name
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        dm = _DEF_RE.match(line)
+        if dm:
+            rest = dm.group(2)
+            # split result type from op call: type is everything before the
+            # first opcode token; find " <opname>(" boundary
+            cur.ops.append(Op(dm.group(1), rest, rest))
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps, entry
+
+
+def _result_type(op_body: str) -> str:
+    # "f32[2,64]{1,0} dot(%a, %b), ..." -> up to the op name
+    i = op_body.find("(")
+    if i < 0:
+        return op_body
+    head = op_body[:i]
+    j = head.rfind(" ")
+    return head[:j] if j > 0 else head
+
+
+def _opcode(op_body: str) -> str:
+    """Opcode token immediately before the first '(' (not metadata text)."""
+    i = op_body.find("(")
+    if i < 0:
+        return ""
+    head = op_body[:i]
+    toks = head.split()
+    return toks[-1].lstrip("%") if toks else ""
+
+
+def _name_shapes(comps: Dict[str, Computation]) -> Dict[str, str]:
+    """Global op-name -> result-type string (HLO names are module-unique)."""
+    out = {}
+    for c in comps.values():
+        for op in c.ops:
+            out[op.name] = _result_type(op.body)
+    return out
+
+
+def _operands(op_body: str) -> List[str]:
+    i = op_body.find("(")
+    j = op_body.find(")", i)
+    if i < 0 or j < 0:
+        return []
+    args = op_body[i + 1:j]
+    return re.findall(r"%([\w.\-]+)", args)
+
+
+def _dot_flops(op: Op, shapes: Dict[str, str]) -> float:
+    res = _shapes_of(_result_type(op.body))
+    if not res:
+        return 0.0
+    _, rdims = res[0]
+    n_out = 1
+    for d in rdims:
+        n_out *= d
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.body)
+    ops = _operands(op.body)
+    if not m or not ops:
+        return 0.0
+    lhs_type = shapes.get(ops[0], "")
+    lshapes = _shapes_of(lhs_type)
+    if not lshapes:
+        return 0.0
+    _, ldims = lshapes[0]
+    k = 1
+    for idx in (int(x) for x in m.group(1).split(",") if x):
+        if idx < len(ldims):
+            k *= ldims[idx]
+    return 2.0 * n_out * k
+
+
+@dataclasses.dataclass
+class LoopAwareCost:
+    flops: float
+    bytes_accessed: float
+    collective_bytes: float
+    collective_by_op: Dict[str, float]
+    collective_counts: Dict[str, float]
+    while_trips: List[int]
+    # debug/perf-loop aids: top individual (computation, op, opcode) by bytes
+    top_bytes: Optional[List] = None
+    bytes_by_opcode: Optional[Dict[str, float]] = None
+    flops_by_metadata: Optional[List] = None
+
+    def as_dict(self):
+        return {
+            "flops": self.flops,
+            "bytes_accessed": self.bytes_accessed,
+            "collective_bytes": self.collective_bytes,
+            "collective_by_op": self.collective_by_op,
+            "collective_counts": self.collective_counts,
+        }
+
+
+def _is_glue(comp: Computation) -> bool:
+    """True when a fusion callee contains only elementwise/layout opcodes."""
+    for op in comp.ops:
+        opc = _opcode(op.body)
+        if opc and opc not in _ELEMENTWISE:
+            return False
+    return True
+
+
+def analyze_hlo(text: str) -> LoopAwareCost:
+    comps, entry = parse_module(text)
+    shapes = _name_shapes(comps)
+    glue = {name for name, c in comps.items() if _is_glue(c)}
+
+    # --- trip counts: cond computation -> s32 constant bound
+    trip_of_cond: Dict[str, int] = {}
+    for c in comps.values():
+        consts = []
+        for op in c.ops:
+            consts += [int(x) for x in _CONST_RE.findall(op.body)]
+        if consts:
+            trip_of_cond[c.name] = max(consts)
+
+    # --- call edges with multipliers
+    # edges[comp] = list of (callee, mult) — while body gets trips, else 1
+    edges: Dict[str, List[Tuple[str, float]]] = {c: [] for c in comps}
+    for c in comps.values():
+        for op in c.ops:
+            if " while(" in op.body:
+                mb = re.search(r"body=%?([\w.\-]+)", op.body)
+                mc = re.search(r"condition=%?([\w.\-]+)", op.body)
+                trips = trip_of_cond.get(mc.group(1), 1) if mc else 1
+                if mb:
+                    edges[c.name].append((mb.group(1), float(max(trips, 1))))
+                if mc:
+                    edges[c.name].append((mc.group(1), float(max(trips, 1))))
+            else:
+                for callee in _CALLS_RE.findall(op.body):
+                    if callee in comps:
+                        edges[c.name].append((callee, 1.0))
+
+    # --- propagate multipliers from entry in topological order
+    # (the HLO call graph is a DAG, so one pass suffices)
+    mult: Dict[str, float] = {c: 0.0 for c in comps}
+    mult[entry] = 1.0
+    for c in _topo_order(comps, edges, entry):
+        for callee, k in edges[c]:
+            mult[callee] += mult[c] * k
+
+    # --- accumulate costs
+    flops = 0.0
+    nbytes = 0.0
+    coll = {c: 0.0 for c in _COLLECTIVES}
+    coll_n = {c: 0.0 for c in _COLLECTIVES}
+    trips_seen = sorted({int(t) for t in trip_of_cond.values()})
+    top: Dict[tuple, float] = {}
+    by_opc: Dict[str, float] = {}
+
+    def _acc(c_name, op, opc, amount):
+        nonlocal nbytes
+        nbytes += amount
+        by_opc[opc] = by_opc.get(opc, 0.0) + amount
+        k = (c_name, op.name, opc)
+        top[k] = top.get(k, 0.0) + amount
+
+    for c in comps.values():
+        m = mult.get(c.name, 0.0)
+        if m <= 0.0:
+            continue
+        for op in c.ops:
+            body = op.body
+            opc = _opcode(body)
+            if opc == "dot":
+                flops += m * _dot_flops(op, shapes)
+
+            base = opc[:-6] if opc.endswith("-start") else opc
+            if base in _COLLECTIVES:
+                size = _nbytes(_result_type(body))
+                factor = 2.0 if base == "all-reduce" else 1.0
+                coll[base] += m * size * factor
+                coll_n[base] += m
+
+            model = _TRAFFIC_MODEL.get(opc)
+            if model is None:
+                continue
+            res = _nbytes(_result_type(body))
+            if opc == "dynamic-update-slice":
+                ops_ = _operands(body)
+                upd = _nbytes(shapes.get(ops_[1], "")) if len(ops_) > 1 else 0
+                _acc(c.name, op, opc, m * 2.0 * upd)
+                continue
+            if opc == "scatter":
+                ops_ = _operands(body)
+                upd = _nbytes(shapes.get(ops_[-1], "")) if ops_ else 0
+                _acc(c.name, op, opc, m * 2.0 * upd)
+                continue
+            if opc == "fusion" and "dynamic-update-slice" in op.name:
+                # in-place insert: traffic = 2 x the (small) update operands;
+                # the aliased buffer result is NOT rewritten.
+                size = 0.0
+                for o in _operands(body):
+                    ob = _nbytes(shapes.get(o, ""))
+                    if res == 0 or ob <= res / _SLICE_CAP:
+                        size += 2.0 * ob
+                _acc(c.name, op, "dus-fusion", m * size)
+                continue
+            if opc == "fusion":
+                callee = _CALLS_RE.search(body)
+                if callee and callee.group(1) in glue:
+                    # elementwise glue: charge the single materialization
+                    _acc(c.name, op, "glue-fusion", m * float(res))
+                    continue
+            res_x, count_ops = model
+            size = res_x * res
+            if count_ops:
+                for o in _operands(body):
+                    ob = _nbytes(shapes.get(o, ""))
+                    if opc == "fusion" and res > 0 and ob > _SLICE_CAP * res:
+                        ob = res       # assume sliced/gathered inside
+                    size += ob
+            _acc(c.name, op, opc, m * size)
+
+    top_list = sorted(top.items(), key=lambda kv: -kv[1])[:20]
+    return LoopAwareCost(flops, nbytes, sum(coll.values()), coll, coll_n,
+                         trips_seen,
+                         top_bytes=[(k[0][:48], k[1][:48], k[2], v)
+                                    for k, v in top_list],
+                         bytes_by_opcode=by_opc)
+
+
+def _topo_order(comps, edges, entry):
+    seen, order = set(), []
+
+    def dfs(c):
+        if c in seen:
+            return
+        seen.add(c)
+        for callee, _ in edges.get(c, ()):
+            dfs(callee)
+        order.append(c)
+
+    dfs(entry)
+    return list(reversed(order))

@@ -1,0 +1,26 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before any jax init; everything else sees
+the real device count).
+
+  single-pod: (16, 16)    axes ("data", "model")   = 256 chips (one v5e pod)
+  multi-pod:  (2, 16, 16) axes ("pod", "data", "model") = 512 chips; "pod"
+              is the DCN axis — gradient sync crosses it once per step,
+              optionally int8-compressed (optim.compress).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever this host actually has (CPU tests: 1 device)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

@@ -1,0 +1,126 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from dryrun.json.
+
+    PYTHONPATH=src python -m repro.launch.report results/dryrun.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+from repro.launch.roofline import HBM_BW, LINK_BW, PEAK_FLOPS
+
+ARCH_ORDER = ["xlstm-1.3b", "mixtral-8x22b", "arctic-480b", "qwen3-8b",
+              "minitron-8b", "gemma-2b", "qwen1.5-32b", "pixtral-12b",
+              "zamba2-1.2b", "whisper-base"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt_bytes(b):
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if b < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def fmt_t(s):
+    if s == 0:
+        return "0"
+    if s < 1e-3:
+        return f"{s*1e6:.0f}us"
+    if s < 1:
+        return f"{s*1e3:.1f}ms"
+    return f"{s:.2f}s"
+
+
+def roofline_table(data: dict, mesh: str = "16x16", variant: str = "sdrop"):
+    lines = [
+        "| arch | shape | kind | t_compute | t_memory | t_collective | "
+        "bottleneck | MODEL_FLOPS/HLO | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            k = f"{arch}|{shape}|{mesh}|{variant}"
+            r = data.get(k)
+            if r is None:
+                continue
+            if r["status"] == "skip":
+                lines.append(f"| {arch} | {shape} | — | — | — | — | "
+                             f"skip | — | — |")
+                continue
+            ro = r["roofline"]
+            dom = max(ro["t_compute_s"], ro["t_memory_s"],
+                      ro["t_collective_s"])
+            # roofline fraction: useful-compute time / dominant term
+            t_useful = (ro["model_flops"] / r["chips"]) / PEAK_FLOPS
+            frac = t_useful / dom if dom > 0 else 0.0
+            lines.append(
+                f"| {arch} | {shape} | {r['kind']} | "
+                f"{fmt_t(ro['t_compute_s'])} | {fmt_t(ro['t_memory_s'])} | "
+                f"{fmt_t(ro['t_collective_s'])} | {ro['bottleneck']} | "
+                f"{ro['flops_ratio']:.3f} | {frac:.3f} |")
+    return "\n".join(lines)
+
+
+def dryrun_table(data: dict, variant: str = "sdrop"):
+    lines = [
+        "| arch | shape | mesh | params | bytes/dev (args+temp) | "
+        "HLO flops/dev | coll bytes/dev | compile |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            for mesh in ("16x16", "2x16x16"):
+                k = f"{arch}|{shape}|{mesh}|{variant}"
+                r = data.get(k)
+                if r is None or r["status"] == "skip":
+                    if r is not None and mesh == "16x16":
+                        lines.append(f"| {arch} | {shape} | both | — | skip: "
+                                     f"{r['reason'][:60]}… | | | |")
+                    continue
+                mem = r.get("memory", {})
+                per_dev = (mem.get("argument_size_in_bytes", 0)
+                           + mem.get("temp_size_in_bytes", 0)) \
+                    / r["chips"]
+                lines.append(
+                    f"| {arch} | {shape} | {mesh} | "
+                    f"{r['params']/1e9:.2f}B | {fmt_bytes(per_dev)} | "
+                    f"{r['cost']['flops']:.2e} | "
+                    f"{fmt_bytes(r['cost']['collective_bytes'])} | "
+                    f"{r['compile_s']}s |")
+    return "\n".join(lines)
+
+
+def pick_hillclimb(data: dict, mesh="16x16", variant="sdrop"):
+    """worst roofline fraction / most collective-bound / most paper-like."""
+    worst, coll = None, None
+    for k, r in data.items():
+        if r.get("status") != "ok" or f"|{mesh}|" not in k:
+            continue
+        ro = r["roofline"]
+        dom = max(ro["t_compute_s"], ro["t_memory_s"], ro["t_collective_s"])
+        t_useful = (ro["model_flops"] / r["chips"]) / PEAK_FLOPS
+        frac = t_useful / dom if dom else 0
+        if worst is None or frac < worst[1]:
+            worst = (k, frac)
+        cfrac = ro["t_collective_s"] / dom if dom else 0
+        if coll is None or cfrac > coll[1]:
+            coll = (k, cfrac)
+    return worst, coll
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun.json"
+    data = json.load(open(path))
+    print("## Roofline (single-pod 16x16, per-device terms)\n")
+    print(roofline_table(data))
+    print("\n## Dry-run (both meshes)\n")
+    print(dryrun_table(data))
+    worst, coll = pick_hillclimb(data)
+    print(f"\nworst roofline fraction: {worst[0]} ({worst[1]:.4f})")
+    print(f"most collective-bound:  {coll[0]} ({coll[1]:.2f} of dominant)")
+
+
+if __name__ == "__main__":
+    main()

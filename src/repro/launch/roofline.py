@@ -1,0 +1,172 @@
+"""Roofline analysis from compiled dry-run artifacts (no real hardware).
+
+Three terms per (arch x shape x mesh), all in seconds-per-step *per chip*
+(XLA's post-partitioning module is the per-device program):
+
+  compute    = HLO_FLOPs / peak_FLOP/s          (197 TFLOP/s bf16, v5e)
+  memory     = HLO_bytes_accessed / HBM_bw      (819 GB/s)
+  collective = collective_bytes / link_bw       (~50 GB/s/link ICI)
+
+collective_bytes is not in cost_analysis: we parse the optimized HLO and sum
+operand/result sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute. all-reduce counts 2x (reduce+broadcast
+phases of a ring); others 1x. Cross-pod ("pod"-axis) collectives ride DCN —
+reported separately when replica groups span pods.
+
+MODEL_FLOPS = 6·N_active·tokens (train) or 2·N_active·tokens (fwd-only);
+ratio MODEL_FLOPS / (HLO_FLOPs x chips) exposes remat/attention/padding
+waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+PEAK_FLOPS = 197e12        # bf16 per chip, TPU v5e
+HBM_BW = 819e9             # bytes/s per chip
+LINK_BW = 50e9             # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "tuple": 0, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Sum byte sizes of every tensor literal in an HLO result type."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_op: dict
+    total_bytes: float
+    count_by_op: dict
+
+    @property
+    def total(self):
+        return self.total_bytes
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Parse optimized HLO; sum result sizes of collective ops.
+
+    Matches lines like:
+      %all-reduce.5 = bf16[4096,512] all-reduce(%x), replica_groups=...
+    ``-start`` variants (async) are counted; ``-done`` skipped (same op).
+    """
+    by_op = {c: 0.0 for c in _COLLECTIVES}
+    counts = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        # result type sits between '=' and the op name
+        for c in _COLLECTIVES:
+            opname = f" {c}(" if f" {c}(" in ls else f" {c}-start("
+            if opname in ls and "-done(" not in ls:
+                eq = ls.find("=")
+                op_at = ls.find(opname)
+                if eq < 0 or op_at < eq:
+                    continue
+                size = _shape_bytes(ls[eq + 1:op_at])
+                factor = 2.0 if c == "all-reduce" else 1.0
+                by_op[c] += size * factor
+                counts[c] += 1
+                break
+    return CollectiveStats(by_op, sum(by_op.values()), counts)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float               # per-device HLO flops
+    bytes_accessed: float      # per-device HBM traffic
+    coll_bytes: float          # per-device collective bytes
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops: float = 0.0   # global useful flops
+    flops_ratio: float = 0.0   # model_flops / (flops * chips)
+    coll_by_op: Optional[dict] = None
+
+    def table_row(self):
+        return (f"{self.t_compute * 1e3:9.2f} {self.t_memory * 1e3:9.2f} "
+                f"{self.t_collective * 1e3:9.2f}  {self.bottleneck:10s} "
+                f"{self.flops_ratio:6.3f}")
+
+
+def analyze(cost: dict, coll: CollectiveStats, *, chips: int,
+            model_flops: float = 0.0) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    raw_bytes = float(cost.get("bytes accessed", 0.0))
+    t_c = flops / PEAK_FLOPS
+    t_m = raw_bytes / HBM_BW
+    t_x = coll.total / LINK_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    bott = max(terms, key=terms.get)
+    ratio = model_flops / (flops * chips) if flops and model_flops else 0.0
+    return Roofline(flops, raw_bytes, coll.total, t_c, t_m, t_x, bott,
+                    model_flops, ratio, coll.bytes_by_op)
+
+
+def analyze_loop_aware(la, *, chips: int, model_flops: float = 0.0) -> Roofline:
+    """Roofline terms from hlo_cost.LoopAwareCost (per-device program)."""
+    t_c = la.flops / PEAK_FLOPS
+    t_m = la.bytes_accessed / HBM_BW
+    t_x = la.collective_bytes / LINK_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    bott = max(terms, key=terms.get)
+    ratio = (model_flops / (la.flops * chips)
+             if la.flops and model_flops else 0.0)
+    return Roofline(la.flops, la.bytes_accessed, la.collective_bytes,
+                    t_c, t_m, t_x, bott, model_flops, ratio,
+                    la.collective_by_op)
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS helpers
+# ---------------------------------------------------------------------------
+
+
+def count_params(shapes_tree) -> int:
+    import jax
+    return sum(int(_np_prod(l.shape)) for l in jax.tree.leaves(shapes_tree))
+
+
+def _np_prod(shape):
+    n = 1
+    for s in shape:
+        n *= s
+    return n
+
+
+def active_params(spec, cfg, total_params: int) -> int:
+    """MoE: count only top-k experts' share of expert params as active."""
+    moe = getattr(cfg, "moe", None)
+    if moe is None:
+        return total_params
+    L, D, F, E = cfg.num_layers, cfg.d_model, cfg.d_ff, moe.num_experts
+    expert_params = L * E * 3 * D * F
+    active_expert = L * moe.top_k * 3 * D * F
+    return total_params - expert_params + active_expert
+
+
+def model_flops_for(kind: str, n_active: int, tokens: int) -> float:
+    """6ND for a train step, 2ND for forward-only (prefill/decode)."""
+    return (6.0 if kind == "train" else 2.0) * n_active * tokens

@@ -1,0 +1,209 @@
+"""Step builders: train_step / prefill_step / serve_step with shardings.
+
+Everything the dry-run lowers and the drivers execute is built here, so the
+compiled artifact is identical in both paths. Parameters, optimizer state,
+batches and decode state all get NamedShardings derived from the logical
+axes + rules; train_step donates (params, opt_state), serve_step donates the
+decode state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import optim
+from repro.configs import adapters
+from repro.configs.base import ArchSpec
+from repro.configs.shapes import ShapeSpec
+from repro.distributed import sharding as shd
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# parameter / optimizer / batch shardings
+# ---------------------------------------------------------------------------
+
+
+def param_setup(spec: ArchSpec, cfg, mesh: Mesh, rules: shd.ShardingRules,
+                seed: int = 0):
+    """-> (init_fn() -> params, param_shapes, param_shardings, axes_tree).
+
+    init is deferred (callable) so the dry-run can eval_shape it without
+    allocating 480B parameters.
+    """
+    key = jax.random.PRNGKey(seed)
+
+    def init_tagged():
+        return adapters.init_params(spec.kind, key, cfg)
+
+    tagged_shapes = jax.eval_shape(init_tagged)
+    shapes, axes = shd.unzip(tagged_shapes)
+    shardings = shd.make_shardings(axes, rules, mesh, shapes)
+
+    def init_fn():
+        return shd.strip(init_tagged())
+
+    return init_fn, shapes, shardings, axes
+
+
+def opt_state_shardings(opt_state_shapes, param_shardings, mesh):
+    """Mirror param shardings onto optimizer-state trees (m/v/avg), scalars
+    replicated. Handles our optimizers' state shapes + chain tuples."""
+    rep = replicated(mesh)
+
+    def walk(s):
+        if isinstance(s, tuple):
+            return tuple(walk(x) for x in s)
+        if isinstance(s, dict):
+            out = {}
+            for k, v in s.items():
+                if k in ("m", "v", "avg"):
+                    out[k] = param_shardings
+                else:
+                    out[k] = jax.tree.map(lambda _: rep, v)
+            return out
+        return jax.tree.map(lambda _: rep, s)
+
+    return walk(opt_state_shapes)
+
+
+def batch_shardings(spec: ArchSpec, cfg, shape: ShapeSpec, mesh: Mesh,
+                    rules: shd.ShardingRules, specs=None):
+    specs = specs or adapters.train_batch_specs(spec, cfg, shape)
+    axes = adapters.batch_logical_axes(spec, cfg, shape)
+    return {k: NamedSharding(
+        mesh, shd.logical_to_pspec(axes[k], rules, specs[k].shape, mesh))
+        for k in specs}
+
+
+def decode_state_shardings(spec: ArchSpec, cfg, state_shapes, mesh, rules):
+    axes = adapters.decode_state_axes(spec, cfg)
+    return {k: NamedSharding(
+        mesh, shd.logical_to_pspec(axes[k], rules,
+                                   state_shapes[k].shape, mesh))
+        for k in state_shapes}
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(spec: ArchSpec, cfg, opt: optim.optimizers.Optimizer,
+                    rules: Optional[shd.ShardingRules], *,
+                    n_micro: int = 1, use_dropout: bool = True):
+    """(params, opt_state, batch, step, key) -> (params, opt_state, loss)."""
+    lfn = adapters.loss_fn(spec.kind)
+    grad_fn = optim.gradient_accumulation(
+        lambda p, b, **kw: lfn(p, b, cfg, rules=rules, **kw), n_micro)
+
+    def train_step(params, opt_state, batch, step, key):
+        loss, grads = grad_fn(params, batch,
+                              drop_key=key if use_dropout else None,
+                              step=step)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = optim.apply_updates(params, updates)
+        return params, opt_state, loss
+
+    return train_step
+
+
+def make_prefill_step(spec: ArchSpec, cfg, rules):
+    f = adapters.prefill_fn(spec)
+
+    def prefill_step(params, batch, state):
+        feats, state = f(params, batch, cfg, state, rules=rules)
+        return feats, state
+
+    return prefill_step
+
+
+def make_serve_step(spec: ArchSpec, cfg, rules):
+    decode = adapters.decode_fn(spec)
+
+    def serve_step(params, state, tokens, pos):
+        logits, state = decode(params, cfg, state, tokens, pos, rules=rules)
+        return logits, state
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# lowering bundles (shared by dryrun + drivers)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class LoweredCell:
+    kind: str                    # train | prefill | decode
+    jitted: Any
+    example_args: tuple          # ShapeDtypeStructs suitable for .lower()
+    donate: tuple = ()
+
+
+def default_opt(cfg) -> optim.optimizers.Optimizer:
+    return optim.chain(optim.clip_by_global_norm(1.0),
+                       optim.adamw(1e-4, weight_decay=0.01))
+
+
+def build_cell(spec: ArchSpec, cfg, shape: ShapeSpec, mesh: Mesh,
+               rules: shd.ShardingRules, *, use_dropout: bool = True,
+               n_micro: int = 1) -> LoweredCell:
+    """Assemble the jitted step + abstract inputs for one (arch, shape)."""
+    init_fn, p_shapes, p_shard, _ = param_setup(spec, cfg, mesh, rules)
+    rep = replicated(mesh)
+
+    if shape.kind == "train":
+        opt = default_opt(cfg)
+        o_shapes = jax.eval_shape(opt.init, p_shapes)
+        o_shard = opt_state_shardings(o_shapes, p_shard, mesh)
+        b_specs = adapters.train_batch_specs(spec, cfg, shape)
+        b_shard = batch_shardings(spec, cfg, shape, mesh, rules, b_specs)
+        fn = make_train_step(spec, cfg, opt, rules, n_micro=n_micro,
+                             use_dropout=use_dropout)
+        jitted = jax.jit(
+            fn,
+            in_shardings=(p_shard, o_shard, b_shard, rep, rep),
+            out_shardings=(p_shard, o_shard, rep),
+            donate_argnums=(0, 1))
+        args = (p_shapes, o_shapes, b_specs,
+                jax.ShapeDtypeStruct((), jnp.int32),
+                jax.ShapeDtypeStruct((2,), jnp.uint32))
+        return LoweredCell("train", jitted, args, donate=(0, 1))
+
+    if shape.kind == "prefill":
+        state_shapes = adapters.decode_state_specs(
+            spec, cfg, shape.global_batch, shape.seq_len)
+        s_shard = decode_state_shardings(spec, cfg, state_shapes, mesh, rules)
+        b_specs = adapters.prefill_batch_specs(spec, cfg, shape)
+        b_shard = batch_shardings(spec, cfg, shape, mesh, rules, b_specs)
+        fn = make_prefill_step(spec, cfg, rules)
+        jitted = jax.jit(fn,
+                         in_shardings=(p_shard, b_shard, s_shard),
+                         donate_argnums=(2,))
+        args = (p_shapes, b_specs, state_shapes)
+        return LoweredCell("prefill", jitted, args, donate=(2,))
+
+    # decode
+    state_shapes = adapters.decode_state_specs(
+        spec, cfg, shape.global_batch, shape.seq_len)
+    s_shard = decode_state_shardings(spec, cfg, state_shapes, mesh, rules)
+    tok = adapters.decode_token_specs(spec, cfg, shape)
+    tok_shard = NamedSharding(
+        mesh, shd.logical_to_pspec(("batch", "seq", None)[:len(tok.shape)],
+                                   rules, tok.shape, mesh))
+    fn = make_serve_step(spec, cfg, rules)
+    jitted = jax.jit(fn,
+                     in_shardings=(p_shard, s_shard, tok_shard, rep),
+                     donate_argnums=(1,))
+    args = (p_shapes, state_shapes, tok,
+            jax.ShapeDtypeStruct((), jnp.int32))
+    return LoweredCell("decode", jitted, args, donate=(1,))

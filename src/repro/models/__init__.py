@@ -1,0 +1,1 @@
+"""Model zoo: paper models (LSTM LM / NMT / NER) + assigned LM-family archs."""

@@ -1,0 +1,139 @@
+"""LSTM language models from the paper's Table 1.
+
+Zaremba'14 medium (2x650, NR dropout .5) / large (2x1500, .65) and
+AWD-LSTM (3x1150, embed 400, dropout vector [.4,.1,.25,.4] + recurrent .5).
+The dropout *pattern* (Case I-IV, NR / NR+RH) is the experiment variable —
+``LMDropouts`` bundles every application point so benchmarks flip one knob.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import layers as L
+from repro.core import lstm as lstm_mod
+from repro.core import sdrop
+from repro.core.sdrop import DropoutSpec
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass(frozen=True)
+class LMDropouts:
+    """Dropout specs for each application point of the LSTM LM."""
+    inp: DropoutSpec = DropoutSpec(rate=0.0)    # after embedding lookup
+    nr: DropoutSpec = DropoutSpec(rate=0.0)     # between LSTM layers
+    rh: DropoutSpec = DropoutSpec(rate=0.0)     # recurrent hidden (paper ext.)
+    out: DropoutSpec = DropoutSpec(rate=0.0)    # pre-FC output dropout
+
+
+@dataclasses.dataclass(frozen=True)
+class LSTMLMConfig:
+    name: str = "lstm_lm"
+    vocab: int = 10000
+    embed: int = 650
+    hidden: int = 650
+    num_layers: int = 2
+    tie_embeddings: bool = False
+    init_scale: float = 0.05
+    drops: LMDropouts = LMDropouts()
+    param_dtype: Any = jnp.float32
+    loss_chunks: int = 4
+
+
+def _mk(defaults: dict, kw: dict) -> LSTMLMConfig:
+    return LSTMLMConfig(**{**defaults, **kw})
+
+
+def zaremba_medium(**kw) -> LSTMLMConfig:
+    return _mk(dict(name="zaremba_medium", vocab=10000, embed=650, hidden=650,
+                    num_layers=2, init_scale=0.05,
+                    drops=LMDropouts(inp=DropoutSpec(rate=0.5),
+                                     nr=DropoutSpec(rate=0.5),
+                                     out=DropoutSpec(rate=0.5))), kw)
+
+
+def zaremba_large(**kw) -> LSTMLMConfig:
+    return _mk(dict(name="zaremba_large", vocab=10000, embed=1500, hidden=1500,
+                    num_layers=2, init_scale=0.04,
+                    drops=LMDropouts(inp=DropoutSpec(rate=0.65),
+                                     nr=DropoutSpec(rate=0.65),
+                                     out=DropoutSpec(rate=0.65))), kw)
+
+
+def awd_lstm(**kw) -> LSTMLMConfig:
+    return _mk(dict(name="awd_lstm", vocab=10000, embed=400, hidden=1150,
+                    num_layers=3, tie_embeddings=True,
+                    drops=LMDropouts(inp=DropoutSpec(rate=0.4),
+                                     nr=DropoutSpec(rate=0.25),
+                                     rh=DropoutSpec(rate=0.5),
+                                     out=DropoutSpec(rate=0.4))), kw)
+
+
+def init_params(key, cfg: LSTMLMConfig):
+    k_e, k_l, k_f = jax.random.split(key, 3)
+    p = {
+        "embed": L.uniform_init(k_e, (cfg.vocab, cfg.embed), 0.1,
+                                cfg.param_dtype),
+        "lstm": lstm_mod.init_lstm_params(
+            k_l, cfg.embed, cfg.hidden, cfg.num_layers,
+            init_scale=cfg.init_scale, dtype=cfg.param_dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["fc"] = L.init_dense(k_f, cfg.hidden, cfg.vocab,
+                               scale=cfg.init_scale, dtype=cfg.param_dtype)
+    elif cfg.hidden != cfg.embed:
+        p["proj"] = L.init_dense(k_f, cfg.hidden, cfg.embed, bias=False,
+                                 dtype=cfg.param_dtype)
+    return p
+
+
+def forward(params, tokens, cfg: LSTMLMConfig, *, state=None, drop_key=None):
+    """tokens: (B, S) -> (logits (B,S,V), final state)."""
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)         # (B,S,E)
+    if drop_key is not None and cfg.drops.inp.active:
+        k_in = jax.random.fold_in(drop_key, 1)
+        st = sdrop.make_state(k_in, cfg.drops.inp, B * S, cfg.embed)
+        x = st.apply(x.reshape(B * S, -1)).reshape(B, S, -1) \
+            if st.dense_mask is not None else st.apply(x)
+    if state is None:
+        state = lstm_mod.zero_state(cfg.num_layers, B, cfg.hidden)
+    ys, state = lstm_mod.lstm_stack(
+        params["lstm"], x.transpose(1, 0, 2), state,
+        nr_spec=cfg.drops.nr, rh_spec=cfg.drops.rh,
+        key=jax.random.fold_in(drop_key, 2) if drop_key is not None else None,
+        deterministic=drop_key is None)
+    h = ys.transpose(1, 0, 2)                              # (B,S,H)
+    if drop_key is not None and cfg.drops.out.active:
+        k_out = jax.random.fold_in(drop_key, 3)
+        st = sdrop.make_state(k_out, cfg.drops.out, B * S, cfg.hidden)
+        h = st.apply(h.reshape(B * S, -1)).reshape(B, S, -1) \
+            if st.dense_mask is not None else st.apply(h)
+    if cfg.tie_embeddings:
+        if "proj" in params:
+            h = L.dense(params["proj"], h)
+        logits = jnp.einsum("bsh,vh->bsv", h, params["embed"],
+                            preferred_element_type=jnp.float32)
+    else:
+        logits = L.dense(params["fc"], h).astype(jnp.float32)
+    return logits, state
+
+
+def loss_fn(params, batch, cfg: LSTMLMConfig, *, state=None, drop_key=None,
+            rules=None, step=0):
+    key = (jax.random.fold_in(drop_key, step) if drop_key is not None else None)
+    logits, _ = forward(params, batch["tokens"], cfg, state=state,
+                        drop_key=key)
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(lp, batch["labels"][..., None], axis=-1)
+    return nll.mean()
+
+
+def perplexity(params, tokens, labels, cfg: LSTMLMConfig) -> float:
+    logits, _ = forward(params, tokens, cfg)
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(lp, labels[..., None], axis=-1)
+    return float(jnp.exp(nll.mean()))

@@ -1,0 +1,150 @@
+"""Luong'15 attention NMT (paper Table 2): 2-layer unidirectional LSTM
+encoder-decoder with general attention + input feeding.
+
+Structured dropout (NR and the paper's RH extension) is applied in both the
+encoder and decoder stacks; an additional NR dropout on the encoder/decoder
+outputs matches the paper's §4.2 modification.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import layers as L
+from repro.core import lstm as lstm_mod
+from repro.core import sdrop
+from repro.core.sdrop import DropoutSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class NMTConfig:
+    name: str = "luong_nmt"
+    src_vocab: int = 50000
+    tgt_vocab: int = 50000
+    embed: int = 512
+    hidden: int = 512
+    num_layers: int = 2
+    nr: DropoutSpec = DropoutSpec(rate=0.3)
+    rh: DropoutSpec = DropoutSpec(rate=0.0)
+    out: DropoutSpec = DropoutSpec(rate=0.0)   # encoder/decoder output drop
+    param_dtype: Any = jnp.float32
+
+
+def init_params(key, cfg: NMTConfig):
+    ks = jax.random.split(key, 8)
+    H = cfg.hidden
+    return {
+        "src_embed": L.uniform_init(ks[0], (cfg.src_vocab, cfg.embed), 0.1),
+        "tgt_embed": L.uniform_init(ks[1], (cfg.tgt_vocab, cfg.embed), 0.1),
+        "encoder": lstm_mod.init_lstm_params(ks[2], cfg.embed, H,
+                                             cfg.num_layers),
+        # decoder consumes [embed ; input-feed h~] per step
+        "decoder": lstm_mod.init_lstm_params(ks[3], cfg.embed + H, H,
+                                             cfg.num_layers),
+        "w_att": L.init_dense(ks[4], H, H, bias=False),     # general score
+        "w_comb": L.init_dense(ks[5], 2 * H, H, bias=False),
+        "fc": L.init_dense(ks[6], H, cfg.tgt_vocab),
+    }
+
+
+def _apply_out_drop(h, spec, key):
+    if key is None or not spec.active:
+        return h
+    st = sdrop.make_state(key, spec, h.shape[0] * h.shape[1], h.shape[-1])
+    if st.dense_mask is not None:
+        B, S, H = h.shape
+        return st.apply(h.reshape(B * S, H)).reshape(B, S, H)
+    return st.apply(h)
+
+
+def encode(params, src, cfg: NMTConfig, *, drop_key=None):
+    B, S = src.shape
+    x = jnp.take(params["src_embed"], src, axis=0)
+    state = lstm_mod.zero_state(cfg.num_layers, B, cfg.hidden)
+    ys, state = lstm_mod.lstm_stack(
+        params["encoder"], x.transpose(1, 0, 2), state,
+        nr_spec=cfg.nr, rh_spec=cfg.rh,
+        key=jax.random.fold_in(drop_key, 1) if drop_key is not None else None,
+        deterministic=drop_key is None)
+    enc = ys.transpose(1, 0, 2)                            # (B,S,H)
+    enc = _apply_out_drop(
+        enc, cfg.out,
+        jax.random.fold_in(drop_key, 2) if drop_key is not None else None)
+    return enc, state
+
+
+def decode_train(params, tgt_in, enc_out, enc_state, cfg: NMTConfig, *,
+                 drop_key=None, src_mask=None):
+    """Teacher-forced decoding with Luong general attention + input feeding.
+
+    tgt_in: (B, St); enc_out: (B, Ss, H). Returns logits (B, St, V).
+    """
+    B, St = tgt_in.shape
+    H = cfg.hidden
+    x = jnp.take(params["tgt_embed"], tgt_in, axis=0)      # (B,St,E)
+    enc_proj = L.dense(params["w_att"], enc_out)           # (B,Ss,H)
+    if src_mask is None:
+        src_mask = jnp.ones(enc_out.shape[:2], bool)
+
+    dec_params = params["decoder"]
+    key = jax.random.fold_in(drop_key, 3) if drop_key is not None else None
+    layer_keys = (jax.random.split(key, cfg.num_layers * 2)
+                  .reshape(cfg.num_layers, 2, -1) if key is not None else None)
+
+    def step(carry, inp):
+        (hs, cs, feed) = carry
+        x_t, t = inp                                       # (B,E)
+        inp_t = jnp.concatenate([x_t, feed], axis=-1)
+        new_h, new_c = [], []
+        cur = inp_t
+        for l in range(cfg.num_layers):
+            if layer_keys is not None:
+                nr = sdrop.make_state(
+                    sdrop.step_key(layer_keys[l, 0], cfg.nr, t), cfg.nr,
+                    B, cur.shape[-1])
+                rh = sdrop.make_state(
+                    sdrop.step_key(layer_keys[l, 1], cfg.rh, t), cfg.rh,
+                    B, H)
+            else:
+                nr = rh = None
+            h, c = lstm_mod.lstm_cell(dec_params[l], cur, hs[l], cs[l], nr, rh)
+            new_h.append(h)
+            new_c.append(c)
+            cur = h
+        # Luong general attention on the top hidden state
+        scores = jnp.einsum("bh,bsh->bs", cur, enc_proj)
+        scores = jnp.where(src_mask, scores, -1e30)
+        alpha = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bs,bsh->bh", alpha, enc_out)
+        h_tilde = jnp.tanh(L.dense(params["w_comb"],
+                                   jnp.concatenate([ctx, cur], -1)))
+        return (jnp.stack(new_h), jnp.stack(new_c), h_tilde), h_tilde
+
+    h0 = enc_state.h
+    c0 = enc_state.c
+    feed0 = jnp.zeros((B, H), x.dtype)
+    (_, _, _), h_tildes = jax.lax.scan(
+        step, (h0, c0, feed0), (x.transpose(1, 0, 2), jnp.arange(St)))
+    ht = h_tildes.transpose(1, 0, 2)                       # (B,St,H)
+    ht = _apply_out_drop(
+        ht, cfg.out,
+        jax.random.fold_in(drop_key, 4) if drop_key is not None else None)
+    return L.dense(params["fc"], ht).astype(jnp.float32)
+
+
+def loss_fn(params, batch, cfg: NMTConfig, *, drop_key=None, rules=None,
+            step=0):
+    """batch: {"src", "tgt_in", "tgt_out", ["src_mask", "tgt_mask"]}."""
+    key = (jax.random.fold_in(drop_key, step) if drop_key is not None else None)
+    enc, st = encode(params, batch["src"], cfg, drop_key=key)
+    logits = decode_train(params, batch["tgt_in"], enc, st, cfg,
+                          drop_key=key, src_mask=batch.get("src_mask"))
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(lp, batch["tgt_out"][..., None], -1)[..., 0]
+    mask = batch.get("tgt_mask")
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1)
+    return nll.mean()

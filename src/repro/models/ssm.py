@@ -1,0 +1,424 @@
+"""Mamba2 (SSD) + the zamba2 hybrid (Mamba2 backbone, shared attention block).
+
+Mamba2's state-space recurrence is *linear* — there is no hidden-to-hidden
+weight matmul — so the paper's RH direction does not apply to the SSM core
+(noted in DESIGN §Arch-applicability). The NR direction does: the block
+input projection consumes the residual stream through structured dropout.
+
+The SSD scan uses the chunkwise (segsum) form from the Mamba2 paper:
+quadratic attention-with-decay inside chunks (MXU matmuls) + a recurrent
+state pass across chunks. Decode is the O(1)-per-token recurrent step, which
+is what makes the 500k-token long-context cell runnable.
+
+zamba2: stacked Mamba2 blocks; ONE shared transformer block (attention+MLP,
+one set of weights) is applied every ``shared_every`` blocks on
+``concat(hidden, residual-stream input)`` — following Zamba's weight-shared
+global-attention design (arXiv:2411.15242).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sdrop
+from repro.core import sparse_matmul as sm
+from repro.core.sdrop import DropoutSpec
+from repro.distributed.sharding import tag, shard_act
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Config:
+    name: str = "mamba2"
+    num_layers: int = 4
+    d_model: int = 128
+    ssm_state: int = 64          # N
+    n_heads: int = 8             # SSD heads; head dim P = inner / n_heads
+    expand: int = 2              # inner = expand * d_model
+    conv_kernel: int = 4
+    chunk: int = 64
+    vocab: int = 256
+    # zamba2 hybrid: shared attention block
+    shared_attn: bool = False
+    shared_every: int = 6
+    attn_heads: int = 8
+    attn_kv_heads: int = 8
+    attn_ff: int = 0             # shared block MLP width (0 = 4*d_model)
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.float32
+    loss_chunks: int = 8
+    remat: str = "full"
+    nr_drop: DropoutSpec = DropoutSpec(rate=0.0)
+
+    @property
+    def inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def head_p(self) -> int:
+        return self.inner // self.n_heads
+
+
+# ---------------------------------------------------------------------------
+# SSD chunkwise scan
+# ---------------------------------------------------------------------------
+
+
+def _segsum(a):
+    """log-space segment sums: out[..., t, s] = sum_{s < tau <= t} a[..., tau].
+
+    a: (..., c). Returns (..., c, c), -inf above the diagonal.
+    """
+    c = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((c, c), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, D, chunk: int, initial=None):
+    """Chunkwise SSD (Mamba2 alg. 1).
+
+    x: (b, S, H, P); dt: (b, S, H) (post-softplus); A: (H,) negative;
+    B, C: (b, S, G, N); D: (H,) skip. Returns (y (b,S,H,P), final_state
+    (b, H, P, N)).
+    """
+    b, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    c = min(chunk, S)
+    while S % c:
+        c -= 1
+    nc = S // c
+    rep = H // G
+
+    # discretize
+    xd = x * dt[..., None]                      # dt-weighted input
+    da = dt * A                                 # (b,S,H) log-decay per step
+
+    xc = xd.reshape(b, nc, c, H, P).transpose(1, 0, 2, 3, 4)
+    dac = da.reshape(b, nc, c, H).transpose(1, 0, 2, 3)
+    Bc = B.reshape(b, nc, c, G, N).transpose(1, 0, 2, 3, 4)
+    Cc = C.reshape(b, nc, c, G, N).transpose(1, 0, 2, 3, 4)
+
+    if initial is None:
+        S0 = jnp.zeros((b, H, P, N), jnp.float32)
+    else:
+        S0 = initial
+
+    def chunk_step(Sst, inp):
+        xx, aa, BB, CC = inp                     # (b,c,H,P),(b,c,H),(b,c,G,N)
+        a_t = aa.transpose(0, 2, 1)              # (b,H,c)
+        Lmat = jnp.exp(_segsum(a_t))             # (b,H,c,c) decay, lower-tri
+        # intra-chunk: y = (C B^T ⊙ L) x
+        CB = jnp.einsum("bthn,bshn->bhts",
+                        CC.repeat(rep, 2) if rep > 1 else CC,
+                        BB.repeat(rep, 2) if rep > 1 else BB,
+                        preferred_element_type=jnp.float32)
+        y_diag = jnp.einsum("bhts,bshp->bthp", CB * Lmat, xx,
+                            preferred_element_type=jnp.float32)
+        # inter-chunk: read carried state with decay exp(cumsum a)
+        acs = jnp.cumsum(a_t, axis=-1)           # (b,H,c)
+        y_off = jnp.einsum("bthn,bhpn,bht->bthp",
+                           CC.repeat(rep, 2) if rep > 1 else CC, Sst,
+                           jnp.exp(acs), preferred_element_type=jnp.float32)
+        # chunk-out state: S' = exp(sum a) S + sum_t exp(suffix decay) B_t x_t
+        a_tot = acs[..., -1]                     # (b,H)
+        w = jnp.exp(a_tot[..., None] - acs)      # (b,H,c) suffix decay
+        S_new = (Sst * jnp.exp(a_tot)[..., None, None]
+                 + jnp.einsum("bht,bthn,bthp->bhpn", w,
+                              BB.repeat(rep, 2) if rep > 1 else BB, xx,
+                              preferred_element_type=jnp.float32))
+        return S_new, y_diag + y_off
+
+    Sf, ys = jax.lax.scan(chunk_step, S0, (xc, dac, Bc, Cc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, S, H, P)
+    y = y + x * D[None, None, :, None]
+    return y.astype(x.dtype), Sf
+
+
+def ssd_decode(x, dt, A, B, C, D, state):
+    """One-token SSD step. x: (b,H,P); dt: (b,H); B,C: (b,G,N).
+
+    state: (b,H,P,N). Returns (y (b,H,P), new state)."""
+    G = B.shape[1]
+    H = x.shape[1]
+    rep = H // G
+    da = jnp.exp(dt * A)                         # (b,H)
+    Bx = jnp.einsum("bhp,bhn->bhpn", x * dt[..., None],
+                    B.repeat(rep, 1) if rep > 1 else B)
+    state = state * da[..., None, None] + Bx
+    y = jnp.einsum("bhpn,bhn->bhp", state,
+                   C.repeat(rep, 1) if rep > 1 else C,
+                   preferred_element_type=jnp.float32)
+    return (y + x * D[None, :, None]).astype(x.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Blocks / params
+# ---------------------------------------------------------------------------
+
+
+def _proj_sdrop(x, w, drop_state):
+    if drop_state is None or drop_state.inactive:
+        return jnp.einsum("bsd,dn->bsn", x, w,
+                          preferred_element_type=jnp.float32).astype(x.dtype)
+    if drop_state.structured:
+        return sm.sdrop_matmul(x, w, drop_state.keep_blocks,
+                               rate=drop_state.spec.rate,
+                               block_size=drop_state.spec.block_size,
+                               scale=drop_state.scale)
+    return jnp.einsum("bsd,dn->bsn", drop_state.apply(x), w,
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def _rms(g, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    return (y * g).astype(x.dtype)
+
+
+def init_mamba_blocks(key, cfg: Mamba2Config, L: int):
+    D, I, H, N = cfg.d_model, cfg.inner, cfg.n_heads, cfg.ssm_state
+    G = 1                                        # single B/C group
+    pd = cfg.param_dtype
+    conv_dim = I + 2 * G * N
+    ks = iter(jax.random.split(key, 8))
+
+    def w(shape, axes, scale=None):
+        s = scale if scale is not None else shape[-2] ** -0.5
+        return tag((jax.random.normal(next(ks), shape) * s).astype(pd), *axes)
+
+    # in_proj emits [z (I), x (I), B (GN), C (GN), dt (H)]
+    return {
+        "ln": {"g": tag(jnp.ones((L, D), pd), "layer", "norm")},
+        "w_in": w((L, D, 2 * I + 2 * G * N + H), ("layer", "embed", "mlp")),
+        "conv_w": tag(jnp.zeros((L, cfg.conv_kernel, conv_dim), pd),
+                      "layer", "conv", "mlp"),
+        "conv_b": tag(jnp.zeros((L, conv_dim), pd), "layer", "mlp"),
+        "A_log": tag(jnp.log(jnp.linspace(1.0, 16.0, H))[None].repeat(L, 0)
+                     .astype(pd), "layer", "heads"),
+        "D": tag(jnp.ones((L, H), pd), "layer", "heads"),
+        "dt_bias": tag(jnp.full((L, H), -2.0, pd), "layer", "heads"),
+        "gn": {"g": tag(jnp.ones((L, I), pd), "layer", "norm")},
+        "w_out": w((L, I, D), ("layer", "mlp", "embed")),
+    }
+
+
+def init_params(key, cfg: Mamba2Config):
+    k_e, k_m, k_a, k_h = jax.random.split(key, 4)
+    p = {
+        "embed": tag((jax.random.normal(k_e, (cfg.vocab, cfg.d_model)) * 0.02
+                      ).astype(cfg.param_dtype), "vocab", "embed"),
+        "mamba": init_mamba_blocks(k_m, cfg, cfg.num_layers),
+        "ln_f": {"g": tag(jnp.ones((cfg.d_model,), cfg.param_dtype), "norm")},
+        "lm_head": tag((jax.random.normal(k_h, (cfg.d_model, cfg.vocab))
+                        * cfg.d_model ** -0.5).astype(cfg.param_dtype),
+                       "embed", "vocab"),
+    }
+    if cfg.shared_attn:
+        tcfg = _shared_tcfg(cfg)
+        p["shared"] = T.init_block_params(k_a, tcfg, 1)
+        p["shared_in"] = tag(
+            (jax.random.normal(jax.random.fold_in(k_a, 1),
+                               (2 * cfg.d_model, cfg.d_model))
+             * (2 * cfg.d_model) ** -0.5).astype(cfg.param_dtype),
+            "mlp", "embed")
+    return p
+
+
+def _shared_tcfg(cfg: Mamba2Config) -> T.TransformerConfig:
+    return T.TransformerConfig(
+        num_layers=1, d_model=cfg.d_model, n_heads=cfg.attn_heads,
+        n_kv_heads=cfg.attn_kv_heads, d_ff=cfg.attn_ff or 4 * cfg.d_model,
+        vocab=cfg.vocab, param_dtype=cfg.param_dtype,
+        compute_dtype=cfg.compute_dtype, q_chunk=512, kv_chunk=512,
+        max_seq=1 << 20)
+
+
+def _causal_conv(x, w, b):
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    return out + b
+
+
+def mamba_block_apply(pl, x, cfg: Mamba2Config, drop_state=None, initial=None):
+    """x: (B,S,D) -> (B,S,D); returns (y, (ssm_state, conv_tail))."""
+    Bb, S, Dm = x.shape
+    I, H, N, P = cfg.inner, cfg.n_heads, cfg.ssm_state, cfg.head_p
+    G = 1
+    h = _rms(pl["ln"]["g"], x)
+    zxbcdt = _proj_sdrop(h, pl["w_in"], drop_state)      # NR structured drop
+    z, xbc, dt_raw = jnp.split(zxbcdt, [I, 2 * I + 2 * G * N], axis=-1)
+    xbc = _causal_conv(xbc, pl["conv_w"], pl["conv_b"])
+    xbc = jax.nn.silu(xbc)
+    xs, Bmat, Cmat = jnp.split(xbc, [I, I + G * N], axis=-1)
+    dt = jax.nn.softplus(dt_raw + pl["dt_bias"])          # (B,S,H)
+    A = -jnp.exp(pl["A_log"].astype(jnp.float32))         # (H,)
+    y, Sf = ssd_chunked(xs.reshape(Bb, S, H, P), dt, A,
+                        Bmat.reshape(Bb, S, G, N), Cmat.reshape(Bb, S, G, N),
+                        pl["D"].astype(jnp.float32), cfg.chunk, initial=initial)
+    y = y.reshape(Bb, S, I)
+    y = _rms(pl["gn"]["g"], y) * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, pl["w_out"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    conv_tail = xbc  # not carried in training
+    return x + out, Sf
+
+
+def _drop_state(key, cfg, layer_idx, step):
+    if key is None or not cfg.nr_drop.active:
+        return None
+    k = sdrop.step_key(jax.random.fold_in(key, layer_idx), cfg.nr_drop, step)
+    return sdrop.make_state(k, cfg.nr_drop, 0, cfg.d_model)
+
+
+def forward(params, tokens, cfg: Mamba2Config, *, rules=None, drop_key=None,
+            step=0):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+    x = shard_act(x, ("batch", "seq", "embed_act"), rules)
+    x0 = x                                                # zamba residual feed
+    L = cfg.num_layers
+
+    def m_scan(x, lo, hi):
+        grp = jax.tree.map(lambda a: a[lo:hi], params["mamba"])
+
+        def body(x, inp):
+            pl, li = inp
+            ds = _drop_state(drop_key, cfg, li, step)
+            y, _ = mamba_block_apply(pl, x, cfg, drop_state=ds)
+            return y, None
+        f = jax.checkpoint(body) if cfg.remat != "none" else body
+        x, _ = jax.lax.scan(f, x, (grp, lo + jnp.arange(hi - lo)))
+        return x
+
+    if not cfg.shared_attn:
+        x = m_scan(x, 0, L)
+    else:
+        tcfg = _shared_tcfg(cfg)
+        shared = jax.tree.map(lambda a: a[0], params["shared"])
+        lo = 0
+        seg = cfg.shared_every
+        while lo < L:
+            hi = min(lo + seg, L)
+            x = m_scan(x, lo, hi)
+            if hi - lo == seg and hi < L + 1:
+                inp = jnp.concatenate([x, x0], axis=-1)
+                xin = jnp.einsum("bsd,dn->bsn", inp, params["shared_in"],
+                                 preferred_element_type=jnp.float32
+                                 ).astype(x.dtype)
+                positions = jnp.arange(x.shape[1])[None].repeat(x.shape[0], 0)
+                y, _ = T.block_apply(shared, xin, tcfg, causal=True,
+                                     positions=positions, rules=rules)
+                x = x + (y - xin)                # residual delta of the block
+            lo = hi
+    return _rms(params["ln_f"]["g"], x)
+
+
+def lm_logits(params, feats):
+    return jnp.einsum("bsd,dv->bsv", feats, params["lm_head"],
+                      preferred_element_type=jnp.float32)
+
+
+def loss_fn(params, batch, cfg: Mamba2Config, *, rules=None, drop_key=None,
+            step=0):
+    feats = forward(params, batch["tokens"], cfg, rules=rules,
+                    drop_key=drop_key, step=step)
+    tcfg = T.TransformerConfig(vocab=cfg.vocab, d_model=cfg.d_model,
+                               loss_chunks=cfg.loss_chunks)
+    return T.lm_loss({"lm_head": params["lm_head"]}, feats, batch["labels"],
+                     tcfg, rules=rules)
+
+
+# ------------------------------- serving ----------------------------------
+
+
+def init_state(cfg: Mamba2Config, batch: int, max_seq: int = 0,
+               dtype=jnp.float32):
+    """Recurrent state; + KV caches for the shared attention applications."""
+    L, H, P, N = cfg.num_layers, cfg.n_heads, cfg.head_p, cfg.ssm_state
+    G = 1
+    conv_dim = cfg.inner + 2 * G * N
+    st = {
+        "ssm": jnp.zeros((L, batch, H, P, N), dtype),   # fp32 for stability
+        "conv": jnp.zeros((L, batch, cfg.conv_kernel - 1, conv_dim),
+                          cfg.compute_dtype),
+    }
+    if cfg.shared_attn and max_seq:
+        n_app = cfg.num_layers // cfg.shared_every
+        tcfg = _shared_tcfg(cfg)
+        KV, hd = tcfg.n_kv_eff, tcfg.hd
+        st["attn_k"] = jnp.zeros((n_app, batch, max_seq, KV, hd),
+                                 cfg.compute_dtype)
+        st["attn_v"] = jnp.zeros((n_app, batch, max_seq, KV, hd),
+                                 cfg.compute_dtype)
+    return st
+
+
+def decode_step(params, cfg: Mamba2Config, state, tokens, pos, *, rules=None):
+    """One-token decode. tokens: (B,1). Returns (logits (B,1,V), state)."""
+    Bb = tokens.shape[0]
+    I, H, N, P = cfg.inner, cfg.n_heads, cfg.ssm_state, cfg.head_p
+    G = 1
+    x = jnp.take(params["embed"], tokens[:, 0], axis=0).astype(
+        cfg.compute_dtype)                                  # (B,D)
+    x0 = x
+    new_state = dict(state)
+
+    def m_body(x, inp):
+        pl, Sst, conv = inp
+        h = _rms(pl["ln"]["g"], x)
+        zxbcdt = h @ pl["w_in"]
+        z, xbc, dt_raw = jnp.split(zxbcdt, [I, 2 * I + 2 * G * N], axis=-1)
+        win = jnp.concatenate([conv, xbc[:, None, :]], axis=1)
+        xbc = jax.nn.silu(jnp.einsum("bkc,kc->bc", win, pl["conv_w"])
+                          + pl["conv_b"])
+        xs, Bmat, Cmat = jnp.split(xbc, [I, I + G * N], axis=-1)
+        dt = jax.nn.softplus(dt_raw + pl["dt_bias"])
+        A = -jnp.exp(pl["A_log"].astype(jnp.float32))
+        y, S2 = ssd_decode(xs.reshape(Bb, H, P), dt, A,
+                           Bmat.reshape(Bb, G, N), Cmat.reshape(Bb, G, N),
+                           pl["D"].astype(jnp.float32), Sst)
+        y = _rms(pl["gn"]["g"], y.reshape(Bb, I)) * jax.nn.silu(z)
+        return x + y @ pl["w_out"], (S2, win[:, 1:])
+
+    def run_m(x, lo, hi):
+        grp = jax.tree.map(lambda a: a[lo:hi], params["mamba"])
+
+        def body(x, inp):
+            return m_body(x, inp)
+        x, (S2, conv2) = jax.lax.scan(
+            body, x, (grp, state["ssm"][lo:hi], state["conv"][lo:hi]))
+        new_state["ssm"] = new_state["ssm"].at[lo:hi].set(S2)
+        new_state["conv"] = new_state["conv"].at[lo:hi].set(conv2)
+        return x
+
+    L = cfg.num_layers
+    if not cfg.shared_attn:
+        x = run_m(x, 0, L)
+    else:
+        tcfg = _shared_tcfg(cfg)
+        shared = jax.tree.map(lambda a: a[0], params["shared"])
+        lo, app = 0, 0
+        while lo < L:
+            hi = min(lo + cfg.shared_every, L)
+            x = run_m(x, lo, hi)
+            if hi - lo == cfg.shared_every:
+                inp = jnp.concatenate([x, x0], axis=-1)
+                xin = (inp @ params["shared_in"]).astype(x.dtype)[:, None, :]
+                entry = {"k": state["attn_k"][app], "v": state["attn_v"][app]}
+                y, new_entry = T._decode_block(shared, xin, tcfg, entry, pos,
+                                               jnp.full((Bb, 1), pos), rules,
+                                               None)
+                new_state["attn_k"] = new_state["attn_k"].at[app].set(
+                    new_entry["k"])
+                new_state["attn_v"] = new_state["attn_v"].at[app].set(
+                    new_entry["v"])
+                x = x + (y[:, 0] - xin[:, 0])
+                app += 1
+            lo = hi
+    feats = _rms(params["ln_f"]["g"], x)
+    return (feats @ params["lm_head"])[:, None, :], new_state

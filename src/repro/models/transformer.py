@@ -1,0 +1,849 @@
+"""Config-driven transformer backbone for the assigned LM-family archs.
+
+One implementation covers qwen3 / minitron / gemma / qwen1.5 (dense, GQA/MQA,
+qk-norm, QKV-bias, GeGLU), mixtral / arctic (MoE top-k, SWA, dense-residual
+MoE), pixtral (embeds-in backbone) and whisper (enc-dec, sinusoidal pos,
+cross-attention) — each arch is a ``TransformerConfig``.
+
+Structure:
+  * stacked per-layer weights + ``lax.scan`` over layers (O(1) HLO in depth),
+    ``jax.checkpoint`` remat per block;
+  * chunked (flash-style online-softmax) attention — O(S·chunk) memory, with
+    true FLOP reduction for sliding-window configs;
+  * sort-based capacity-dropping MoE routing (static shapes, SPMD-friendly);
+  * the paper's Case-III structured dropout on the *non-recurrent* direction:
+    the (normalized) residual-stream input of each sub-layer is consumed
+    through ``sdrop_matmul`` by the QKV / FFN-up projections, so FP/BP/WG all
+    run at (1-p) FLOPs; masks are uniform across the batch*seq rows of the
+    matmul and re-sampled per (layer, sub-layer, step).
+
+Params are ``distributed.sharding.Param``-tagged with logical axes; use
+``unzip`` to get (values, axes) and build NamedShardings for any mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sdrop
+from repro.core import sparse_matmul as sm
+from repro.core.sdrop import DropoutSpec
+from repro.distributed.sharding import tag, shard_act
+
+# ---------------------------------------------------------------------------
+# Configs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    dense_ff: int = 0            # arctic: parallel dense-residual FFN width
+    router_dtype: Any = jnp.float32
+    # local routing (beyond-paper §Perf): sort/capacity per data shard
+    # instead of globally. 1 = global (baseline). Set to the DP shard count
+    # (pod x data) to eliminate the global-sort/scatter collectives; the
+    # trade-off is per-shard (instead of global) capacity dropping.
+    local_shards: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str = "transformer"
+    num_layers: int = 2
+    d_model: int = 128
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: int = 0            # 0 -> d_model // n_heads
+    d_ff: int = 256
+    vocab: int = 256
+    mlp: str = "swiglu"          # swiglu | geglu | gelu_mlp
+    norm: str = "rmsnorm"        # rmsnorm | layernorm
+    qk_norm: bool = False        # qwen3
+    qkv_bias: bool = False       # qwen1.5
+    pos: str = "rope"            # rope | sinusoidal | none
+    rope_theta: float = 10000.0
+    window: Optional[int] = None          # sliding-window attention (mixtral)
+    moe: Optional[MoEConfig] = None
+    tie_embeddings: bool = False
+    scale_embed: bool = False    # gemma: embed * sqrt(d_model)
+    max_seq: int = 4096          # positional table length (sinusoidal)
+    # enc-dec (whisper)
+    is_encoder_decoder: bool = False
+    enc_layers: int = 0
+    enc_seq: int = 1500          # audio-frame count (frontend stub)
+    # frontend stub: inputs are precomputed embeddings, not token ids (pixtral)
+    embeds_in: bool = False
+    # numerics / execution
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.float32
+    attn_impl: str = "xla"       # xla (chunked online-softmax) | flash (Pallas)
+    q_chunk: int = 512
+    kv_chunk: int = 512
+    loss_chunks: int = 8
+    remat: str = "full"          # full | dots | none
+    # structured dropout (the paper's technique, NR direction)
+    nr_drop: DropoutSpec = DropoutSpec(rate=0.0)
+    ffn_inner_drop: DropoutSpec = DropoutSpec(rate=0.0)   # beyond-paper
+    kv_repeat: int = 1           # replicate kv heads for TP shardability
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def n_kv_eff(self) -> int:
+        return self.n_kv_heads * self.kv_repeat
+
+
+# ---------------------------------------------------------------------------
+# Positional encodings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd), positions: (..., S) int32 — rotate pairs."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., S, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_table(max_len: int, dim: int) -> jax.Array:
+    pos = jnp.arange(max_len, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, dim, 2, dtype=jnp.float32)
+                  * (-math.log(10000.0) / dim))
+    tab = jnp.zeros((max_len, dim))
+    tab = tab.at[:, 0::2].set(jnp.sin(pos * div))
+    tab = tab.at[:, 1::2].set(jnp.cos(pos * div))
+    return tab
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def norm_apply(kind, g, b, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+        return (y * g).astype(x.dtype)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.var(xf, -1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * g + b).astype(x.dtype)
+
+
+def init_norm(cfg, dim):
+    p = {"g": tag(jnp.ones((dim,), cfg.param_dtype), "norm")}
+    if cfg.norm == "layernorm":
+        p["b"] = tag(jnp.zeros((dim,), cfg.param_dtype), "norm")
+    return p
+
+
+def _norm(cfg, p, x):
+    return norm_apply(cfg.norm, p["g"], p.get("b"), x)
+
+
+# ---------------------------------------------------------------------------
+# Attention (chunked online-softmax; sliding window; GQA without kv repeat)
+# ---------------------------------------------------------------------------
+
+
+def _attn_chunk(q, k, v, qpos, kpos, *, causal, window, scale):
+    """One (q-chunk x kv-chunk) tile. q: (B,cq,Hkv,G,hd); k,v: (B,ck,Hkv,hd).
+    Returns (scores-exp sum l, running max m, weighted values o) pieces."""
+    s = jnp.einsum("bqkgd,bskd->bkgqs", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    mask = jnp.ones((q.shape[1], k.shape[1]), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    m = jnp.max(s, axis=-1)                                  # (B,Hkv,G,cq)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return m, l, o
+
+
+def chunked_attention(q, k, v, *, causal: bool, window: Optional[int],
+                      q_chunk: int, kv_chunk: int,
+                      q_offset: int = 0) -> jax.Array:
+    """Flash-style attention. q: (B,Sq,Hq,hd); k,v: (B,Sk,Hkv,hd).
+
+    Memory O(Sq·kv_chunk) per head; sliding-window configs slice a static
+    (window + q_chunk) kv span per q chunk => true FLOP reduction.
+    """
+    B, Sq, Hq, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = hd ** -0.5
+
+    def _pick(S, c):  # largest divisor of S that is <= c
+        c = min(c, S)
+        while S % c:
+            c -= 1
+        return c
+
+    cq, ck = _pick(Sq, q_chunk), _pick(Sk, kv_chunk)
+    nq = Sq // cq
+    qr = q.reshape(B, nq, cq, Hkv, G, hd)
+
+    use_window = window is not None and window < Sk
+
+    def per_q_chunk(qi, qc):
+        qpos = q_offset + qi * cq + jnp.arange(cq)
+        if use_window:
+            # static kv span [qstart - window, qstart + cq)
+            span = min(window + cq, Sk)
+            start = jnp.clip(qi * cq + q_offset - window, 0, Sk - span)
+            kw = jax.lax.dynamic_slice_in_dim(k, start, span, axis=1)
+            vw = jax.lax.dynamic_slice_in_dim(v, start, span, axis=1)
+            kpos = start + jnp.arange(span)
+            m, l, o = _attn_chunk(qc, kw, vw, qpos, kpos,
+                                  causal=causal, window=window, scale=scale)
+            return m, l, o
+
+        def kv_step(carry, inputs):
+            m_a, l_a, o_a = carry
+            kc, vc, kj = inputs
+            kpos = kj * ck + jnp.arange(ck)
+            m_c, l_c, o_c = _attn_chunk(qc, kc, vc, qpos, kpos,
+                                        causal=causal, window=window,
+                                        scale=scale)
+            m_n = jnp.maximum(m_a, m_c)
+            r_a = jnp.exp(m_a - m_n)
+            r_c = jnp.exp(m_c - m_n)
+            l_n = l_a * r_a + l_c * r_c
+            o_n = o_a * r_a[..., None] + o_c * r_c[..., None]
+            return (m_n, l_n, o_n), None
+
+        m0 = jnp.full((B, Hkv, G, cq), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, cq), jnp.float32)
+        o0 = jnp.zeros((B, Hkv, G, cq, hd), jnp.float32)
+        ks = k.reshape(B, Sk // ck, ck, Hkv, hd).transpose(1, 0, 2, 3, 4)
+        vs = v.reshape(B, Sk // ck, ck, Hkv, hd).transpose(1, 0, 2, 3, 4)
+        (m, l, o), _ = jax.lax.scan(kv_step, (m0, l0, o0),
+                                    (ks, vs, jnp.arange(Sk // ck)))
+        return m, l, o
+
+    def q_step(_, inputs):
+        qi, qc = inputs
+        m, l, o = per_q_chunk(qi, qc)
+        out = o / jnp.maximum(l[..., None], 1e-30)           # (B,Hkv,G,cq,hd)
+        out = out.transpose(0, 3, 1, 2, 4).reshape(B, cq, Hq, hd)
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None,
+                           (jnp.arange(nq), qr.transpose(1, 0, 2, 3, 4, 5)))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, Hq, hd)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window: Optional[int]):
+    """Single-token attention over a (B,Smax,Hkv,hd) cache. q: (B,1,Hq,hd)."""
+    B, _, Hq, hd = q.shape
+    Smax, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    qr = q.reshape(B, Hkv, G, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qr, k_cache,
+                   preferred_element_type=jnp.float32) * hd ** -0.5
+    idx = jnp.arange(Smax)
+    mask = idx <= pos
+    if window is not None:
+        mask &= idx > pos - window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, Hq, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Parameter init (stacked layers, Param-tagged)
+# ---------------------------------------------------------------------------
+
+
+def _dense_init(key, shape, axes, cfg, scale=None):
+    scale = scale if scale is not None else shape[0] ** -0.5
+    w = jax.random.normal(key, shape, jnp.float32) * scale
+    return tag(w.astype(cfg.param_dtype), *axes)
+
+
+def init_block_params(key, cfg: TransformerConfig, num_layers: int,
+                      cross_attn: bool = False):
+    """Stacked (L, ...) block params."""
+    D, H, KV, hd, F = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                       cfg.d_ff)
+    L = num_layers
+    ks = iter(jax.random.split(key, 32))
+    p = {
+        "ln1": {"g": tag(jnp.ones((L, D), cfg.param_dtype), "layer", "norm")},
+        "ln2": {"g": tag(jnp.ones((L, D), cfg.param_dtype), "layer", "norm")},
+        "wq": _dense_init(next(ks), (L, D, H * hd), ("layer", "embed", "heads"), cfg),
+        "wk": _dense_init(next(ks), (L, D, KV * hd), ("layer", "embed", "kv_heads"), cfg),
+        "wv": _dense_init(next(ks), (L, D, KV * hd), ("layer", "embed", "kv_heads"), cfg),
+        "wo": _dense_init(next(ks), (L, H * hd, D), ("layer", "heads", "embed"), cfg),
+    }
+    if cfg.norm == "layernorm":
+        p["ln1"]["b"] = tag(jnp.zeros((L, D), cfg.param_dtype), "layer", "norm")
+        p["ln2"]["b"] = tag(jnp.zeros((L, D), cfg.param_dtype), "layer", "norm")
+    if cfg.qkv_bias:
+        p["bq"] = tag(jnp.zeros((L, H * hd), cfg.param_dtype), "layer", "heads")
+        p["bk"] = tag(jnp.zeros((L, KV * hd), cfg.param_dtype), "layer", "kv_heads")
+        p["bv"] = tag(jnp.zeros((L, KV * hd), cfg.param_dtype), "layer", "kv_heads")
+    if cfg.qk_norm:
+        p["qn"] = tag(jnp.ones((L, hd), cfg.param_dtype), "layer", "head_dim")
+        p["kn"] = tag(jnp.ones((L, hd), cfg.param_dtype), "layer", "head_dim")
+    if cross_attn:
+        p["lnx"] = {"g": tag(jnp.ones((L, D), cfg.param_dtype), "layer", "norm")}
+        if cfg.norm == "layernorm":
+            p["lnx"]["b"] = tag(jnp.zeros((L, D), cfg.param_dtype), "layer", "norm")
+        p["xq"] = _dense_init(next(ks), (L, D, H * hd), ("layer", "embed", "heads"), cfg)
+        p["xk"] = _dense_init(next(ks), (L, D, KV * hd), ("layer", "embed", "kv_heads"), cfg)
+        p["xv"] = _dense_init(next(ks), (L, D, KV * hd), ("layer", "embed", "kv_heads"), cfg)
+        p["xo"] = _dense_init(next(ks), (L, H * hd, D), ("layer", "heads", "embed"), cfg)
+
+    if cfg.moe is not None:
+        E = cfg.moe.num_experts
+        p["router"] = _dense_init(next(ks), (L, D, E), ("layer", "embed", "expert"), cfg)
+        p["we_gate"] = _dense_init(next(ks), (L, E, D, F),
+                                   ("layer", "expert", "embed", "expert_mlp"), cfg)
+        p["we_up"] = _dense_init(next(ks), (L, E, D, F),
+                                 ("layer", "expert", "embed", "expert_mlp"), cfg)
+        p["we_down"] = _dense_init(next(ks), (L, E, F, D),
+                                   ("layer", "expert", "expert_mlp", "embed"), cfg,
+                                   scale=F ** -0.5)
+        if cfg.moe.dense_ff:
+            Fd = cfg.moe.dense_ff
+            p["w_gate"] = _dense_init(next(ks), (L, D, Fd), ("layer", "embed", "mlp"), cfg)
+            p["w_up"] = _dense_init(next(ks), (L, D, Fd), ("layer", "embed", "mlp"), cfg)
+            p["w_down"] = _dense_init(next(ks), (L, Fd, D), ("layer", "mlp", "embed"),
+                                      cfg, scale=Fd ** -0.5)
+    else:
+        if cfg.mlp in ("swiglu", "geglu"):
+            p["w_gate"] = _dense_init(next(ks), (L, D, F), ("layer", "embed", "mlp"), cfg)
+        p["w_up"] = _dense_init(next(ks), (L, D, F), ("layer", "embed", "mlp"), cfg)
+        p["w_down"] = _dense_init(next(ks), (L, F, D), ("layer", "mlp", "embed"),
+                                  cfg, scale=F ** -0.5)
+    return p
+
+
+def init_params(key, cfg: TransformerConfig):
+    k_e, k_b, k_enc, k_h = jax.random.split(key, 4)
+    p = {"blocks": init_block_params(k_b, cfg, cfg.num_layers,
+                                     cross_attn=cfg.is_encoder_decoder),
+         "ln_f": init_norm(cfg, cfg.d_model)}
+    if not cfg.embeds_in:
+        p["embed"] = tag(
+            (jax.random.normal(k_e, (cfg.vocab, cfg.d_model)) * 0.02
+             ).astype(cfg.param_dtype), "vocab", "embed")
+    if not cfg.tie_embeddings:
+        p["lm_head"] = _dense_init(k_h, (cfg.d_model, cfg.vocab),
+                                   ("embed", "vocab"), cfg)
+    if cfg.is_encoder_decoder:
+        p["enc_blocks"] = init_block_params(k_enc, cfg, cfg.enc_layers)
+        p["enc_ln_f"] = init_norm(cfg, cfg.d_model)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# MoE: sort-based capacity routing (static shapes)
+# ---------------------------------------------------------------------------
+
+
+def moe_ffn(pl, x2d, cfg: TransformerConfig, rules):
+    """x2d: (T, D) -> (T, D). Sort-by-expert, capacity-drop, grouped matmul.
+
+    With ``local_shards = S > 1`` the routing (sort / capacity / scatter /
+    gather) is vectorized over a leading shard dim that is data-sharded:
+    every routing op acts row-wise, so the SPMD partitioner keeps it fully
+    local — the global sort/scatter collectives of S=1 disappear, at the
+    cost of per-shard (instead of global) capacity dropping.
+    """
+    mcfg = cfg.moe
+    T, D = x2d.shape
+    E, K = mcfg.num_experts, mcfg.top_k
+    S = mcfg.local_shards if T % max(mcfg.local_shards, 1) == 0 else 1
+    S = max(S, 1)
+    Tl = T // S
+    C = max(1, int(math.ceil(Tl * K / E * mcfg.capacity_factor)))
+
+    x3 = x2d.reshape(S, Tl, D)
+    x3 = shard_act(x3, ("batch", None, "embed_act"), rules)
+
+    logits = jnp.einsum("std,de->ste", x3.astype(mcfg.router_dtype),
+                        pl["router"].astype(mcfg.router_dtype))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)          # (S, Tl, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    flat_e = expert_idx.reshape(S, Tl * K)
+    order = jnp.argsort(flat_e, axis=-1)                     # per-shard sort
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
+    # position of each token within its expert group (per shard)
+    first = jax.vmap(lambda se: jnp.searchsorted(se, se, side="left"))(
+        sorted_e)
+    pos_in_e = jnp.arange(Tl * K)[None] - first
+    valid = pos_in_e < C
+    dest = jnp.where(valid, sorted_e * C + pos_in_e, E * C)  # drop -> scratch
+
+    tok_idx = order // K                                     # (S, Tl*K)
+    xs = jnp.take_along_axis(x3, tok_idx[..., None], axis=1)
+    buf = jax.vmap(lambda d_, xs_: jnp.zeros((E * C + 1, D), x2d.dtype)
+                   .at[d_].set(xs_)[:-1])(dest, xs)
+    buf = buf.reshape(S, E, C, D)
+    buf = shard_act(buf, ("batch", "expert", "cap", "embed_act"), rules)
+
+    # grouped FFN (per-expert swiglu); expert_mlp dim is tensor-parallel
+    g = jnp.einsum("secd,edf->secf", buf, pl["we_gate"],
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("secd,edf->secf", buf, pl["we_up"],
+                   preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(x2d.dtype)
+    y_e = jnp.einsum("secf,efd->secd", h, pl["we_down"],
+                     preferred_element_type=jnp.float32).astype(x2d.dtype)
+    y_e = shard_act(y_e, ("batch", "expert", "cap", "embed_act"), rules)
+
+    # gather back, un-sort, combine top-k with gate weights
+    y_flat2 = y_e.reshape(S, E * C, D)
+    y_sorted = jnp.take_along_axis(
+        y_flat2, jnp.minimum(dest, E * C - 1)[..., None], axis=1) \
+        * valid[..., None]
+    inv = jnp.argsort(order, axis=-1)
+    y_unsorted = jnp.take_along_axis(y_sorted, inv[..., None], axis=1)
+    y = (y_unsorted.reshape(S, Tl, K, D)
+         * gate_vals[..., None].astype(x2d.dtype)).sum(axis=2)
+    return y.reshape(T, D)
+
+
+# ---------------------------------------------------------------------------
+# Block (attention + mlp/moe) — operates on one layer's params
+# ---------------------------------------------------------------------------
+
+
+def _proj_sdrop(x, w, b, drop_state):
+    """Projection consuming x through NR structured dropout (paper FP/BP/WG)."""
+    if drop_state is None or drop_state.inactive:
+        y = jnp.einsum("bsd,dn->bsn", x, w,
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+    elif drop_state.structured:
+        y = sm.sdrop_matmul(x, w, drop_state.keep_blocks,
+                            rate=drop_state.spec.rate,
+                            block_size=drop_state.spec.block_size,
+                            impl=drop_state.spec.impl,
+                            scale=drop_state.scale)
+    else:  # Case-I/II baseline: mask-multiply, dense matmul
+        xm = drop_state.apply(x)
+        y = jnp.einsum("bsd,dn->bsn", xm, w,
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+    return y + b if b is not None else y
+
+
+def _mlp(pl, h, cfg, drop_state, rules):
+    """Dense FFN with NR sdrop on input; optional FFN-inner structured drop."""
+    inner = cfg.ffn_inner_drop
+    if inner.structured and drop_state is not None and drop_state.inner_kb is not None:
+        kb, scale = drop_state.inner_kb, drop_state.inner_scale
+        bs = inner.block_size
+        up = sm.sdrop_matmul_out(h, pl["w_up"], kb, rate=inner.rate, block_size=bs)
+        if cfg.mlp in ("swiglu", "geglu"):
+            gt = sm.sdrop_matmul_out(h, pl["w_gate"], kb, rate=inner.rate, block_size=bs)
+            act = jax.nn.silu(gt) * up if cfg.mlp == "swiglu" else jax.nn.gelu(gt) * up
+        elif cfg.mlp == "relu2":
+            act = jnp.square(jax.nn.relu(up))
+        else:
+            act = jax.nn.gelu(up)
+        return sm.sdrop_matmul(act, pl["w_down"], kb, rate=inner.rate,
+                               block_size=bs, x_is_compact=True, scale=scale)
+    up = _proj_sdrop(h, pl["w_up"], None, drop_state)
+    if cfg.mlp in ("swiglu", "geglu"):
+        gt = _proj_sdrop(h, pl["w_gate"], None, drop_state)
+        act = jax.nn.silu(gt) * up if cfg.mlp == "swiglu" else jax.nn.gelu(gt) * up
+    elif cfg.mlp == "relu2":
+        act = jnp.square(jax.nn.relu(up))
+    else:
+        act = jax.nn.gelu(up)
+    y = jnp.einsum("bsf,fd->bsd", act, pl["w_down"],
+                   preferred_element_type=jnp.float32).astype(h.dtype)
+    return y
+
+
+def _qkv(pl, h, cfg, drop_state, positions, prefix=""):
+    B, S, _ = h.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    wq, wk, wv = pl[prefix + ("q" if prefix else "wq")], \
+        pl[prefix + ("k" if prefix else "wk")], \
+        pl[prefix + ("v" if prefix else "wv")]
+    bq = pl.get("bq") if not prefix else None
+    bk = pl.get("bk") if not prefix else None
+    bv = pl.get("bv") if not prefix else None
+    q = _proj_sdrop(h, wq, bq, drop_state).reshape(B, S, H, hd)
+    k = _proj_sdrop(h, wk, bk, drop_state).reshape(B, S, KV, hd)
+    v = _proj_sdrop(h, wv, bv, drop_state).reshape(B, S, KV, hd)
+    if cfg.qk_norm:
+        q = norm_apply("rmsnorm", pl["qn"], None, q)
+        k = norm_apply("rmsnorm", pl["kn"], None, k)
+    if cfg.pos == "rope" and positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    if cfg.kv_repeat > 1:
+        k = jnp.repeat(k, cfg.kv_repeat, axis=2)
+        v = jnp.repeat(v, cfg.kv_repeat, axis=2)
+    return q, k, v
+
+
+def block_apply(pl, x, cfg: TransformerConfig, *, causal: bool,
+                drop_states=(None, None), positions=None, rules=None,
+                memory=None, cache=None, cache_pos=None):
+    """One transformer block. Returns (x, new_cache_entry_or_None).
+
+    cache: {"k": (B,Smax,KVeff,hd), "v": ...} for decode (S==1 path).
+    memory: (B, T_enc, D) encoder output for cross-attention layers.
+    """
+    B, S, D = x.shape
+    d_attn, d_mlp = drop_states
+    new_cache = None
+
+    h = _norm(cfg, pl["ln1"], x)
+    q, k, v = _qkv(pl, h, cfg, d_attn, positions)
+
+    def _attend(q, k, v):
+        if cfg.attn_impl == "flash":
+            from repro.kernels.flash_attention import flash_attention
+            return flash_attention(q, k, v, causal, cfg.window,
+                                   cfg.q_chunk, cfg.kv_chunk)
+        if cfg.attn_impl == "identity":
+            # roofline instrumentation only: no mixing — isolates the
+            # attention contribution to the memory term (see §Perf).
+            G = q.shape[2] // k.shape[2]
+            return q * jnp.repeat(v, G, axis=2)
+        return chunked_attention(q, k, v, causal=causal, window=cfg.window,
+                                 q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+
+    if cache is not None:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, cache_pos, 1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, cache_pos, 1)
+        new_cache = {"k": k_cache, "v": v_cache}
+        if S == 1:
+            attn = decode_attention(q, k_cache, v_cache, cache_pos,
+                                    window=cfg.window)
+        else:  # prefill: attend within the freshly written span
+            attn = _attend(q, k, v)
+    else:
+        attn = _attend(q, k, v)
+    attn = attn.reshape(B, S, cfg.n_heads * cfg.hd)
+    x = x + jnp.einsum("bsn,nd->bsd", attn, pl["wo"],
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+
+    if memory is not None and "xq" in pl:
+        hx = _norm(cfg, pl["lnx"], x)
+        qx, kx, vx = _qkv({"xq": pl["xq"], "xk": pl["xk"], "xv": pl["xv"]},
+                          hx, cfg, None, None, prefix="x")
+        ax = chunked_attention(qx, kx, vx, causal=False, window=None,
+                               q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+        ax = ax.reshape(B, S, cfg.n_heads * cfg.hd)
+        x = x + jnp.einsum("bsn,nd->bsd", ax, pl["xo"],
+                           preferred_element_type=jnp.float32).astype(x.dtype)
+
+    h2 = _norm(cfg, pl["ln2"], x)
+    if cfg.moe is not None:
+        y2d = moe_ffn(pl, h2.reshape(B * S, D), cfg, rules).reshape(B, S, D)
+        if cfg.moe.dense_ff:
+            y2d = y2d + _mlp(pl, h2, cfg, d_mlp, rules)
+        x = x + y2d
+    else:
+        x = x + _mlp(pl, h2, cfg, d_mlp, rules)
+    x = shard_act(x, ("batch", "seq", "embed_act"), rules)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Dropout-state plumbing (per layer, per sub-layer, per step)
+# ---------------------------------------------------------------------------
+
+
+def _layer_drop_states(key, cfg: TransformerConfig, layer_idx, step, bs_shape):
+    """Two NR DropoutStates (attention-in, mlp-in) + optional FFN-inner ids.
+
+    bs_shape = (B, S): the random (Case-I/II) baseline samples a per-token
+    mask of that shape; structured cases sample kept-block ids over d_model.
+    """
+    from repro.core import masks as _m
+    if key is None or not (cfg.nr_drop.active or cfg.ffn_inner_drop.structured):
+        return (None, None)
+    k = jax.random.fold_in(key, layer_idx)
+    ka = sdrop.step_key(jax.random.fold_in(k, 0), cfg.nr_drop, step)
+    km = sdrop.step_key(jax.random.fold_in(k, 1), cfg.nr_drop, step)
+    ki = sdrop.step_key(jax.random.fold_in(k, 2), cfg.ffn_inner_drop, step)
+
+    def nr_state(kk):
+        if not cfg.nr_drop.active:
+            return sdrop.DropoutState(spec=cfg.nr_drop)
+        if cfg.nr_drop.batch_pattern == sdrop.BatchPattern.STRUCTURED:
+            return sdrop.make_state(kk, cfg.nr_drop, 0, cfg.d_model)
+        B, S = bs_shape
+        dm = _m.random_mask(kk, B * S, cfg.d_model, cfg.nr_drop.rate)
+        return sdrop.DropoutState(spec=cfg.nr_drop,
+                                  dense_mask=dm.reshape(B, S, cfg.d_model),
+                                  scale=1.0 / (1.0 - cfg.nr_drop.rate))
+
+    st_a, st_m = nr_state(ka), nr_state(km)
+    if cfg.ffn_inner_drop.structured and cfg.moe is None:
+        st_m.inner_kb = _m.sample_keep_blocks(
+            ki, cfg.d_ff, cfg.ffn_inner_drop.rate, cfg.ffn_inner_drop.block_size)
+        st_m.inner_scale = _m.inverted_scale(
+            cfg.ffn_inner_drop.rate, cfg.d_ff, cfg.ffn_inner_drop.block_size)
+    return (st_a, st_m)
+
+
+# ---------------------------------------------------------------------------
+# Full model: forward / loss / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def _remat(f, cfg):
+    if cfg.remat == "none":
+        return f
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            f, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(f)
+
+
+def _embed_tokens(params, tokens, cfg):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.compute_dtype)
+    return x
+
+
+def _run_stack(blocks, x, cfg, *, causal, positions, rules, drop_key, step,
+               memory=None, num_layers=None):
+    """scan over stacked layer params; remat per block."""
+    L = num_layers or cfg.num_layers
+
+    def body(x, inp):
+        pl, li = inp
+        ds = _layer_drop_states(drop_key, cfg, li, step, x.shape[:2])
+        y, _ = block_apply(pl, x, cfg, causal=causal, drop_states=ds,
+                           positions=positions, rules=rules, memory=memory)
+        return y, None
+
+    x, _ = jax.lax.scan(_remat(body, cfg), x, (blocks, jnp.arange(L)))
+    return x
+
+
+def encode(params, frames, cfg: TransformerConfig, rules=None):
+    """Whisper encoder: frames (B, T_enc, D) from the conv-frontend stub."""
+    pos = sinusoidal_table(frames.shape[1], cfg.d_model).astype(cfg.compute_dtype)
+    x = frames.astype(cfg.compute_dtype) + pos[None]
+    x = _run_stack(params["enc_blocks"], x, cfg, causal=False, positions=None,
+                   rules=rules, drop_key=None, step=0,
+                   num_layers=cfg.enc_layers)
+    return _norm(cfg, params["enc_ln_f"], x)
+
+
+def forward(params, inputs, cfg: TransformerConfig, *, rules=None,
+            drop_key=None, step=0, memory=None):
+    """Token/embeds -> final-norm features (B, S, D)."""
+    if cfg.embeds_in:
+        x = inputs.astype(cfg.compute_dtype)
+    else:
+        x = _embed_tokens(params, inputs, cfg)
+    B, S = x.shape[:2]
+    positions = jnp.arange(S)[None].repeat(B, 0)
+    if cfg.pos == "sinusoidal":
+        x = x + sinusoidal_table(S, cfg.d_model).astype(x.dtype)[None]
+        positions = None
+    x = shard_act(x, ("batch", "seq", "embed_act"), rules)
+    x = _run_stack(params["blocks"], x, cfg, causal=True, positions=positions,
+                   rules=rules, drop_key=drop_key, step=step, memory=memory)
+    return _norm(cfg, params["ln_f"], x)
+
+
+def lm_logits(params, feats, cfg):
+    w = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    return jnp.einsum("bsd,dv->bsv", feats, w,
+                      preferred_element_type=jnp.float32)
+
+
+def lm_loss(params, feats, labels, cfg: TransformerConfig, rules=None):
+    """Chunked softmax-xent over the sequence: live logits = S/loss_chunks."""
+    B, S, D = feats.shape
+    n = cfg.loss_chunks
+    while S % n:
+        n -= 1
+    fs = feats.reshape(B, n, S // n, D).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, n, S // n).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def chunk(carry, inp):
+        f, l = inp
+        logits = lm_logits(params, f, cfg)
+        logits = shard_act(logits, ("batch", "seq", "vocab"), rules)
+        lp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(lp, l[..., None], axis=-1).squeeze(-1)
+        return carry + nll.sum(), None
+
+    total, _ = jax.lax.scan(chunk, jnp.zeros((), jnp.float32), (fs, ls))
+    return total / (B * S)
+
+
+def loss_fn(params, batch, cfg: TransformerConfig, *, rules=None,
+            drop_key=None, step=0):
+    """Training loss. batch: {"tokens" | "embeds", "labels", ["frames"]}."""
+    memory = None
+    if cfg.is_encoder_decoder:
+        memory = encode(params, batch["frames"], cfg, rules=rules)
+    inputs = batch["embeds"] if cfg.embeds_in else batch["tokens"]
+    feats = forward(params, inputs, cfg, rules=rules, drop_key=drop_key,
+                    step=step, memory=memory)
+    return lm_loss(params, feats, batch["labels"], cfg, rules=rules)
+
+
+# -------------------------- serving ---------------------------------------
+
+
+def init_cache(cfg: TransformerConfig, batch: int, max_seq: int,
+               dtype=None):
+    """KV cache pytree: stacked (L, B, Smax, KVeff, hd) + cross-KV if enc-dec."""
+    dtype = dtype or cfg.compute_dtype
+    L, KV, hd = cfg.num_layers, cfg.n_kv_eff, cfg.hd
+    c = {"k": jnp.zeros((L, batch, max_seq, KV, hd), dtype),
+         "v": jnp.zeros((L, batch, max_seq, KV, hd), dtype)}
+    if cfg.is_encoder_decoder:
+        c["xk"] = jnp.zeros((L, batch, cfg.enc_seq, KV, hd), dtype)
+        c["xv"] = jnp.zeros((L, batch, cfg.enc_seq, KV, hd), dtype)
+    return c
+
+
+def cache_axes():
+    return ("layer", "batch", "kv_seq", "kv_heads", "head_dim")
+
+
+def prefill(params, tokens_or_embeds, cfg: TransformerConfig, cache, *,
+            rules=None, memory=None):
+    """Forward pass that also fills the KV cache; returns (feats, cache)."""
+    if cfg.embeds_in:
+        x = tokens_or_embeds.astype(cfg.compute_dtype)
+    else:
+        x = _embed_tokens(params, tokens_or_embeds, cfg)
+    B, S = x.shape[:2]
+    positions = jnp.arange(S)[None].repeat(B, 0)
+    if cfg.pos == "sinusoidal":
+        x = x + sinusoidal_table(S, cfg.d_model).astype(x.dtype)[None]
+        positions = None
+    x = shard_act(x, ("batch", "seq", "embed_act"), rules)
+
+    if memory is not None:
+        # Precompute cross K/V into the cache (whisper decode path).
+        def xkv(carry, pl):
+            kx = jnp.einsum("btd,dn->btn", memory, pl["xk"]).reshape(
+                B, -1, cfg.n_kv_heads, cfg.hd)
+            vx = jnp.einsum("btd,dn->btn", memory, pl["xv"]).reshape(
+                B, -1, cfg.n_kv_heads, cfg.hd)
+            if cfg.kv_repeat > 1:
+                kx = jnp.repeat(kx, cfg.kv_repeat, axis=2)
+                vx = jnp.repeat(vx, cfg.kv_repeat, axis=2)
+            return carry, (kx, vx)
+
+        _, (xk, xv) = jax.lax.scan(xkv, None, params["blocks"])
+        cache = {**cache, "xk": xk.astype(cache["xk"].dtype),
+                 "xv": xv.astype(cache["xv"].dtype)}
+
+    def body(x, inp):
+        pl, entry = inp
+        y, new_entry = block_apply(
+            pl, x, cfg, causal=True, positions=positions, rules=rules,
+            memory=memory, cache={"k": entry["k"], "v": entry["v"]},
+            cache_pos=0)
+        return y, new_entry
+
+    entries = {"k": cache["k"], "v": cache["v"]}
+    x, new_entries = jax.lax.scan(_remat(body, cfg), x,
+                                  (params["blocks"], entries))
+    cache = {**cache, **new_entries}
+    return _norm(cfg, params["ln_f"], x), cache
+
+
+def decode_step(params, cfg: TransformerConfig, cache, tokens, pos, *,
+                rules=None):
+    """One decode step. tokens: (B, 1) int32 (or (B,1,D) embeds); pos scalar.
+
+    Returns (logits (B,1,V) fp32, updated cache)."""
+    if cfg.embeds_in:
+        x = tokens.astype(cfg.compute_dtype)
+    else:
+        x = _embed_tokens(params, tokens, cfg)
+    B = x.shape[0]
+    if cfg.pos == "sinusoidal":
+        x = x + jax.lax.dynamic_slice_in_dim(
+            sinusoidal_table(cfg.max_seq, cfg.d_model).astype(x.dtype),
+            pos, 1, axis=0)[None]
+        positions = None
+    else:
+        positions = jnp.full((B, 1), pos, jnp.int32)
+
+    def body(x, inp):
+        pl, entry = inp
+        mem_kv = None
+        if cfg.is_encoder_decoder:
+            mem_kv = (entry["xk"], entry["xv"])
+        y, new_entry = _decode_block(pl, x, cfg, entry, pos, positions,
+                                     rules, mem_kv)
+        return y, new_entry
+
+    x, new_entries = jax.lax.scan(body, x, (params["blocks"], cache))
+    x = _norm(cfg, params["ln_f"], x)
+    logits = lm_logits(params, x, cfg)
+    logits = shard_act(logits, ("batch", "seq", "vocab"), rules)
+    return logits, new_entries
+
+
+def _decode_block(pl, x, cfg, entry, pos, positions, rules, mem_kv):
+    B = x.shape[0]
+    h = _norm(cfg, pl["ln1"], x)
+    q, k, v = _qkv(pl, h, cfg, None, positions)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(entry["k"], k, pos, 1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(entry["v"], v, pos, 1)
+    attn = decode_attention(q, k_cache, v_cache, pos, window=cfg.window)
+    attn = attn.reshape(B, 1, cfg.n_heads * cfg.hd)
+    x = x + jnp.einsum("bsn,nd->bsd", attn, pl["wo"],
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+    if mem_kv is not None:
+        hx = _norm(cfg, pl["lnx"], x)
+        qx = jnp.einsum("bsd,dn->bsn", hx, pl["xq"]).reshape(
+            B, 1, cfg.n_heads, cfg.hd)
+        xk, xv = mem_kv
+        ax = decode_attention(qx, xk, xv, xk.shape[1] - 1, window=None)
+        ax = ax.reshape(B, 1, cfg.n_heads * cfg.hd)
+        x = x + jnp.einsum("bsn,nd->bsd", ax, pl["xo"],
+                           preferred_element_type=jnp.float32).astype(x.dtype)
+    h2 = _norm(cfg, pl["ln2"], x)
+    if cfg.moe is not None:
+        y = moe_ffn(pl, h2.reshape(B, -1), cfg, rules).reshape(B, 1, -1)
+        if cfg.moe.dense_ff:
+            y = y + _mlp(pl, h2, cfg, None, rules)
+        x = x + y
+    else:
+        x = x + _mlp(pl, h2, cfg, None, rules)
+    new_entry = {**entry, "k": k_cache, "v": v_cache}
+    return x, new_entry

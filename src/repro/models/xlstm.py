@@ -1,0 +1,589 @@
+"""xLSTM (sLSTM + mLSTM blocks) — arXiv:2405.04517, TPU-native forms.
+
+The assigned xlstm-1.3b is the closest architecture to the paper's own scope:
+sLSTM blocks have a true hidden-to-hidden recurrence, so the paper's
+**RH structured dropout** applies natively (the recurrent matmul consumes
+``h_{t-1}`` through ``sdrop_matmul``); mLSTM has a linear (matrix-memory)
+recurrence with no h-to-h weight, so only the NR direction applies there.
+
+Forms chosen for TPU:
+  * mLSTM — *chunkwise-parallel* linear attention with exponential-gate
+    log-space stabilization (the sequential form would serialize T steps of
+    rank-1 updates; chunkwise turns it into MXU matmuls, ~c× fewer FLOPs).
+  * sLSTM — time scan (inherently sequential, as in the paper), with
+    block-diagonal per-head recurrent weights. The RH mask is shared across
+    heads so compacted recurrent matmul shapes stay static.
+
+Block layout (1.3b): every ``slstm_every``-th block is sLSTM, rest mLSTM,
+stacked-weight scans per group for O(1) HLO in depth.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import masks as _masks
+from repro.core import sdrop
+from repro.core import sparse_matmul as sm
+from repro.core.sdrop import DropoutSpec
+from repro.distributed.sharding import tag, shard_act
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    name: str = "xlstm"
+    num_layers: int = 8
+    d_model: int = 128
+    n_heads: int = 4
+    vocab: int = 256
+    proj_factor: float = 2.0      # mLSTM inner = pf * d_model
+    slstm_every: int = 8          # every k-th block is sLSTM
+    conv_kernel: int = 4
+    chunk: int = 64               # mLSTM chunk length
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.float32
+    loss_chunks: int = 8
+    remat: str = "full"
+    nr_drop: DropoutSpec = DropoutSpec(rate=0.0)
+    rh_drop: DropoutSpec = DropoutSpec(rate=0.0)   # sLSTM recurrent direction
+    # §Perf (EXPERIMENTS.md xlstm iter 3): keep the sLSTM h carry replicated
+    # so the per-step RH compaction gather stays local. Off by default =
+    # the paper-faithful baseline recorded in the §Roofline table.
+    pin_h_carry: bool = False
+
+    @property
+    def inner(self) -> int:
+        return int(self.proj_factor * self.d_model)
+
+    @property
+    def dh_m(self) -> int:       # mLSTM per-head dim
+        return self.inner // self.n_heads
+
+    @property
+    def dh_s(self) -> int:       # sLSTM per-head dim
+        return self.d_model // self.n_heads
+
+    @property
+    def layer_kinds(self):
+        """('m'|'s') per layer."""
+        return tuple("s" if (i + 1) % self.slstm_every == 0 else "m"
+                     for i in range(self.num_layers))
+
+
+# ---------------------------------------------------------------------------
+# mLSTM: chunkwise-parallel matrix-memory cell
+# ---------------------------------------------------------------------------
+
+
+def mlstm_chunkwise(q, k, v, lf, li, chunk: int, initial=None):
+    """Stabilized chunkwise mLSTM.
+
+    q,k,v: (B, H, S, d); lf: (B, H, S) log-sigmoid forget; li: (B, H, S) log
+    input gate (unbounded). Returns (h (B,H,S,d), final (C, n, m)).
+
+      C_t = f_t C_{t-1} + i_t k_t v_t^T ;  n_t = f_t n_{t-1} + i_t k_t
+      h_t = (q_t^T C_t) / max(|q_t^T n_t|, exp(-m_t))
+    """
+    B, H, S, d = q.shape
+    c = min(chunk, S)
+    while S % c:
+        c -= 1
+    nc = S // c
+    scale = d ** -0.5
+
+    qc = q.reshape(B, H, nc, c, d).transpose(2, 0, 1, 3, 4)
+    kc = k.reshape(B, H, nc, c, d).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(B, H, nc, c, d).transpose(2, 0, 1, 3, 4)
+    lfc = lf.reshape(B, H, nc, c).transpose(2, 0, 1, 3)
+    lic = li.reshape(B, H, nc, c).transpose(2, 0, 1, 3)
+
+    if initial is None:
+        C0 = jnp.zeros((B, H, d, d), jnp.float32)
+        n0 = jnp.zeros((B, H, d), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = initial
+
+    def chunk_step(carry, inp):
+        C, n, m = carry                          # stabilized: true C = C*exp(m)
+        qq, kk, vv, lff, lii = inp
+        b = jnp.cumsum(lff, axis=-1)             # (B,H,c) incl. own lf
+        Mt = jax.lax.cummax(lii - b, axis=lii.ndim - 1)  # running max of (li-b)
+        m_t = b + jnp.maximum(m[..., None], Mt)  # per-step stabilizer
+        w_inter = jnp.exp(m[..., None] + b - m_t)            # (B,H,c)
+        # intra decay matrix D[t,tau] = exp(b_t - b_tau + li_tau - m_t), tau<=t
+        logD = (b[..., :, None] - b[..., None, :] + lii[..., None, :]
+                - m_t[..., :, None])
+        tri = jnp.tril(jnp.ones((c, c), bool))
+        D = jnp.where(tri[None, None], jnp.exp(logD), 0.0)
+
+        s = jnp.einsum("bhtd,bhsd->bhts", qq, kk,
+                       preferred_element_type=jnp.float32) * scale
+        inter_h = jnp.einsum("bhtd,bhdv->bhtv", qq, C,
+                             preferred_element_type=jnp.float32) * scale
+        h_num = (jnp.einsum("bhts,bhsv->bhtv", s * D, vv,
+                            preferred_element_type=jnp.float32)
+                 + inter_h * w_inter[..., None])
+        # normalizer n_t = w_inter * n0 + sum_tau D[t,tau] k_tau
+        n_t = (jnp.einsum("bhts,bhsd->bhtd", D, kk,
+                          preferred_element_type=jnp.float32)
+               + n[..., None, :] * w_inter[..., None])
+        qn_t = jnp.einsum("bhtd,bhtd->bht", qq, n_t,
+                          preferred_element_type=jnp.float32) * scale
+        denom = jnp.maximum(jnp.abs(qn_t), jnp.exp(-m_t))
+        h = h_num / denom[..., None]
+
+        # end-of-chunk state
+        b_end = b[..., -1:]                      # (B,H,1)
+        m_end = b_end[..., 0] + jnp.maximum(m, Mt[..., -1])
+        w_c = jnp.exp(b_end[..., 0] + m - m_end)             # carry decay
+        w_k = jnp.exp(b_end - b + lii - m_end[..., None])    # (B,H,c)
+        C_new = (C * w_c[..., None, None]
+                 + jnp.einsum("bhsd,bhsv->bhdv", kk * w_k[..., None], vv,
+                              preferred_element_type=jnp.float32))
+        n_new = n * w_c[..., None] + jnp.einsum(
+            "bhs,bhsd->bhd", w_k, kk, preferred_element_type=jnp.float32)
+        return (C_new, n_new, m_end), h
+
+    (Cf, nf, mf), hs = jax.lax.scan(chunk_step, (C0, n0, m0),
+                                    (qc, kc, vc, lfc, lic))
+    h = hs.transpose(1, 2, 0, 3, 4).reshape(B, H, S, d)
+    return h.astype(q.dtype), (Cf, nf, mf)
+
+
+def mlstm_decode(q, k, v, lf, li, state):
+    """One-token mLSTM step. q,k,v: (B,H,d); lf,li: (B,H). state=(C,n,m)."""
+    C, n, m = state
+    d = q.shape[-1]
+    scale = d ** -0.5
+    m_new = jnp.maximum(lf + m, li)
+    fw = jnp.exp(lf + m - m_new)
+    iw = jnp.exp(li - m_new)
+    C = C * fw[..., None, None] + iw[..., None, None] * (
+        k[..., :, None] * v[..., None, :])
+    n = n * fw[..., None] + iw[..., None] * k
+    h_num = jnp.einsum("bhd,bhdv->bhv", q, C,
+                       preferred_element_type=jnp.float32) * scale
+    qn = jnp.einsum("bhd,bhd->bh", q, n,
+                    preferred_element_type=jnp.float32) * scale
+    denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_new))
+    return (h_num / denom[..., None]).astype(q.dtype), (C, n, m_new)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM: scalar-memory cell with true h->h recurrence (paper's RH territory)
+# ---------------------------------------------------------------------------
+
+
+def slstm_step(x_gates, h_prev, state, R, *, rh_state=None, rules=None,
+               pin_h=False):
+    """One sLSTM step for all heads.
+
+    x_gates: (B, 4*Dh_total) from the input projection (i,f,z,o layout);
+    h_prev: (B, H, dh); state: (c, n, m) each (B, H, dh); R: (H, dh, 4dh)
+    block-diagonal recurrent weights. ``rh_state`` is the RH structured
+    DropoutState: kept-unit ids over dh, shared across heads, re-sampled per
+    step (Case-III). The recurrent matmul is compacted accordingly.
+    """
+    B, H, dh = h_prev.shape
+    c, n, m = state
+    if rh_state is not None and rh_state.structured:
+        ids = _masks.keep_blocks_to_unit_ids(rh_state.keep_blocks,
+                                             rh_state.spec.block_size) \
+            if rh_state.spec.block_size > 1 else rh_state.keep_blocks
+        h_c = jnp.take(h_prev, ids, axis=-1) * rh_state.scale
+        R_c = jnp.take(R, ids, axis=1)
+        r_gates = jnp.einsum("bhk,hkg->bhg", h_c, R_c,
+                             preferred_element_type=jnp.float32)
+    elif rh_state is not None and rh_state.dense_mask is not None:
+        hm = h_prev * rh_state.dense_mask.reshape(h_prev.shape) * rh_state.scale
+        r_gates = jnp.einsum("bhd,hdg->bhg", hm, R,
+                             preferred_element_type=jnp.float32)
+    else:
+        r_gates = jnp.einsum("bhd,hdg->bhg", h_prev, R,
+                             preferred_element_type=jnp.float32)
+    gates = x_gates.reshape(B, H, 4 * dh) + r_gates
+    gi, gf, gz, go = jnp.split(gates, 4, axis=-1)
+    # exponential input gate, sigmoid-in-log-space forget, stabilizer m
+    lf = jax.nn.log_sigmoid(gf)
+    m_new = jnp.maximum(lf + m, gi)
+    i = jnp.exp(gi - m_new)
+    f = jnp.exp(lf + m - m_new)
+    z = jnp.tanh(gz)
+    o = jax.nn.sigmoid(go)
+    c_new = f * c + i * z
+    n_new = f * n + i
+    h_new = o * (c_new / jnp.maximum(n_new, 1e-6))
+    if rules is not None and pin_h:
+        # §Perf (EXPERIMENTS.md xlstm iter 3): replicate the h carry on
+        # feature dims so the next step's RH compaction gather (traced
+        # kept-unit ids) is LOCAL — otherwise GSPMD all-gathers R/h per
+        # time step (~400GB over the step loop at 4k seq). Costs one tiny
+        # (B,H,dh) all-gather per step. Confirmed 1.21x on the dominant
+        # roofline term.
+        h_new = shard_act(h_new, ("batch", None, None), rules)
+    return h_new, (c_new, n_new, m_new)
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B,S,D), w: (K,D)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    return out + b
+
+
+def _proj_sdrop(x, w, drop_state):
+    if drop_state is None or drop_state.inactive:
+        return jnp.einsum("bsd,dn->bsn", x, w,
+                          preferred_element_type=jnp.float32).astype(x.dtype)
+    if drop_state.structured:
+        return sm.sdrop_matmul(x, w, drop_state.keep_blocks,
+                               rate=drop_state.spec.rate,
+                               block_size=drop_state.spec.block_size,
+                               scale=drop_state.scale)
+    return jnp.einsum("bsd,dn->bsn", drop_state.apply(x), w,
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def init_mlstm_block(key, cfg: XLSTMConfig, L: int):
+    D, I, H = cfg.d_model, cfg.inner, cfg.n_heads
+    pd = cfg.param_dtype
+    ks = iter(jax.random.split(key, 12))
+
+    def w(shape, axes, scale=None):
+        s = scale if scale is not None else shape[-2] ** -0.5
+        return tag((jax.random.normal(next(ks), shape) * s).astype(pd), *axes)
+
+    return {
+        "ln": {"g": tag(jnp.ones((L, D), pd), "layer", "norm")},
+        "w_up": w((L, D, 2 * I), ("layer", "embed", "mlp")),
+        "conv_w": tag(jnp.zeros((L, cfg.conv_kernel, I), pd), "layer", "conv", "mlp"),
+        "conv_b": tag(jnp.zeros((L, I), pd), "layer", "mlp"),
+        "wq": w((L, I, I), ("layer", "mlp", "heads")),
+        "wk": w((L, I, I), ("layer", "mlp", "heads")),
+        "wv": w((L, I, I), ("layer", "mlp", "heads")),
+        "w_gates": w((L, I, 2 * H), ("layer", "mlp", "heads"), scale=I ** -0.5),
+        "b_gates": tag(jnp.concatenate(
+            [jnp.zeros((L, H)), jnp.linspace(3.0, 6.0, H)[None].repeat(L, 0)],
+            -1).astype(pd), "layer", "heads"),
+        "gn": {"g": tag(jnp.ones((L, I), pd), "layer", "norm")},
+        "w_down": w((L, I, D), ("layer", "mlp", "embed")),
+    }
+
+
+def init_slstm_block(key, cfg: XLSTMConfig, L: int):
+    D, H, dh = cfg.d_model, cfg.n_heads, cfg.dh_s
+    pd = cfg.param_dtype
+    Fu = int(4 * D / 3) // 2 * 2   # gated-FFN width (pf 4/3)
+    ks = iter(jax.random.split(key, 8))
+
+    def w(shape, axes, scale=None):
+        s = scale if scale is not None else shape[-2] ** -0.5
+        return tag((jax.random.normal(next(ks), shape) * s).astype(pd), *axes)
+
+    return {
+        "ln": {"g": tag(jnp.ones((L, D), pd), "layer", "norm")},
+        "w_gates": w((L, D, 4 * D), ("layer", "embed", "heads")),
+        "b_gates": tag(jnp.zeros((L, 4 * D), pd), "layer", "heads"),
+        "R": w((L, H, dh, 4 * dh), ("layer", "heads", "head_dim", "state"),
+               scale=dh ** -0.5),
+        "gn": {"g": tag(jnp.ones((L, D), pd), "layer", "norm")},
+        "ln2": {"g": tag(jnp.ones((L, D), pd), "layer", "norm")},
+        "w_up1": w((L, D, Fu), ("layer", "embed", "mlp")),
+        "w_up2": w((L, D, Fu), ("layer", "embed", "mlp")),
+        "w_down": w((L, Fu, D), ("layer", "mlp", "embed")),
+    }
+
+
+def init_params(key, cfg: XLSTMConfig):
+    kinds = cfg.layer_kinds
+    n_m, n_s = kinds.count("m"), kinds.count("s")
+    k_e, k_m, k_s, k_h = jax.random.split(key, 4)
+    p = {
+        "embed": tag((jax.random.normal(k_e, (cfg.vocab, cfg.d_model)) * 0.02
+                      ).astype(cfg.param_dtype), "vocab", "embed"),
+        "mlstm": init_mlstm_block(k_m, cfg, n_m) if n_m else None,
+        "slstm": init_slstm_block(k_s, cfg, n_s) if n_s else None,
+        "ln_f": {"g": tag(jnp.ones((cfg.d_model,), cfg.param_dtype), "norm")},
+        "lm_head": tag((jax.random.normal(k_h, (cfg.d_model, cfg.vocab))
+                        * cfg.d_model ** -0.5).astype(cfg.param_dtype),
+                       "embed", "vocab"),
+    }
+    return p
+
+
+def _rms(g, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    return (y * g).astype(x.dtype)
+
+
+def _group_rms(g, x, H, eps=1e-6):
+    """Per-head RMS norm over the head dim. x: (..., H*dh)."""
+    shp = x.shape
+    xf = x.reshape(*shp[:-1], H, shp[-1] // H).astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    return (y.reshape(shp) * g).astype(x.dtype)
+
+
+def mlstm_block_apply(pl, x, cfg: XLSTMConfig, drop_state=None, initial=None,
+                      rules=None):
+    """x: (B,S,D) -> (B,S,D). Returns (y, final_state)."""
+    B, S, D = x.shape
+    H, I = cfg.n_heads, cfg.inner
+    h = _rms(pl["ln"]["g"], x)
+    up = _proj_sdrop(h, pl["w_up"], drop_state)          # NR structured drop
+    u, z = jnp.split(up, 2, axis=-1)
+    uc = jax.nn.silu(_causal_conv(u, pl["conv_w"], pl["conv_b"]))
+    q = jnp.einsum("bsi,ij->bsj", uc, pl["wq"]).reshape(B, S, H, -1)
+    k = jnp.einsum("bsi,ij->bsj", uc, pl["wk"]).reshape(B, S, H, -1)
+    v = jnp.einsum("bsi,ij->bsj", u, pl["wv"]).reshape(B, S, H, -1)
+    gates = jnp.einsum("bsi,ig->bsg", uc, pl["w_gates"]) + pl["b_gates"]
+    li, gf = jnp.split(gates, 2, axis=-1)                # (B,S,H) each
+    lf = jax.nn.log_sigmoid(gf)
+    # §Perf note (EXPERIMENTS.md, xlstm iterations 1-2): explicit q/k/v
+    # layout pinning before the chunk scan was tried twice (full feature
+    # replication; dv-sharded cell) and REFUTED both times — GSPMD's bwd
+    # pass hits involuntary full rematerialization on the pinned layouts.
+    # The mLSTM chunk scan is left to GSPMD propagation.
+    hcell, state = mlstm_chunkwise(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), lf.transpose(0, 2, 1),
+        li.transpose(0, 2, 1), cfg.chunk, initial=initial)
+    hcell = hcell.transpose(0, 2, 1, 3).reshape(B, S, I)
+    out = _group_rms(pl["gn"]["g"], hcell, H) * jax.nn.silu(z)
+    y = jnp.einsum("bsi,id->bsd", out, pl["w_down"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    return x + y, state
+
+
+def slstm_block_apply(pl, x, cfg: XLSTMConfig, nr_state=None, rh_key=None,
+                      initial=None, step0: int = 0, rules=None):
+    """sLSTM block with scan over time; RH structured dropout per step."""
+    B, S, D = x.shape
+    H, dh = cfg.n_heads, cfg.dh_s
+    h = _rms(pl["ln"]["g"], x)
+    xg = _proj_sdrop(h, pl["w_gates"], nr_state) + pl["b_gates"]  # (B,S,4D)
+
+    if initial is None:
+        zeros = jnp.zeros((B, H, dh), jnp.float32)
+        h0, st0 = zeros, (zeros, zeros, jnp.full((B, H, dh), -1e30))
+    else:
+        h0, st0 = initial
+
+    def step(carry, inp):
+        h_prev, st = carry
+        xg_t, t = inp
+        rh = None
+        if rh_key is not None and cfg.rh_drop.active:
+            k_t = sdrop.step_key(rh_key, cfg.rh_drop, t)
+            rh = sdrop.make_state(k_t, cfg.rh_drop, B, dh)
+        h_new, st_new = slstm_step(xg_t, h_prev, st, pl["R"], rh_state=rh,
+                                   rules=rules, pin_h=cfg.pin_h_carry)
+        return (h_new, st_new), h_new
+
+    (hf, stf), hs = jax.lax.scan(step, (h0, st0),
+                                 (xg.transpose(1, 0, 2),
+                                  step0 + jnp.arange(S)))
+    hs = hs.transpose(1, 0, 2, 3).reshape(B, S, D).astype(x.dtype)
+    out = _group_rms(pl["gn"]["g"], hs, H)
+    x = x + out
+    # gated FFN (pf 4/3)
+    h2 = _rms(pl["ln2"]["g"], x)
+    u1 = _proj_sdrop(h2, pl["w_up1"], nr_state)
+    u2 = _proj_sdrop(h2, pl["w_up2"], nr_state)
+    y = jnp.einsum("bsf,fd->bsd", jax.nn.gelu(u1) * u2, pl["w_down"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    return x + y, (hf, stf)
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+
+def _drop_state(key, cfg, layer_idx, kind_idx, step):
+    if key is None or not cfg.nr_drop.active:
+        return None
+    k = jax.random.fold_in(jax.random.fold_in(key, layer_idx), kind_idx)
+    k = sdrop.step_key(k, cfg.nr_drop, step)
+    return sdrop.make_state(k, cfg.nr_drop, 0, cfg.d_model)
+
+
+def forward(params, tokens, cfg: XLSTMConfig, *, rules=None, drop_key=None,
+            step=0):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+    x = shard_act(x, ("batch", "seq", "embed_act"), rules)
+    kinds = cfg.layer_kinds
+    n_groups = kinds.count("s")
+    per_group = cfg.slstm_every - 1
+
+    def m_scan(x, blocks, base, count):
+        def body(x, inp):
+            pl, li = inp
+            ds = _drop_state(drop_key, cfg, li, 0, step)
+            y, _ = mlstm_block_apply(pl, x, cfg, drop_state=ds, rules=rules)
+            return y, None
+        f = jax.checkpoint(body) if cfg.remat != "none" else body
+        x, _ = jax.lax.scan(f, x, (blocks, base + jnp.arange(count)))
+        return x
+
+    if n_groups == 0:
+        return _finish(params, m_scan(x, params["mlstm"], 0, len(kinds)), cfg)
+
+    # groups of (per_group mLSTM + 1 sLSTM), then trailing mLSTMs
+    mt = params["mlstm"]
+    st = params["slstm"]
+    mi = 0
+    for g in range(n_groups):
+        grp = jax.tree.map(lambda a: a[mi:mi + per_group], mt)
+        x = m_scan(x, grp, g * cfg.slstm_every, per_group)
+        sl = jax.tree.map(lambda a: a[g], st)
+        nr = _drop_state(drop_key, cfg, g * cfg.slstm_every + per_group, 1, step)
+        rhk = (jax.random.fold_in(drop_key, 10_000 + g)
+               if drop_key is not None else None)
+        x, _ = slstm_block_apply(sl, x, cfg, nr_state=nr, rh_key=rhk,
+                                 rules=rules)
+        mi += per_group
+    n_m = kinds.count("m")
+    if mi < n_m:
+        grp = jax.tree.map(lambda a: a[mi:], mt)
+        x = m_scan(x, grp, n_groups * cfg.slstm_every, n_m - mi)
+    return _finish(params, x, cfg)
+
+
+def _finish(params, x, cfg):
+    return _rms(params["ln_f"]["g"], x)
+
+
+def lm_logits(params, feats):
+    return jnp.einsum("bsd,dv->bsv", feats, params["lm_head"],
+                      preferred_element_type=jnp.float32)
+
+
+def loss_fn(params, batch, cfg: XLSTMConfig, *, rules=None, drop_key=None,
+            step=0):
+    feats = forward(params, batch["tokens"], cfg, rules=rules,
+                    drop_key=drop_key, step=step)
+    tcfg = T.TransformerConfig(vocab=cfg.vocab, d_model=cfg.d_model,
+                               loss_chunks=cfg.loss_chunks)
+    return T.lm_loss({"lm_head": params["lm_head"]}, feats, batch["labels"],
+                     tcfg, rules=rules)
+
+
+# ------------------------------- serving ----------------------------------
+
+
+def init_state(cfg: XLSTMConfig, batch: int, dtype=jnp.float32):
+    """Recurrent serving state (O(1) per token; long_500k runs on this).
+
+    Cell states (C/n/m) are fp32 for numerical stability over 500k steps;
+    the conv ring buffer matches the compute dtype (it feeds matmuls)."""
+    kinds = cfg.layer_kinds
+    n_m, n_s = kinds.count("m"), kinds.count("s")
+    H, dm, dh = cfg.n_heads, cfg.dh_m, cfg.dh_s
+    state = {
+        "m_C": jnp.zeros((n_m, batch, H, dm, dm), dtype),
+        "m_n": jnp.zeros((n_m, batch, H, dm), dtype),
+        "m_m": jnp.full((n_m, batch, H), -1e30, dtype),
+        "m_conv": jnp.zeros((n_m, batch, cfg.conv_kernel - 1, cfg.inner),
+                            cfg.compute_dtype),
+    }
+    if n_s:
+        state.update({
+            "s_h": jnp.zeros((n_s, batch, H, dh), dtype),
+            "s_c": jnp.zeros((n_s, batch, H, dh), dtype),
+            "s_n": jnp.zeros((n_s, batch, H, dh), dtype),
+            "s_m": jnp.full((n_s, batch, H, dh), -1e30, dtype),
+        })
+    return state
+
+
+def decode_step(params, cfg: XLSTMConfig, state, tokens, pos, *, rules=None):
+    """One-token decode. tokens: (B,1). Returns (logits, new state)."""
+    B = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens[:, 0], axis=0).astype(
+        cfg.compute_dtype)                                   # (B, D)
+    kinds = cfg.layer_kinds
+    H, I = cfg.n_heads, cfg.inner
+
+    def m_body(carry, inp):
+        x = carry
+        pl, C, n, m, conv = inp
+        h = _rms(pl["ln"]["g"], x)
+        up = h @ pl["w_up"]
+        u, z = jnp.split(up, 2, axis=-1)
+        win = jnp.concatenate([conv, u[:, None, :]], axis=1)  # (B,K,I)
+        uc = jax.nn.silu(jnp.einsum("bki,ki->bi", win, pl["conv_w"])
+                         + pl["conv_b"])
+        q = (uc @ pl["wq"]).reshape(B, H, -1)
+        k = (uc @ pl["wk"]).reshape(B, H, -1)
+        v = (u @ pl["wv"]).reshape(B, H, -1)
+        g = uc @ pl["w_gates"] + pl["b_gates"]
+        li, gf = jnp.split(g, 2, axis=-1)
+        lf = jax.nn.log_sigmoid(gf)
+        hc, (C2, n2, m2) = mlstm_decode(q, k, v, lf, li, (C, n, m))
+        out = _group_rms(pl["gn"]["g"], hc.reshape(B, I), H) * jax.nn.silu(z)
+        y = x + out @ pl["w_down"]
+        return y, (C2, n2, m2, win[:, 1:])
+
+    def s_body(x, pl, h_prev, st):
+        h = _rms(pl["ln"]["g"], x)
+        xg = h @ pl["w_gates"] + pl["b_gates"]
+        h_new, st_new = slstm_step(xg, h_prev, st, pl["R"])
+        out = _group_rms(pl["gn"]["g"], h_new.reshape(B, -1), H).astype(x.dtype)
+        x = x + out
+        h2 = _rms(pl["ln2"]["g"], x)
+        y = (jax.nn.gelu(h2 @ pl["w_up1"]) * (h2 @ pl["w_up2"])) @ pl["w_down"]
+        return x + y.astype(x.dtype), h_new, st_new
+
+    new_state = dict(state)
+    n_groups = kinds.count("s")
+    per_group = cfg.slstm_every - 1
+    mt, st_p = params["mlstm"], params.get("slstm")
+
+    # scan across mLSTM groups is unrolled at the python level over groups
+    # (few groups), each group scanning its stacked layers.
+    def run_m(x, lo, hi):
+        grp = jax.tree.map(lambda a: a[lo:hi], mt)
+        seg = (grp, state["m_C"][lo:hi], state["m_n"][lo:hi],
+               state["m_m"][lo:hi], state["m_conv"][lo:hi])
+
+        def body(x, inp):
+            return m_body(x, inp)
+        x, outs = jax.lax.scan(body, x, seg)
+        C2, n2, m2, conv2 = outs
+        new_state["m_C"] = new_state["m_C"].at[lo:hi].set(C2)
+        new_state["m_n"] = new_state["m_n"].at[lo:hi].set(n2)
+        new_state["m_m"] = new_state["m_m"].at[lo:hi].set(m2)
+        new_state["m_conv"] = new_state["m_conv"].at[lo:hi].set(conv2)
+        return x
+
+    mi = 0
+    for g in range(n_groups):
+        x = run_m(x, mi, mi + per_group)
+        sl = jax.tree.map(lambda a: a[g], st_p)
+        stt = (state["s_c"][g], state["s_n"][g], state["s_m"][g])
+        x, h_new, st_new = s_body(x, sl, state["s_h"][g], stt)
+        new_state["s_h"] = new_state["s_h"].at[g].set(h_new)
+        new_state["s_c"] = new_state["s_c"].at[g].set(st_new[0])
+        new_state["s_n"] = new_state["s_n"].at[g].set(st_new[1])
+        new_state["s_m"] = new_state["s_m"].at[g].set(st_new[2])
+        mi += per_group
+    n_m = kinds.count("m")
+    if mi < n_m:
+        x = run_m(x, mi, n_m)
+    feats = _rms(params["ln_f"]["g"], x)
+    logits = feats @ params["lm_head"]
+    return logits[:, None, :], new_state

@@ -1,0 +1,7 @@
+"""Optimizers (pure-JAX, optax-style API but dependency-free)."""
+from repro.optim.optimizers import (sgd, adamw, nt_asgd, clip_by_global_norm,
+                                    chain, OptState, apply_updates)
+from repro.optim.schedules import (constant, step_decay, cosine,
+                                   linear_warmup_cosine)
+from repro.optim.accumulate import gradient_accumulation
+from repro.optim.compress import int8_compress, int8_decompress, compressed_psum

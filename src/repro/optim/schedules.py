@@ -1,0 +1,34 @@
+"""Learning-rate schedules (callable(step) -> float)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: lr
+
+
+def step_decay(lr: float, decay: float, every: int, start: int = 0):
+    """Zaremba'14: constant for `start` epochs then decay per epoch."""
+    def f(step):
+        k = jnp.maximum(step - start, 0) // every
+        return lr * decay ** k
+    return f
+
+
+def cosine(lr: float, total_steps: int, final_frac: float = 0.1):
+    def f(step):
+        t = jnp.clip(step / total_steps, 0.0, 1.0)
+        return lr * (final_frac + (1 - final_frac)
+                     * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return f
+
+
+def linear_warmup_cosine(lr: float, warmup: int, total_steps: int,
+                         final_frac: float = 0.1):
+    cos = cosine(lr, total_steps - warmup, final_frac)
+
+    def f(step):
+        return jnp.where(step < warmup, lr * step / jnp.maximum(warmup, 1),
+                         cos(step - warmup))
+    return f

@@ -1,0 +1,2 @@
+"""Serving: batched decode engine over KV caches / recurrent states."""
+from repro.serving.engine import DecodeEngine, sample_logits

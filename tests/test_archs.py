@@ -1,0 +1,157 @@
+"""Per-arch smoke tests: reduced config, one train step on CPU, finite
+outputs; decode-capable archs also run two serve steps (deliverable f)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs, optim
+from repro.configs import adapters
+from repro.configs.shapes import ShapeSpec
+from repro.distributed import sharding as shd
+from repro.launch import steps as steps_mod
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 16
+
+
+def _batch(spec, cfg):
+    vocab = getattr(cfg, "vocab", None) or getattr(cfg, "src_vocab", 96)
+    tok = jax.random.randint(KEY, (B, S), 3, vocab)
+    if spec.kind in ("transformer", "xlstm", "ssm"):
+        d = {"labels": tok}
+        if getattr(cfg, "embeds_in", False):
+            d["embeds"] = jax.random.normal(KEY, (B, S, cfg.d_model))
+        else:
+            d["tokens"] = tok
+        if getattr(cfg, "is_encoder_decoder", False):
+            d["frames"] = jax.random.normal(KEY, (B, cfg.enc_seq,
+                                                  cfg.d_model)) * 0.02
+        return d
+    if spec.kind == "lstm_lm":
+        return {"tokens": tok, "labels": tok}
+    if spec.kind == "nmt":
+        t2 = jax.random.randint(KEY, (B, S), 3, cfg.tgt_vocab)
+        return {"src": tok, "tgt_in": t2, "tgt_out": t2}
+    if spec.kind == "tagger":
+        return {"words": tok % cfg.vocab,
+                "chars": jax.random.randint(KEY, (B, S, 6), 1, cfg.char_vocab),
+                "tags": tok % cfg.num_tags,
+                "mask": jnp.ones((B, S), bool)}
+    raise ValueError(spec.kind)
+
+
+ALL_ARCHS = list(configs.REGISTRY)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_train_step_smoke(arch):
+    """One full train step (fwd + bwd + optimizer) on the reduced config."""
+    spec = configs.get_arch(arch)
+    cfg = spec.smoke()
+    params = shd.strip(adapters.init_params(spec.kind, KEY, cfg))
+    lfn = adapters.loss_fn(spec.kind)
+    batch = _batch(spec, cfg)
+
+    loss, grads = jax.value_and_grad(
+        lambda p: lfn(p, batch, cfg, drop_key=KEY, step=0))(params)
+    assert jnp.isfinite(loss), f"{arch}: non-finite loss"
+    gn = optim.optimizers.global_norm(grads)
+    assert jnp.isfinite(gn) and float(gn) > 0, f"{arch}: bad grad norm"
+
+    opt = optim.adamw(1e-3)
+    st = opt.init(params)
+    upd, st = opt.update(grads, st, params)
+    new_params = optim.apply_updates(params, upd)
+    # params actually moved
+    delta = optim.optimizers.global_norm(
+        jax.tree.map(lambda a, b: a - b, params, new_params))
+    assert float(delta) > 0
+
+    # loss is finite again after the update (no NaN blowup)
+    loss2 = lfn(new_params, batch, cfg, drop_key=KEY, step=1)
+    assert jnp.isfinite(loss2), f"{arch}: NaN after update"
+
+
+DECODE_ARCHS = [s.name for s in configs.ASSIGNED
+                if s.kind in ("transformer", "xlstm", "ssm")]
+
+
+@pytest.mark.parametrize("arch", DECODE_ARCHS)
+def test_decode_smoke(arch):
+    """Two serve steps: logits shape + finiteness + state threading."""
+    spec = configs.get_arch(arch)
+    cfg = spec.smoke()
+    params = shd.strip(adapters.init_params(spec.kind, KEY, cfg))
+    state = adapters.init_decode_state(spec, cfg, B, 32)
+    decode = adapters.decode_fn(spec)
+    vocab = cfg.vocab
+    if spec.kind == "transformer" and getattr(cfg, "embeds_in", False):
+        tok = jax.random.normal(KEY, (B, 1, cfg.d_model))
+    else:
+        tok = jax.random.randint(KEY, (B, 1), 3, vocab)
+    logits, state = decode(params, cfg, state, tok, 0)
+    assert logits.shape == (B, 1, vocab)
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: non-finite logits"
+    logits2, state = decode(params, cfg, state, tok, 1)
+    assert bool(jnp.isfinite(logits2).all())
+    # the state actually changed between steps
+    changed = any(
+        not np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(state))
+    ) or True  # state identity is checked via logits differing:
+    assert not np.allclose(np.asarray(logits), np.asarray(logits2)), \
+        f"{arch}: decode ignores its state"
+
+
+@pytest.mark.parametrize("arch", [s.name for s in configs.ASSIGNED])
+def test_full_config_dims(arch):
+    """The FULL config carries the exact assigned dimensions."""
+    spec = configs.get_arch(arch)
+    cfg = spec.full()
+    expect = {
+        "xlstm-1.3b": dict(num_layers=48, d_model=2048, n_heads=4,
+                           vocab=50304),
+        "mixtral-8x22b": dict(num_layers=56, d_model=6144, n_heads=48,
+                              n_kv_heads=8, d_ff=16384, vocab=32768),
+        "arctic-480b": dict(num_layers=35, d_model=7168, n_heads=56,
+                            n_kv_heads=8, d_ff=4864, vocab=32000),
+        "qwen3-8b": dict(num_layers=36, d_model=4096, n_heads=32,
+                         n_kv_heads=8, d_ff=12288, vocab=151936,
+                         qk_norm=True),
+        "minitron-8b": dict(num_layers=32, d_model=4096, n_heads=32,
+                            n_kv_heads=8, d_ff=16384, vocab=256000),
+        "gemma-2b": dict(num_layers=18, d_model=2048, n_heads=8,
+                         n_kv_heads=1, d_ff=16384, vocab=256000,
+                         head_dim=256),
+        "qwen1.5-32b": dict(num_layers=64, d_model=5120, n_heads=40,
+                            n_kv_heads=40, d_ff=27392, vocab=152064,
+                            qkv_bias=True),
+        "pixtral-12b": dict(num_layers=40, d_model=5120, n_heads=32,
+                            n_kv_heads=8, d_ff=14336, vocab=131072),
+        "zamba2-1.2b": dict(num_layers=38, d_model=2048, ssm_state=64,
+                            vocab=32000),
+        "whisper-base": dict(num_layers=6, enc_layers=6, d_model=512,
+                             n_heads=8, d_ff=2048, vocab=51865),
+    }[arch]
+    for k, v in expect.items():
+        assert getattr(cfg, k) == v, f"{arch}.{k}: {getattr(cfg, k)} != {v}"
+    # MoE extras
+    if arch == "mixtral-8x22b":
+        assert cfg.moe.num_experts == 8 and cfg.moe.top_k == 2
+        assert cfg.window == 4096
+    if arch == "arctic-480b":
+        assert cfg.moe.num_experts == 128 and cfg.moe.top_k == 2
+        assert cfg.moe.dense_ff == 4864
+
+
+def test_cell_count():
+    """The assigned pool is exactly 10 archs x 4 shapes = 40 cells."""
+    cells = list(configs.all_cells())
+    assert len(cells) == 40
+    run = [c for c in cells if c[2] is None]
+    skip = [c for c in cells if c[2] is not None]
+    assert len(run) == 33 and len(skip) == 7
+    # every skip carries a documented reason
+    for _, _, reason in skip:
+        assert isinstance(reason, str) and len(reason) > 10

@@ -1,0 +1,101 @@
+"""flash_attention Pallas kernel vs pure-jnp oracle (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+
+KEY = jax.random.PRNGKey(0)
+
+
+def oracle(q, k, v, causal=True, window=None):
+    B, Sq, Hq, d = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    kr = jnp.repeat(k, G, axis=2) if G > 1 else k
+    vr = jnp.repeat(v, G, axis=2) if G > 1 else v
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) * d ** -0.5
+    qpos, kpos = jnp.arange(Sq), jnp.arange(Sk)
+    m = jnp.ones((Sq, Sk), bool)
+    if causal:
+        m &= qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        m &= qpos[:, None] - kpos[None, :] < window
+    s = jnp.where(m[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p,
+                      vr.astype(jnp.float32)).astype(q.dtype)
+
+
+def mk(B, S, H, Hkv, d, dtype=jnp.float32):
+    ks = [jax.random.fold_in(KEY, i) for i in range(3)]
+    q = jax.random.normal(ks[0], (B, S, H, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, S, Hkv, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, S, Hkv, d), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("B,S,H,Hkv,d,bq,bk", [
+    (1, 32, 2, 2, 8, 8, 8),
+    (2, 64, 4, 2, 16, 16, 16),      # GQA
+    (1, 48, 4, 1, 8, 16, 8),        # MQA, uneven blocks
+    (2, 32, 2, 2, 8, 32, 32),       # single block
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_forward(B, S, H, Hkv, d, bq, bk, causal):
+    q, k, v = mk(B, S, H, Hkv, d)
+    o = flash_attention(q, k, v, causal, None, bq, bk, True)
+    np.testing.assert_allclose(o, oracle(q, k, v, causal), atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [8, 16])
+def test_window(window):
+    q, k, v = mk(1, 64, 2, 2, 8)
+    o = flash_attention(q, k, v, True, window, 16, 16, True)
+    np.testing.assert_allclose(o, oracle(q, k, v, True, window), atol=2e-5)
+
+
+def test_bf16():
+    q, k, v = mk(2, 32, 4, 2, 16, jnp.bfloat16)
+    o = flash_attention(q, k, v, True, None, 8, 8, True)
+    ref = oracle(q, k, v, True)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(ref, np.float32), atol=3e-2)
+
+
+@pytest.mark.parametrize("B,S,H,Hkv,d", [
+    (1, 32, 2, 2, 8),
+    (2, 32, 4, 2, 8),               # GQA grads sum over the group
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_grads(B, S, H, Hkv, d, causal):
+    q, k, v = mk(B, S, H, Hkv, d)
+
+    def f_flash(q, k, v):
+        return (flash_attention(q, k, v, causal, None, 8, 8, True) ** 2).sum()
+
+    def f_ref(q, k, v):
+        return (oracle(q, k, v, causal) ** 2).sum()
+
+    gf = jax.grad(f_flash, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b, name in zip(gf, gr, "qkv"):
+        np.testing.assert_allclose(a, b, atol=5e-4,
+                                   err_msg=f"d{name} mismatch")
+
+
+def test_grads_window():
+    q, k, v = mk(1, 32, 2, 2, 8)
+
+    def f_flash(q, k, v):
+        return (flash_attention(q, k, v, True, 8, 8, 8, True) ** 2).sum()
+
+    def f_ref(q, k, v):
+        return (oracle(q, k, v, True, 8) ** 2).sum()
+
+    gf = jax.grad(f_flash, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gf, gr):
+        np.testing.assert_allclose(a, b, atol=5e-4)

@@ -1,0 +1,130 @@
+"""Taxonomy invariants for the paper's Fig-1 dropout cases (core/masks.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import masks
+from repro.core.masks import BatchPattern, TimePattern
+
+
+KEY = jax.random.PRNGKey(42)
+
+
+class TestExactK:
+    @pytest.mark.parametrize("hidden,rate,bs", [
+        (64, 0.5, 1), (64, 0.5, 8), (128, 0.65, 1), (1024, 0.3, 128),
+        (650, 0.5, 1), (1500, 0.65, 1), (2048, 0.25, 128),
+    ])
+    def test_counts(self, hidden, rate, bs):
+        nb = masks.num_blocks(hidden, bs)
+        nd = masks.num_dropped_blocks(hidden, rate, bs)
+        nk = masks.num_kept_blocks(hidden, rate, bs)
+        assert nd + nk == nb
+        assert nd >= 1  # rate > 0 drops something
+        assert nk >= 1  # never drops everything
+        # ceil: realized rate >= requested rate (within one block)
+        assert nd / nb >= rate - 1e-9 or nd == nb - 1
+
+    def test_indivisible_raises(self):
+        with pytest.raises(ValueError):
+            masks.num_blocks(100, 8)
+
+    def test_zero_rate(self):
+        assert masks.num_dropped_blocks(64, 0.0, 1) == 0
+        assert masks.kept_units(64, 0.0, 8) == 64
+
+
+class TestSampling:
+    def test_sorted_unique_in_range(self):
+        kb = masks.sample_keep_blocks(KEY, 128, 0.5, 8)
+        kb = np.asarray(kb)
+        assert kb.dtype == np.int32
+        assert (np.diff(kb) > 0).all()           # strictly sorted => unique
+        assert kb.min() >= 0 and kb.max() < 16
+        assert len(kb) == masks.num_kept_blocks(128, 0.5, 8)
+
+    def test_different_keys_different_masks(self):
+        a = masks.sample_keep_blocks(KEY, 1024, 0.5, 1)
+        b = masks.sample_keep_blocks(jax.random.fold_in(KEY, 1), 1024, 0.5, 1)
+        assert not np.array_equal(np.asarray(a), np.asarray(b))
+
+    def test_same_key_same_mask(self):
+        a = masks.sample_keep_blocks(KEY, 1024, 0.5, 1)
+        b = masks.sample_keep_blocks(KEY, 1024, 0.5, 1)
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+    def test_mask_expansion(self):
+        kb = masks.sample_keep_blocks(KEY, 64, 0.5, 8)
+        m = masks.keep_blocks_to_mask(kb, 64, 8)
+        assert m.shape == (64,)
+        assert float(m.sum()) == masks.kept_units(64, 0.5, 8)
+        ids = masks.keep_blocks_to_unit_ids(kb, 8)
+        assert np.array_equal(np.sort(np.asarray(ids)), np.where(np.asarray(m) > 0)[0])
+
+
+class TestCaseTaxonomy:
+    """Fig. 1: the four cases differ exactly in batch-uniformity x time-variation."""
+
+    def test_structured_mask_uniform_within_batch(self):
+        m = masks.structured_mask(KEY, batch=16, hidden=64, rate=0.5)
+        m = np.asarray(m)
+        assert (m == m[0]).all()                 # every row identical (Case-III/IV)
+
+    def test_random_mask_varies_within_batch(self):
+        m = np.asarray(masks.random_mask(KEY, 64, 256, 0.5))
+        assert not (m == m[0]).all()             # Case-I/II: per-sample masks
+
+    def test_per_step_keys_vary_fixed_keys_do_not(self):
+        ks = masks.time_keys(KEY, 5, TimePattern.PER_STEP)
+        assert not np.array_equal(np.asarray(ks[0]), np.asarray(ks[1]))
+        kf = masks.time_keys(KEY, 5, TimePattern.FIXED)
+        assert np.array_equal(np.asarray(kf[0]), np.asarray(kf[4]))
+
+    def test_case_registry(self):
+        assert masks.CASES["case1"] == (BatchPattern.RANDOM, TimePattern.PER_STEP)
+        assert masks.CASES["case2"] == (BatchPattern.RANDOM, TimePattern.FIXED)
+        assert masks.CASES["case3"] == (BatchPattern.STRUCTURED, TimePattern.PER_STEP)
+        assert masks.CASES["case4"] == (BatchPattern.STRUCTURED, TimePattern.FIXED)
+
+
+class TestInvertedScale:
+    def test_expectation_preserved(self):
+        """E[scaled masked x] == x over mask draws (exact for exact-k)."""
+        hidden, rate, bs = 64, 0.5, 8
+        scale = masks.inverted_scale(rate, hidden, bs)
+        x = jnp.ones((hidden,))
+        acc = np.zeros((hidden,))
+        n = 400
+        for i in range(n):
+            kb = masks.sample_keep_blocks(jax.random.fold_in(KEY, i), hidden, rate, bs)
+            m = masks.keep_blocks_to_mask(kb, hidden, bs)
+            acc += np.asarray(x * m * scale)
+        np.testing.assert_allclose(acc / n, np.ones(hidden), atol=0.15)
+
+    def test_scale_value(self):
+        # 64 units, rate .5, bs 8 -> 8 blocks, drop 4, keep 32 units -> scale 2.0
+        assert masks.inverted_scale(0.5, 64, 8) == pytest.approx(2.0)
+        assert masks.inverted_scale(0.0, 64, 8) == 1.0
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    nb=st.integers(2, 32),
+    bs=st.sampled_from([1, 4, 8, 128]),
+    rate=st.floats(0.05, 0.9),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_exact_k(nb, bs, rate, seed):
+    """Property: sampled keep set always has the static exact-k size, is sorted,
+    unique, in range; kept+dropped == total; scale * kept == hidden."""
+    hidden = nb * bs
+    kb = np.asarray(masks.sample_keep_blocks(
+        jax.random.PRNGKey(seed), hidden, rate, bs))
+    nk = masks.num_kept_blocks(hidden, rate, bs)
+    assert kb.shape == (nk,)
+    assert (np.diff(kb) > 0).all() if len(kb) > 1 else True
+    assert kb.min() >= 0 and kb.max() < nb
+    scale = masks.inverted_scale(rate, hidden, bs)
+    assert scale * masks.kept_units(hidden, rate, bs) == pytest.approx(hidden)

@@ -1,0 +1,142 @@
+"""Cross-form equivalences: the chunkwise/parallel training forms must
+match the sequential decode recurrences exactly (these are the invariants
+that make the serving path trustworthy)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed.sharding import strip
+from repro.models import ssm as M
+from repro.models import transformer as T
+from repro.models import xlstm as X
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestMLSTM:
+    def test_chunkwise_equals_sequential(self):
+        B, H, S, d = 2, 3, 16, 8
+        ks = [jax.random.fold_in(KEY, i) for i in range(5)]
+        q = jax.random.normal(ks[0], (B, H, S, d))
+        k = jax.random.normal(ks[1], (B, H, S, d))
+        v = jax.random.normal(ks[2], (B, H, S, d))
+        lf = jax.nn.log_sigmoid(jax.random.normal(ks[3], (B, H, S)) + 2)
+        li = jax.random.normal(ks[4], (B, H, S))
+        for chunk in (1, 4, 16):
+            h_c, _ = X.mlstm_chunkwise(q, k, v, lf, li, chunk=chunk)
+            st = (jnp.zeros((B, H, d, d)), jnp.zeros((B, H, d)),
+                  jnp.full((B, H), -1e30))
+            hs = []
+            for t in range(S):
+                h_t, st = X.mlstm_decode(q[:, :, t], k[:, :, t], v[:, :, t],
+                                         lf[:, :, t], li[:, :, t], st)
+                hs.append(h_t)
+            np.testing.assert_allclose(h_c, jnp.stack(hs, 2), atol=2e-4,
+                                       err_msg=f"chunk={chunk}")
+
+    def test_extreme_gates_stable(self):
+        """Exponential gating must not overflow with large inputs."""
+        B, H, S, d = 1, 2, 8, 4
+        q = k = v = jnp.ones((B, H, S, d))
+        li = jnp.full((B, H, S), 50.0)        # huge log input gate
+        lf = jnp.full((B, H, S), -0.01)
+        h, _ = X.mlstm_chunkwise(q, k, v, lf, li, chunk=4)
+        assert bool(jnp.isfinite(h).all())
+
+
+class TestSSD:
+    def test_chunked_equals_sequential(self):
+        b, S, H, P, G, N = 2, 16, 4, 8, 1, 6
+        ks = [jax.random.fold_in(KEY, i) for i in range(5)]
+        x = jax.random.normal(ks[0], (b, S, H, P))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, S, H)))
+        A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+        Bm = jax.random.normal(ks[3], (b, S, G, N))
+        Cm = jax.random.normal(ks[4], (b, S, G, N))
+        D = jnp.ones((H,))
+        for chunk in (2, 8, 16):
+            y_c, Sf = M.ssd_chunked(x, dt, A, Bm, Cm, D, chunk=chunk)
+            st = jnp.zeros((b, H, P, N))
+            ys = []
+            for t in range(S):
+                y_t, st = M.ssd_decode(x[:, t], dt[:, t], A, Bm[:, t],
+                                       Cm[:, t], D, st)
+                ys.append(y_t)
+            np.testing.assert_allclose(y_c, jnp.stack(ys, 1), atol=2e-4)
+            np.testing.assert_allclose(Sf, st, atol=2e-4)
+
+
+class TestTransformerDecode:
+    def test_decode_matches_forward(self):
+        cfg = T.TransformerConfig(num_layers=2, d_model=32, n_heads=4,
+                                  n_kv_heads=2, d_ff=64, vocab=50,
+                                  q_chunk=4, kv_chunk=4, max_seq=32)
+        p = strip(T.init_params(KEY, cfg))
+        tk = jax.random.randint(KEY, (2, 9), 0, 50)
+        logits_all = T.lm_logits(p, T.forward(p, tk, cfg), cfg)
+
+        cache = T.init_cache(cfg, 2, 32)
+        _, cache = T.prefill(p, tk[:, :4], cfg, cache)
+        outs = []
+        for t in range(4, 9):
+            lg, cache = T.decode_step(p, cfg, cache, tk[:, t:t + 1], t)
+            outs.append(lg)
+        # decode logits at position t predict t+1 == forward logits at t
+        for i, t in enumerate(range(4, 9)):
+            np.testing.assert_allclose(outs[i][:, 0], logits_all[:, t],
+                                       atol=2e-4, err_msg=f"pos {t}")
+
+    def test_swa_matches_direct(self):
+        q = jax.random.normal(KEY, (1, 16, 2, 8))
+        k = jax.random.normal(jax.random.fold_in(KEY, 1), (1, 16, 2, 8))
+        v = jax.random.normal(jax.random.fold_in(KEY, 2), (1, 16, 2, 8))
+        a = T.chunked_attention(q, k, v, causal=True, window=8,
+                                q_chunk=4, kv_chunk=4)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(8.0)
+        idx = jnp.arange(16)
+        m = (idx[:, None] >= idx[None, :]) & (idx[:, None] - idx[None, :] < 8)
+        s = jnp.where(m[None, None], s, -1e30)
+        ref = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(s, -1), v)
+        np.testing.assert_allclose(a, ref, atol=1e-5)
+
+    def test_gqa_grouping(self):
+        """GQA must equal explicitly repeated-kv MHA."""
+        q = jax.random.normal(KEY, (1, 8, 4, 8))
+        k = jax.random.normal(jax.random.fold_in(KEY, 1), (1, 8, 2, 8))
+        v = jax.random.normal(jax.random.fold_in(KEY, 2), (1, 8, 2, 8))
+        a = T.chunked_attention(q, k, v, causal=True, window=None,
+                                q_chunk=4, kv_chunk=4)
+        kr = jnp.repeat(k, 2, axis=2)
+        vr = jnp.repeat(v, 2, axis=2)
+        b = T.chunked_attention(q, kr, vr, causal=True, window=None,
+                                q_chunk=8, kv_chunk=8)
+        np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+class TestZamba:
+    def test_decode_matches_forward(self):
+        cfg = M.Mamba2Config(num_layers=6, d_model=32, ssm_state=8,
+                             n_heads=4, chunk=4, vocab=50, shared_attn=True,
+                             shared_every=3, attn_heads=4, attn_kv_heads=4,
+                             attn_ff=64)
+        p = strip(M.init_params(KEY, cfg))
+        tk = jax.random.randint(KEY, (2, 12), 0, 50)
+        logits_f = M.lm_logits(p, M.forward(p, tk, cfg))
+        state = M.init_state(cfg, 2, max_seq=16)
+        for t in range(12):
+            lg, state = M.decode_step(p, cfg, state, tk[:, t:t + 1], t)
+        np.testing.assert_allclose(lg[:, 0], logits_f[:, -1], atol=1e-4)
+
+
+class TestXLSTMModel:
+    def test_decode_matches_forward(self):
+        cfg = X.XLSTMConfig(num_layers=4, d_model=32, n_heads=4, vocab=50,
+                            chunk=4, slstm_every=4)
+        p = strip(X.init_params(KEY, cfg))
+        tk = jax.random.randint(KEY, (2, 16), 0, 50)
+        logits_f = X.lm_logits(p, X.forward(p, tk, cfg))
+        state = X.init_state(cfg, 2)
+        for t in range(16):
+            lg, state = X.decode_step(p, cfg, state, tk[:, t:t + 1], t)
+        np.testing.assert_allclose(lg[:, 0], logits_f[:, -1], atol=1e-4)

@@ -1,0 +1,181 @@
+"""FP/BP/WG sparsity-propagation correctness (paper §3.2, Fig. 2).
+
+The invariant: ``sdrop_matmul(x, w, keep)`` must be *numerically identical*
+(up to fp32 accumulation order) to the dense reference ``(x * mask * scale) @ w``
+in the forward AND in every gradient — while internally running compacted
+(1-p)-sized matmuls. The gradients encode the paper's three phases:
+
+  dy->dx  is the BP   (output column sparsity: dropped cols of dx are 0)
+  (x,dy)->dW is the WG (input row sparsity: dropped rows of dW are 0)
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import masks, sparse_matmul as sm
+
+KEY = jax.random.PRNGKey(0)
+
+
+def dense_ref(x, w, kb, rate, bs, bias=None):
+    scale = masks.inverted_scale(rate, w.shape[0], bs)
+    m = masks.keep_blocks_to_mask(kb, w.shape[0], bs)
+    y = (x * m * scale) @ w
+    return y + bias if bias is not None else y
+
+
+def make(B, H, N, rate, bs, seed=0, bias=False):
+    k = jax.random.PRNGKey(seed)
+    k1, k2, k3, k4 = jax.random.split(k, 4)
+    x = jax.random.normal(k1, (B, H))
+    w = jax.random.normal(k2, (H, N)) / np.sqrt(H)
+    b = jax.random.normal(k4, (N,)) if bias else None
+    kb = masks.sample_keep_blocks(k3, H, rate, bs)
+    return x, w, b, kb
+
+
+@pytest.mark.parametrize("B,H,N,rate,bs", [
+    (4, 32, 16, 0.5, 1),
+    (8, 64, 64, 0.5, 8),
+    (3, 96, 40, 0.65, 1),     # odd shapes
+    (16, 256, 128, 0.25, 128),
+    (2, 650, 2600, 0.5, 1),   # Zaremba-medium gate matmul shape (4H out)
+])
+class TestForwardBackward:
+    def test_forward(self, B, H, N, rate, bs):
+        x, w, b, kb = make(B, H, N, rate, bs, bias=True)
+        y = sm.sdrop_matmul(x, w, kb, rate=rate, block_size=bs, bias=b)
+        np.testing.assert_allclose(y, dense_ref(x, w, kb, rate, bs, b),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_grads_match_dense(self, B, H, N, rate, bs):
+        x, w, _, kb = make(B, H, N, rate, bs)
+
+        def f_sd(x, w):
+            return (sm.sdrop_matmul(x, w, kb, rate=rate, block_size=bs) ** 2).sum()
+
+        def f_ref(x, w):
+            return (dense_ref(x, w, kb, rate, bs) ** 2).sum()
+
+        gs = jax.grad(f_sd, argnums=(0, 1))(x, w)
+        gr = jax.grad(f_ref, argnums=(0, 1))(x, w)
+        np.testing.assert_allclose(gs[0], gr[0], rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(gs[1], gr[1], rtol=1e-4, atol=1e-4)
+
+    def test_bp_output_sparsity(self, B, H, N, rate, bs):
+        """Paper Fig 2(b): dropped columns of dx are exactly zero."""
+        x, w, _, kb = make(B, H, N, rate, bs)
+        dx = jax.grad(lambda x: sm.sdrop_matmul(
+            x, w, kb, rate=rate, block_size=bs).sum())(x)
+        m = np.asarray(masks.keep_blocks_to_mask(kb, H, bs))
+        assert np.all(np.asarray(dx)[:, m == 0] == 0.0)
+
+    def test_wg_row_sparsity(self, B, H, N, rate, bs):
+        """Paper Fig 2(c): dropped rows of dW are exactly zero."""
+        x, w, _, kb = make(B, H, N, rate, bs)
+        dw = jax.grad(lambda w: sm.sdrop_matmul(
+            x, w, kb, rate=rate, block_size=bs).sum(), argnums=0)(w)
+        m = np.asarray(masks.keep_blocks_to_mask(kb, H, bs))
+        assert np.all(np.asarray(dw)[m == 0, :] == 0.0)
+
+
+class TestCompactPath:
+    """x_is_compact / sdrop_matmul_out: the FFN-inner structured dropout path."""
+
+    def test_out_then_in_equals_dense_dropout_of_inner(self):
+        B, K, F, N, rate, bs = 4, 32, 64, 16, 0.5, 8
+        x, w1, _, kb = make(B, K, F, rate, bs, seed=3)
+        w1 = jax.random.normal(jax.random.PRNGKey(7), (K, F)) / np.sqrt(K)
+        w2 = jax.random.normal(jax.random.PRNGKey(8), (F, N)) / np.sqrt(F)
+        kb = masks.sample_keep_blocks(KEY, F, rate, bs)
+        scale = masks.inverted_scale(rate, F, bs)
+
+        # compact pipeline: up-proj computes only kept cols; down-proj consumes
+        # compact activation with the dropout scale applied there.
+        h_c = sm.sdrop_matmul_out(x, w1, kb, rate=rate, block_size=bs)
+        act = jax.nn.gelu(h_c)
+        y = sm.sdrop_matmul(act, w2, kb, rate=rate, block_size=bs,
+                            x_is_compact=True, scale=scale)
+
+        # dense reference: dropout(gelu(x @ w1)) @ w2
+        m = masks.keep_blocks_to_mask(kb, F, bs)
+        y_ref = (jax.nn.gelu(x @ w1) * m * scale) @ w2
+        np.testing.assert_allclose(y, y_ref, rtol=1e-5, atol=1e-5)
+
+    def test_compact_grads(self):
+        B, K, F, N, rate, bs = 4, 32, 64, 16, 0.5, 8
+        w1 = jax.random.normal(jax.random.PRNGKey(7), (K, F)) / np.sqrt(K)
+        w2 = jax.random.normal(jax.random.PRNGKey(8), (F, N)) / np.sqrt(F)
+        x = jax.random.normal(jax.random.PRNGKey(9), (B, K))
+        kb = masks.sample_keep_blocks(KEY, F, rate, bs)
+        scale = masks.inverted_scale(rate, F, bs)
+        m = masks.keep_blocks_to_mask(kb, F, bs)
+
+        def f_c(x, w1, w2):
+            h = sm.sdrop_matmul_out(x, w1, kb, rate=rate, block_size=bs)
+            return (sm.sdrop_matmul(jax.nn.gelu(h), w2, kb, rate=rate,
+                                    block_size=bs, x_is_compact=True,
+                                    scale=scale) ** 2).sum()
+
+        def f_r(x, w1, w2):
+            return ((((jax.nn.gelu(x @ w1) * m * scale) @ w2)) ** 2).sum()
+
+        gc = jax.grad(f_c, argnums=(0, 1, 2))(x, w1, w2)
+        gr = jax.grad(f_r, argnums=(0, 1, 2))(x, w1, w2)
+        for a, b in zip(gc, gr):
+            np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+class TestFallbacks:
+    def test_rate_zero_dense(self):
+        x, w, _, _ = make(2, 16, 8, 0.5, 1)
+        np.testing.assert_allclose(
+            sm.sdrop_matmul(x, w, None, rate=0.0), x @ w, rtol=1e-5, atol=1e-6)
+
+    def test_gather_scatter_roundtrip(self):
+        x = jax.random.normal(KEY, (4, 64))
+        kb = masks.sample_keep_blocks(KEY, 64, 0.5, 8)
+        xc = sm.gather_compact(x, kb, block_size=8)
+        xs = sm.scatter_compact(xc, kb, 64, block_size=8)
+        m = masks.keep_blocks_to_mask(kb, 64, 8)
+        np.testing.assert_allclose(xs, x * m, rtol=1e-6, atol=1e-6)
+
+    def test_jit_static_shapes(self):
+        """Compacted shapes are static under jit: one compile across mask draws."""
+        x, w, _, _ = make(4, 64, 32, 0.5, 8)
+        f = jax.jit(functools.partial(sm.sdrop_matmul, rate=0.5, block_size=8))
+        y0 = f(x, w, masks.sample_keep_blocks(KEY, 64, 0.5, 8))
+        y1 = f(x, w, masks.sample_keep_blocks(jax.random.fold_in(KEY, 1), 64, 0.5, 8))
+        assert y0.shape == y1.shape == (4, 32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    B=st.integers(1, 9),
+    nb=st.integers(2, 12),
+    bs=st.sampled_from([1, 4, 8]),
+    N=st.integers(1, 40),
+    rate=st.floats(0.1, 0.8),
+    seed=st.integers(0, 10_000),
+)
+def test_property_sdrop_equals_dense(B, nb, bs, N, rate, seed):
+    """Property: forward + both grads match the dense dropout oracle for any
+    shape/rate/block-size combination."""
+    H = nb * bs
+    x, w, _, kb = make(B, H, N, rate, bs, seed=seed)
+
+    def f_sd(x, w):
+        return (sm.sdrop_matmul(x, w, kb, rate=rate, block_size=bs) ** 2).sum()
+
+    def f_ref(x, w):
+        return (dense_ref(x, w, kb, rate, bs) ** 2).sum()
+
+    np.testing.assert_allclose(f_sd(x, w), f_ref(x, w), rtol=1e-4, atol=1e-4)
+    gs = jax.grad(f_sd, argnums=(0, 1))(x, w)
+    gr = jax.grad(f_ref, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(gs[0], gr[0], rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(gs[1], gr[1], rtol=1e-3, atol=1e-4)
