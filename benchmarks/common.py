@@ -18,28 +18,23 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.masks import BatchPattern, TimePattern
-from repro.core.sdrop import DropoutSpec
+from repro.core.dropout_plan import DropoutPlan
 
 
-def spec_random(rate):
-    return DropoutSpec(rate=rate, batch_pattern=BatchPattern.RANDOM,
-                       time_pattern=TimePattern.PER_STEP)
+def plan_random(rate, sites):
+    """Case-I (random x per-step) at every named site — the baseline."""
+    return DropoutPlan.case("case1", rate, sites=sites)
 
 
-def spec_structured(rate, block=8):
-    return DropoutSpec(rate=rate, batch_pattern=BatchPattern.STRUCTURED,
-                       time_pattern=TimePattern.PER_STEP, block_size=block)
-
-
-def spec_off():
-    return DropoutSpec(rate=0.0)
+def plan_structured(rate, sites, block=8):
+    """Case-III (structured x per-step) at every named site — the paper."""
+    return DropoutPlan.case("case3", rate, block_size=block, sites=sites)
 
 
 @dataclasses.dataclass
@@ -49,6 +44,8 @@ class RunResult:
     metric_name: str
     ms_per_step: float
     final_loss: float
+    # exact dropout pattern that ran, for the benchmark JSON record
+    dropout_plan: Optional[dict] = None
 
     def row(self):
         return (f"{self.name:12s} {self.metric_name}={self.metric:8.3f}  "

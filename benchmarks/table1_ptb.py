@@ -18,23 +18,21 @@ from repro import optim
 from repro.core import masks, sparse_matmul as sm
 from repro.data import synthetic
 from repro.models import lstm_lm
-from repro.models.lstm_lm import LMDropouts
 
 
 def _cfg(mode: str, hidden=650, vocab=2000):
     rate = 0.5
     if mode == "baseline":
-        mk = lambda r: common.spec_random(r)
-        d = LMDropouts(inp=mk(rate), nr=mk(rate), out=mk(rate))
+        plan = common.plan_random(rate, sites=("embed", "nr", "out"))
     elif mode == "nr_st":
         # block=2 divides the paper's true width (650) and the quick width
-        mk = lambda r: common.spec_structured(r, block=2)
-        d = LMDropouts(inp=mk(rate), nr=mk(rate), out=mk(rate))
+        plan = common.plan_structured(rate, sites=("embed", "nr", "out"),
+                                      block=2)
     else:  # nr_rh_st
-        mk = lambda r: common.spec_structured(r, block=2)
-        d = LMDropouts(inp=mk(rate), nr=mk(rate), rh=mk(rate), out=mk(rate))
+        plan = common.plan_structured(rate, sites=("embed", "nr", "rh", "out"),
+                                      block=2)
     return lstm_lm.LSTMLMConfig(vocab=vocab, embed=hidden, hidden=hidden,
-                                num_layers=2, drops=d)
+                                num_layers=2, plan=plan)
 
 
 def run_mode(mode: str, steps: int, batch=20, seq=35, hidden=650):
@@ -59,7 +57,8 @@ def run_mode(mode: str, steps: int, batch=20, seq=35, hidden=650):
         params, opt_state, key, steps)
     ppl = lstm_lm.perplexity(params, jnp.asarray(val[0]),
                              jnp.asarray(val[1]), cfg)
-    return common.RunResult(mode, ppl, "val_ppl", ms, loss)
+    return common.RunResult(mode, ppl, "val_ppl", ms, loss,
+                            dropout_plan=cfg.plan.to_dict())
 
 
 def phase_speedups(rate=0.5, B=700, H=650, N=2600, block=2, n=10):

@@ -12,7 +12,6 @@ import numpy as np
 
 from benchmarks import common
 from repro import optim
-from repro.core.sdrop import DropoutSpec
 from repro.data import synthetic
 from repro.models import seq2seq
 
@@ -20,18 +19,13 @@ from repro.models import seq2seq
 def _cfg(mode: str, hidden=512):
     rate = 0.3
     if mode == "baseline":
-        return seq2seq.NMTConfig(src_vocab=500, tgt_vocab=500, embed=hidden,
-                                 hidden=hidden, nr=common.spec_random(rate))
-    if mode == "nr_st":
-        return seq2seq.NMTConfig(src_vocab=500, tgt_vocab=500, embed=hidden,
-                                 hidden=hidden,
-                                 nr=common.spec_structured(rate),
-                                 out=common.spec_structured(rate))
+        plan = common.plan_random(rate, sites=("nr",))
+    elif mode == "nr_st":
+        plan = common.plan_structured(rate, sites=("nr", "out"))
+    else:  # nr_rh_st
+        plan = common.plan_structured(rate, sites=("nr", "rh", "out"))
     return seq2seq.NMTConfig(src_vocab=500, tgt_vocab=500, embed=hidden,
-                             hidden=hidden,
-                             nr=common.spec_structured(rate),
-                             rh=common.spec_structured(rate),
-                             out=common.spec_structured(rate))
+                             hidden=hidden, plan=plan)
 
 
 def token_accuracy(params, cfg, val):
@@ -66,7 +60,8 @@ def run_mode(mode: str, steps: int, batch=32, hidden=512):
     params, loss, ms = common.train_and_time(step_fn, batches, params,
                                              opt_state, key, steps)
     acc = token_accuracy(params, cfg, val)
-    return common.RunResult(mode, acc, "tok_acc", ms, loss)
+    return common.RunResult(mode, acc, "tok_acc", ms, loss,
+                            dropout_plan=cfg.plan.to_dict())
 
 
 def main(steps: int = 20, quick: bool = False):

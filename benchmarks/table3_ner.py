@@ -16,11 +16,13 @@ def _cfg(mode: str):
     kw = dict(vocab=300, char_vocab=40, hidden=200, num_tags=9,
               word_embed=100, char_filters=28)   # 128-dim concat feature
     if mode == "baseline":
-        return tagger.TaggerConfig(inp=common.spec_random(rate), **kw)
+        return tagger.TaggerConfig(plan=common.plan_random(rate, ("inp",)),
+                                   **kw)
     if mode == "nr_st":
-        return tagger.TaggerConfig(inp=common.spec_structured(rate), **kw)
-    return tagger.TaggerConfig(inp=common.spec_structured(rate),
-                               rh=common.spec_structured(rate), **kw)
+        return tagger.TaggerConfig(plan=common.plan_structured(rate, ("inp",)),
+                                   **kw)
+    return tagger.TaggerConfig(
+        plan=common.plan_structured(rate, ("inp", "rh")), **kw)
 
 
 def f1_score(params, cfg, val):
@@ -58,7 +60,8 @@ def run_mode(mode: str, steps: int, batch=32):
     params, loss, ms = common.train_and_time(step_fn, batches, params,
                                              opt_state, key, steps)
     f1 = f1_score(params, cfg, val)
-    return common.RunResult(mode, f1, "F1", ms, loss)
+    return common.RunResult(mode, f1, "F1", ms, loss,
+                            dropout_plan=cfg.plan.to_dict())
 
 
 def main(steps: int = 40, quick: bool = False):

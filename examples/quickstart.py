@@ -1,11 +1,25 @@
-"""Quickstart: the paper's structured dropout as a drop-in replacement.
+"""Quickstart: the paper's structured dropout, driven by one DropoutPlan.
 
-Trains a small LSTM LM on a synthetic PTB-like stream twice —
-  1. Case-I  (random within batch, random in time)  = Zaremba'14 baseline
-  2. Case-III (structured in batch, random in time) = the paper (NR+RH+ST)
-— and reports both task metric (perplexity) and measured wall-clock per
-step. Case-III runs compacted (1-p)-sized matmuls in FP/BP/WG, which is the
-whole point of the paper.
+The model never changes — the experiment variable is the ``DropoutPlan``
+mapping the LM's named application sites ("embed", "nr", "rh", "out") to a
+dropout pattern. One line flips the whole taxonomy:
+
+    DropoutPlan.case("case1", rate)                  # Zaremba'14 baseline
+    DropoutPlan.case("case3", rate, block_size=8)    # the paper
+
+Choosing a dropout case (paper Fig. 1):
+  * case1 — RANDOM x PER_STEP: per-sample masks, re-sampled each time step.
+    Best-known regularization; no compute reclaim.
+  * case2 — RANDOM x FIXED: Gal'16 / AWD-LSTM variational dropout — one
+    mask per sequence.
+  * case3 — STRUCTURED x PER_STEP: the paper. All samples drop the same
+    units, re-sampled per step: the gate matmuls run compacted to (1-p) of
+    their dense FLOPs in FP, BP and WG, at Case-I-level task metrics.
+  * case4 — STRUCTURED x FIXED: most restricted; ablation only.
+
+This script trains a small LSTM LM on a synthetic PTB-like stream under
+case1 and case3 and reports both the task metric (perplexity) and measured
+wall-clock per step — the case3 speedup is the paper's whole point.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -14,29 +28,20 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core.masks import BatchPattern, TimePattern
-from repro.core.sdrop import DropoutSpec
+from repro.core.dropout_plan import DropoutPlan
 from repro.data import synthetic
 from repro.models import lstm_lm
-from repro.models.lstm_lm import LMDropouts
 
 
 RATE = 0.65          # Zaremba-large's rate; bigger rate = bigger reclaim
+SITES = ("embed", "nr", "rh", "out")
 
 
 def make_cfg(case: str):
-    if case == "case1":      # random / per-step (no compute reclaim)
-        spec = lambda r: DropoutSpec(rate=r, batch_pattern=BatchPattern.RANDOM,
-                                     time_pattern=TimePattern.PER_STEP)
-    else:                    # case3: structured / per-step (the paper)
-        spec = lambda r: DropoutSpec(rate=r,
-                                     batch_pattern=BatchPattern.STRUCTURED,
-                                     time_pattern=TimePattern.PER_STEP,
-                                     block_size=8)
+    block = 8 if case in ("case3", "case4") else 1
+    plan = DropoutPlan.case(case, RATE, block_size=block, sites=SITES)
     return lstm_lm.LSTMLMConfig(
-        vocab=2000, embed=512, hidden=512, num_layers=2,
-        drops=LMDropouts(inp=spec(RATE), nr=spec(RATE), rh=spec(RATE),
-                         out=spec(RATE)))
+        vocab=2000, embed=512, hidden=512, num_layers=2, plan=plan)
 
 
 def run(case: str, steps: int = 30, batch: int = 64, seq: int = 32):
@@ -47,10 +52,10 @@ def run(case: str, steps: int = 30, batch: int = 64, seq: int = 32):
     batches = synthetic.token_batches(stream, batch, seq)
 
     @jax.jit
-    def step_fn(params, tokens, labels, key):
+    def step_fn(params, tokens, labels, key, step):
         def loss(p):
             return lstm_lm.loss_fn(p, {"tokens": tokens, "labels": labels},
-                                   cfg, drop_key=key)
+                                   cfg, drop_key=key, step=step)
         l, g = jax.value_and_grad(loss)(params)
         params = jax.tree.map(lambda p, g: p - 0.5 * g, params, g)
         return params, l
@@ -60,7 +65,7 @@ def run(case: str, steps: int = 30, batch: int = 64, seq: int = 32):
         if i >= steps:
             break
         params, l = step_fn(params, jnp.asarray(tok), jnp.asarray(lab),
-                            jax.random.fold_in(key, i))
+                            key, jnp.int32(i))
         if i == 2:           # skip compile
             t0 = time.time()
         if i >= 2:
@@ -84,3 +89,5 @@ if __name__ == "__main__":
           f"rate {RATE}; ppl {p1:.1f} -> {p3:.1f}")
     print(f"structural matmul reduction: gate matmuls run at "
           f"{kept:.2f}x their dense FLOPs in FP, BP and WG (exact)")
+    print("\nthe same pattern on any arch: python -m repro.launch.train "
+          "--arch xlstm-1.3b --smoke --dropout case3:0.65:bs8")

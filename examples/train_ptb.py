@@ -13,10 +13,9 @@ import jax.numpy as jnp
 
 from repro import checkpoint as ckpt
 from repro import optim
-from repro.core.sdrop import DropoutSpec
+from repro.core.dropout_plan import DropoutPlan
 from repro.data import synthetic
 from repro.models import lstm_lm
-from repro.models.lstm_lm import LMDropouts
 
 
 def main():
@@ -32,9 +31,9 @@ def main():
     args = ap.parse_args()
 
     rate = 0.65 if args.large else 0.5
-    st = lambda: DropoutSpec(rate=rate, block_size=args.block_size)
     mk = lstm_lm.zaremba_large if args.large else lstm_lm.zaremba_medium
-    cfg = mk(drops=LMDropouts(inp=st(), nr=st(), rh=st(), out=st()))
+    cfg = mk(plan=DropoutPlan.case("case3", rate, block_size=args.block_size,
+                                   sites=("embed", "nr", "rh", "out")))
     print(f"config: {cfg.name}  hidden={cfg.hidden}  vocab={cfg.vocab}  "
           f"NR+RH+ST rate={rate}")
 

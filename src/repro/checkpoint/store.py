@@ -44,9 +44,11 @@ def _flatten(tree):
 
 def save_checkpoint(ckpt_dir: str, step: int, tree: Any, *,
                     host_index: int = 0, host_count: int = 1,
-                    keep: int = 3) -> str:
+                    keep: int = 3, meta: Any = None) -> str:
     """Save this host's shard of ``tree``. Leaves are round-robin assigned to
-    hosts by index so every leaf is stored exactly once across the fleet."""
+    hosts by index so every leaf is stored exactly once across the fleet.
+    ``meta`` (JSON-serializable, e.g. the DropoutPlan dict of the run) is
+    recorded verbatim in the manifest."""
     keyed, _, _ = _flatten(tree)
     step_dir = os.path.join(ckpt_dir, f"step_{step:09d}")
     os.makedirs(step_dir, exist_ok=True)
@@ -72,6 +74,8 @@ def save_checkpoint(ckpt_dir: str, step: int, tree: Any, *,
             "keys": sorted(keyed.keys()),
             "shapes": {k: list(np.shape(v)) for k, v in keyed.items()},
         }
+        if meta is not None:
+            manifest["meta"] = meta
         mpath = os.path.join(step_dir, "MANIFEST.json")
         with tempfile.NamedTemporaryFile("w", dir=step_dir, delete=False) as f:
             json.dump(manifest, f)

@@ -9,6 +9,7 @@
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Optional
 
 import jax
@@ -16,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchSpec
 from repro.configs.shapes import SHAPES, ShapeSpec
+from repro.core.dropout_plan import DropoutPlan
 from repro.models import lstm_lm, seq2seq, ssm, tagger, transformer, xlstm
 
 I32 = jnp.int32
@@ -49,6 +51,36 @@ def init_params(kind: str, key, cfg):
 
 def loss_fn(kind: str):
     return _MODULES[kind].loss_fn
+
+
+# ---------------------------------------------------------------------------
+# dropout-plan overrides (the --dropout flag)
+# ---------------------------------------------------------------------------
+
+# Canonical application sites per arch kind: what a CLI case override like
+# ``case3:0.5:bs128`` turns on. Site names resolve hierarchically (the
+# models consume e.g. "enc/layer0/nr" against the "nr" entry).
+DROPOUT_SITES = {
+    "lstm_lm": ("embed", "nr", "rh", "out"),
+    "nmt": ("nr", "rh", "out"),
+    "tagger": ("inp", "rh"),
+    "transformer": ("nr",),
+    "xlstm": ("nr", "rh"),
+    "ssm": ("nr",),
+}
+
+
+def dropout_override(kind: str, text: str) -> DropoutPlan:
+    """Parse a CLI override ("case3:0.5:bs128" | "off") into a plan that
+    covers the kind's canonical sites."""
+    return DropoutPlan.parse(text, sites=DROPOUT_SITES[kind])
+
+
+def apply_dropout(spec: ArchSpec, cfg, text: str):
+    """Return cfg with its plan replaced by the parsed CLI override."""
+    if not text:
+        return cfg
+    return dataclasses.replace(cfg, plan=dropout_override(spec.kind, text))
 
 
 # ---------------------------------------------------------------------------

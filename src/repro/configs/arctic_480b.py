@@ -3,6 +3,7 @@ MoE 128e top-2 + dense residual [hf:Snowflake/snowflake-arctic-base]."""
 import jax.numpy as jnp
 
 from repro.configs.base import ArchSpec, FULL_ATTN_SKIP
+from repro.core.dropout_plan import DropoutPlan
 from repro.core.sdrop import DropoutSpec
 from repro.models.transformer import MoEConfig, TransformerConfig
 
@@ -17,7 +18,7 @@ def full(**kw):
         kv_repeat=1,   # 56 q / 8 kv = 7 groups: only 1 or 7 divide; 7 would
         q_chunk=1024, kv_chunk=1024,   # 7x the cache — keep GQA, flat-shard
 
-        nr_drop=DropoutSpec(rate=0.25, block_size=128),
+        plan=DropoutPlan({"nr": DropoutSpec(rate=0.25, block_size=128)}),
     )
     d.update(kw)
     return TransformerConfig(**d)
@@ -29,7 +30,7 @@ def smoke(**kw):
         n_kv_heads=2, d_ff=96, vocab=128,
         moe=MoEConfig(num_experts=8, top_k=2, dense_ff=96),
         q_chunk=8, kv_chunk=8, max_seq=64,
-        nr_drop=DropoutSpec(rate=0.25, block_size=8),
+        plan=DropoutPlan({"nr": DropoutSpec(rate=0.25, block_size=8)}),
     )
     d.update(kw)
     return TransformerConfig(**d)

@@ -3,6 +3,7 @@ GeGLU, head_dim=256, scaled embeddings [arXiv:2403.08295]."""
 import jax.numpy as jnp
 
 from repro.configs.base import ArchSpec, FULL_ATTN_SKIP
+from repro.core.dropout_plan import DropoutPlan
 from repro.core.sdrop import DropoutSpec
 from repro.models.transformer import TransformerConfig
 
@@ -15,7 +16,7 @@ def full(**kw):
         param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
         kv_repeat=8,                  # MQA -> one kv copy per pair of shards
         q_chunk=1024, kv_chunk=1024,
-        nr_drop=DropoutSpec(rate=0.25, block_size=128),
+        plan=DropoutPlan({"nr": DropoutSpec(rate=0.25, block_size=128)}),
     )
     d.update(kw)
     return TransformerConfig(**d)
@@ -27,7 +28,7 @@ def smoke(**kw):
         n_kv_heads=1, head_dim=16, d_ff=128, vocab=128, mlp="geglu",
         scale_embed=True, tie_embeddings=True, kv_repeat=4,
         q_chunk=8, kv_chunk=8, max_seq=64,
-        nr_drop=DropoutSpec(rate=0.25, block_size=8),
+        plan=DropoutPlan({"nr": DropoutSpec(rate=0.25, block_size=8)}),
     )
     d.update(kw)
     return TransformerConfig(**d)

@@ -3,6 +3,7 @@ vocab=32768, MoE 8e top-2, SWA [arXiv:2401.04088]."""
 import jax.numpy as jnp
 
 from repro.configs.base import ArchSpec
+from repro.core.dropout_plan import DropoutPlan
 from repro.core.sdrop import DropoutSpec
 from repro.models.transformer import MoEConfig, TransformerConfig
 
@@ -16,7 +17,7 @@ def full(**kw):
         param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
         kv_repeat=2,                    # 8 kv heads -> 16 for TP=16
         q_chunk=1024, kv_chunk=1024,
-        nr_drop=DropoutSpec(rate=0.25, block_size=128),
+        plan=DropoutPlan({"nr": DropoutSpec(rate=0.25, block_size=128)}),
     )
     d.update(kw)
     return TransformerConfig(**d)
@@ -28,7 +29,7 @@ def smoke(**kw):
         n_kv_heads=2, d_ff=128, vocab=128,
         moe=MoEConfig(num_experts=4, top_k=2), window=8,
         q_chunk=8, kv_chunk=8, max_seq=64,
-        nr_drop=DropoutSpec(rate=0.25, block_size=8),
+        plan=DropoutPlan({"nr": DropoutSpec(rate=0.25, block_size=8)}),
     )
     d.update(kw)
     return TransformerConfig(**d)

@@ -1,8 +1,8 @@
 """The paper's own benchmark configs, selectable via --arch like any arch."""
 from repro.configs.base import ArchSpec
+from repro.core.dropout_plan import DropoutPlan
 from repro.core.sdrop import DropoutSpec
 from repro.models import lstm_lm, seq2seq, tagger
-from repro.models.lstm_lm import LMDropouts
 
 _LM_SKIPS = {
     "prefill_32k": "word-level LSTM LM; paper shapes are (batch 20, unroll 35)",
@@ -15,26 +15,26 @@ def _st(rate, bs=1):
     return DropoutSpec(rate=rate, block_size=bs)
 
 
+def _plan(rate, bs=1, sites=("embed", "nr", "rh", "out")):
+    return DropoutPlan.case("case3", rate, block_size=bs, sites=sites)
+
+
 ZAREMBA_MEDIUM = ArchSpec(
     name="zaremba-medium", family="rnn", kind="lstm_lm",
-    full=lambda **kw: lstm_lm.zaremba_medium(
-        drops=LMDropouts(inp=_st(0.5), nr=_st(0.5), rh=_st(0.5),
-                         out=_st(0.5)), **kw),
+    full=lambda **kw: lstm_lm.zaremba_medium(plan=_plan(0.5), **kw),
     smoke=lambda **kw: lstm_lm.zaremba_medium(
         vocab=128, embed=64, hidden=64,
-        drops=LMDropouts(inp=_st(0.5), nr=_st(0.5, 8), rh=_st(0.5, 8),
-                         out=_st(0.5)), **kw),
+        plan=DropoutPlan({"embed": _st(0.5), "nr": _st(0.5, 8),
+                          "rh": _st(0.5, 8), "out": _st(0.5)}), **kw),
     skip_shapes=_LM_SKIPS)
 
 ZAREMBA_LARGE = ArchSpec(
     name="zaremba-large", family="rnn", kind="lstm_lm",
-    full=lambda **kw: lstm_lm.zaremba_large(
-        drops=LMDropouts(inp=_st(0.65), nr=_st(0.65), rh=_st(0.65),
-                         out=_st(0.65)), **kw),
+    full=lambda **kw: lstm_lm.zaremba_large(plan=_plan(0.65), **kw),
     smoke=lambda **kw: lstm_lm.zaremba_large(
         vocab=128, embed=64, hidden=64,
-        drops=LMDropouts(inp=_st(0.65), nr=_st(0.65, 8), rh=_st(0.65, 8),
-                         out=_st(0.65)), **kw),
+        plan=DropoutPlan({"embed": _st(0.65), "nr": _st(0.65, 8),
+                          "rh": _st(0.65, 8), "out": _st(0.65)}), **kw),
     skip_shapes=_LM_SKIPS)
 
 AWD_LSTM = ArchSpec(
@@ -46,20 +46,20 @@ AWD_LSTM = ArchSpec(
 LUONG_NMT = ArchSpec(
     name="luong-nmt", family="rnn", kind="nmt",
     full=lambda **kw: seq2seq.NMTConfig(
-        nr=_st(0.3), rh=_st(0.3), out=_st(0.3), **kw),
+        plan=_plan(0.3, sites=("nr", "rh", "out")), **kw),
     smoke=lambda **kw: seq2seq.NMTConfig(
         src_vocab=96, tgt_vocab=96, embed=32, hidden=32,
-        nr=_st(0.3, 8), rh=_st(0.3, 8), out=_st(0.3, 8), **kw),
+        plan=_plan(0.3, 8, sites=("nr", "rh", "out")), **kw),
     skip_shapes=_LM_SKIPS)
 
 BILSTM_NER = ArchSpec(
     name="bilstm-ner", family="rnn", kind="tagger",
     full=lambda **kw: tagger.TaggerConfig(
-        inp=_st(0.5), rh=_st(0.5), **kw),
+        plan=_plan(0.5, sites=("inp", "rh")), **kw),
     smoke=lambda **kw: tagger.TaggerConfig(
         vocab=96, char_vocab=30, hidden=32, num_tags=9,
         word_embed=34, char_filters=30,    # 64-dim concat: 8-block divisible
-        inp=_st(0.5, 8), rh=_st(0.5, 8), **kw),
+        plan=_plan(0.5, 8, sites=("inp", "rh")), **kw),
     skip_shapes=_LM_SKIPS)
 
 PAPER_SPECS = [ZAREMBA_MEDIUM, ZAREMBA_LARGE, AWD_LSTM, LUONG_NMT, BILSTM_NER]

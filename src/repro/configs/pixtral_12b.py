@@ -4,6 +4,7 @@ embeddings) + mistral-nemo backbone [hf:mistralai/Pixtral-12B-2409]."""
 import jax.numpy as jnp
 
 from repro.configs.base import ArchSpec, FULL_ATTN_SKIP
+from repro.core.dropout_plan import DropoutPlan
 from repro.core.sdrop import DropoutSpec
 from repro.models.transformer import TransformerConfig
 
@@ -15,7 +16,7 @@ def full(**kw):
         embeds_in=True, mlp="swiglu", rope_theta=1e6, max_seq=1 << 20,
         param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
         kv_repeat=2, q_chunk=1024, kv_chunk=1024,
-        nr_drop=DropoutSpec(rate=0.25, block_size=128),
+        plan=DropoutPlan({"nr": DropoutSpec(rate=0.25, block_size=128)}),
     )
     d.update(kw)
     return TransformerConfig(**d)
@@ -26,7 +27,7 @@ def smoke(**kw):
         name="pixtral-smoke", num_layers=2, d_model=64, n_heads=4,
         n_kv_heads=2, d_ff=128, vocab=128, embeds_in=True,
         q_chunk=8, kv_chunk=8, max_seq=64,
-        nr_drop=DropoutSpec(rate=0.25, block_size=8),
+        plan=DropoutPlan({"nr": DropoutSpec(rate=0.25, block_size=8)}),
     )
     d.update(kw)
     return TransformerConfig(**d)

@@ -3,6 +3,7 @@ vocab=152064 — QKV bias [hf:Qwen/Qwen1.5 family]."""
 import jax.numpy as jnp
 
 from repro.configs.base import ArchSpec, FULL_ATTN_SKIP
+from repro.core.dropout_plan import DropoutPlan
 from repro.core.sdrop import DropoutSpec
 from repro.models.transformer import TransformerConfig
 
@@ -14,7 +15,7 @@ def full(**kw):
         qkv_bias=True, mlp="swiglu", max_seq=1 << 20,
         param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
         q_chunk=1024, kv_chunk=1024,
-        nr_drop=DropoutSpec(rate=0.25, block_size=128),
+        plan=DropoutPlan({"nr": DropoutSpec(rate=0.25, block_size=128)}),
     )
     d.update(kw)
     return TransformerConfig(**d)
@@ -25,7 +26,7 @@ def smoke(**kw):
         name="qwen1.5-smoke", num_layers=2, d_model=64, n_heads=4,
         n_kv_heads=4, d_ff=160, vocab=128, qkv_bias=True,
         q_chunk=8, kv_chunk=8, max_seq=64,
-        nr_drop=DropoutSpec(rate=0.25, block_size=8),
+        plan=DropoutPlan({"nr": DropoutSpec(rate=0.25, block_size=8)}),
     )
     d.update(kw)
     return TransformerConfig(**d)

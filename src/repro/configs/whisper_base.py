@@ -4,6 +4,7 @@ frame embeddings) [arXiv:2212.04356]."""
 import jax.numpy as jnp
 
 from repro.configs.base import ArchSpec, FULL_ATTN_SKIP
+from repro.core.dropout_plan import DropoutPlan
 from repro.core.sdrop import DropoutSpec
 from repro.models.transformer import TransformerConfig
 
@@ -17,7 +18,7 @@ def full(**kw):
         param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
         kv_repeat=1,                   # MHA (8 q = 8 kv): no headroom to
         q_chunk=1024, kv_chunk=1024,   # repeat; heads fall back to flat shard
-        nr_drop=DropoutSpec(rate=0.25, block_size=64),
+        plan=DropoutPlan({"nr": DropoutSpec(rate=0.25, block_size=64)}),
     )
     d.update(kw)
     return TransformerConfig(**d)
@@ -29,7 +30,7 @@ def smoke(**kw):
         n_heads=4, n_kv_heads=4, d_ff=128, vocab=128,
         is_encoder_decoder=True, enc_seq=12, norm="layernorm",
         pos="sinusoidal", mlp="gelu_mlp", q_chunk=8, kv_chunk=8, max_seq=64,
-        nr_drop=DropoutSpec(rate=0.25, block_size=8),
+        plan=DropoutPlan({"nr": DropoutSpec(rate=0.25, block_size=8)}),
     )
     d.update(kw)
     return TransformerConfig(**d)

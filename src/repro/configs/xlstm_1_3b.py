@@ -4,6 +4,7 @@ h->h recurrence, so NR+RH+ST structured dropout applies natively."""
 import jax.numpy as jnp
 
 from repro.configs.base import ArchSpec
+from repro.core.dropout_plan import DropoutPlan
 from repro.core.sdrop import DropoutSpec
 from repro.models.xlstm import XLSTMConfig
 
@@ -13,8 +14,8 @@ def full(**kw):
         name="xlstm-1.3b", num_layers=48, d_model=2048, n_heads=4,
         vocab=50304, proj_factor=2.0, slstm_every=8, conv_kernel=4,
         chunk=256, param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
-        nr_drop=DropoutSpec(rate=0.25, block_size=128),
-        rh_drop=DropoutSpec(rate=0.25, block_size=64),
+        plan=DropoutPlan({"nr": DropoutSpec(rate=0.25, block_size=128),
+                          "rh": DropoutSpec(rate=0.25, block_size=64)}),
     )
     d.update(kw)
     return XLSTMConfig(**d)
@@ -24,8 +25,8 @@ def smoke(**kw):
     d = dict(
         name="xlstm-smoke", num_layers=8, d_model=64, n_heads=4, vocab=128,
         proj_factor=2.0, slstm_every=4, chunk=8,
-        nr_drop=DropoutSpec(rate=0.25, block_size=8),
-        rh_drop=DropoutSpec(rate=0.5, block_size=1),
+        plan=DropoutPlan({"nr": DropoutSpec(rate=0.25, block_size=8),
+                          "rh": DropoutSpec(rate=0.5, block_size=1)}),
     )
     d.update(kw)
     return XLSTMConfig(**d)

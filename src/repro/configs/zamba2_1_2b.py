@@ -4,6 +4,7 @@ ssm_state=64 — Mamba2 backbone + weight-shared attention block
 import jax.numpy as jnp
 
 from repro.configs.base import ArchSpec
+from repro.core.dropout_plan import DropoutPlan
 from repro.core.sdrop import DropoutSpec
 from repro.models.ssm import Mamba2Config
 
@@ -15,7 +16,7 @@ def full(**kw):
         shared_attn=True, shared_every=6, attn_heads=32, attn_kv_heads=32,
         attn_ff=8192,
         param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
-        nr_drop=DropoutSpec(rate=0.25, block_size=128),
+        plan=DropoutPlan({"nr": DropoutSpec(rate=0.25, block_size=128)}),
     )
     d.update(kw)
     return Mamba2Config(**d)
@@ -26,7 +27,7 @@ def smoke(**kw):
         name="zamba2-smoke", num_layers=8, d_model=64, ssm_state=8,
         n_heads=4, chunk=8, vocab=128, shared_attn=True, shared_every=3,
         attn_heads=4, attn_kv_heads=4, attn_ff=128,
-        nr_drop=DropoutSpec(rate=0.25, block_size=8),
+        plan=DropoutPlan({"nr": DropoutSpec(rate=0.25, block_size=8)}),
     )
     d.update(kw)
     return Mamba2Config(**d)

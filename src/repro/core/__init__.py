@@ -2,6 +2,7 @@
 from repro.core.masks import (BatchPattern, TimePattern, CASES,
                               sample_keep_blocks, structured_mask, random_mask,
                               kept_units, inverted_scale)
-from repro.core.sdrop import DropoutSpec, DropoutState, make_state, step_key
+from repro.core.dropout_plan import DropoutCtx, DropoutPlan, NULL_CTX
+from repro.core.sdrop import DropoutSpec, DropoutState, make_state
 from repro.core.sparse_matmul import (sdrop_matmul, sdrop_matmul_out,
                                       gather_compact, scatter_compact)

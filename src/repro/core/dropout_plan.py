@@ -1,0 +1,245 @@
+"""Unified dropout-plan API: named application sites, one RNG-stream contract.
+
+A ``DropoutPlan`` maps **named application sites** — the places a model
+consumes activations through dropout (``"embed"``, ``"nr"``, ``"layer3/rh"``,
+``"out"``) — to ``DropoutSpec``s. The plan is the *experiment variable*: the
+model stays fixed while the plan flips the paper's pattern knob (Case I-IV,
+NR/RH placement, block granularity) for every architecture family.
+
+``plan.bind(key, step)`` returns a ``DropoutCtx`` that owns all PRNG-stream
+derivation. The contract:
+
+  * the training ``step`` is folded into ``key`` once, at bind time — every
+    training step re-samples (standard dropout behaviour);
+  * each site gets an independent stream by hashing its full site *name*
+    (CRC-32), so there are no hand-numbered ``fold_in(key, 3)`` calls and two
+    sites can never collide by accident;
+  * the site's *time pattern* is applied inside the ctx: callers pass the
+    index ``t`` of the arch's recurrence axis (sequence time for RNN cells,
+    layer index for depth-scanned stacks) and the ctx folds it in for
+    ``PER_STEP`` specs or ignores it for ``FIXED`` ones.
+
+Site-name resolution is hierarchical: a site ``"enc/layer0/nr"`` matches an
+exact plan entry first, then its last path component (``"nr"``), then a
+``"*"`` wildcard, else it is inactive. The *spec* may be shared between sites
+this way, but the PRNG stream is always derived from the full name — same
+spec, independent masks.
+
+Block sizes are caps, not hard requirements: when a site's feature dimension
+is not divisible by ``spec.block_size`` the ctx uses the largest divisor of
+the dimension that does not exceed it, so one ``--dropout case3:0.5:bs128``
+override runs unchanged on a 64-wide smoke config and a 8192-wide full one.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Mapping, Optional, Tuple, Union
+
+import jax
+
+from repro.core import masks as _masks
+from repro.core import sdrop
+from repro.core.masks import TimePattern
+from repro.core.sdrop import DropoutSpec, DropoutState
+
+_INACTIVE = DropoutSpec(rate=0.0)
+
+
+def site_stream(site: str) -> int:
+    """Deterministic per-site stream id (stable across processes/versions)."""
+    return zlib.crc32(site.encode("utf-8")) & 0x7FFFFFFF
+
+
+def fit_block(spec: DropoutSpec, dim: int) -> DropoutSpec:
+    """Clamp block_size to the largest divisor of ``dim`` <= the requested one."""
+    bs = min(spec.block_size, dim)
+    while dim % bs:
+        bs -= 1
+    return spec if bs == spec.block_size else spec.with_(block_size=bs)
+
+
+@dataclasses.dataclass(frozen=True)
+class DropoutPlan:
+    """Mapping of named application sites to DropoutSpecs (hashable, frozen)."""
+
+    sites: Union[Tuple[Tuple[str, DropoutSpec], ...], Mapping[str, DropoutSpec]] = ()
+
+    def __post_init__(self):
+        s = self.sites
+        if isinstance(s, Mapping):
+            s = s.items()
+        s = tuple(sorted(((str(k), v) for k, v in s),
+                         key=lambda kv: kv[0]))        # canonical: == / hash
+        names = [name for name, _ in s]
+        if len(set(names)) != len(names):
+            dup = sorted({n for n in names if names.count(n) > 1})
+            raise ValueError(f"duplicate dropout site(s): {dup}")
+        for name, spec in s:
+            if not isinstance(spec, DropoutSpec):
+                raise TypeError(f"site {name!r}: expected DropoutSpec, "
+                                f"got {type(spec).__name__}")
+        object.__setattr__(self, "sites", s)
+
+    # -- lookup -------------------------------------------------------------
+
+    @property
+    def mapping(self) -> dict:
+        return dict(self.sites)
+
+    def spec(self, site: str) -> DropoutSpec:
+        """Resolve a (possibly hierarchical) site name to its spec."""
+        d = self.mapping
+        if site in d:
+            return d[site]
+        base = site.rsplit("/", 1)[-1]
+        if base in d:
+            return d[base]
+        if "*" in d:
+            return d["*"]
+        return _INACTIVE
+
+    @property
+    def any_active(self) -> bool:
+        return any(spec.active for _, spec in self.sites)
+
+    def active_sites(self) -> Tuple[str, ...]:
+        return tuple(name for name, spec in self.sites if spec.active)
+
+    # -- construction -------------------------------------------------------
+
+    @staticmethod
+    def off() -> "DropoutPlan":
+        return DropoutPlan()
+
+    @staticmethod
+    def case(name: str, rate: float, block_size: int = 1, impl: str = "xla",
+             sites: Tuple[str, ...] = ("*",)) -> "DropoutPlan":
+        """One of the paper's Case I-IV at every named site.
+
+            DropoutPlan.case("case3", rate=0.5, block_size=128,
+                             sites=("nr", "rh"))
+        """
+        spec = DropoutSpec.case(name, rate, block_size=block_size, impl=impl)
+        return DropoutPlan({s: spec for s in sites})
+
+    @staticmethod
+    def parse(text: str, sites: Tuple[str, ...] = ("*",)) -> "DropoutPlan":
+        """Parse a CLI override like ``case3:0.5:bs128`` or ``off``.
+
+        Grammar: ``off`` | ``case{1..4}:<rate>[:bs<int>][:<impl>]``.
+        """
+        text = text.strip()
+        if text in ("", "off", "none"):
+            return DropoutPlan.off()
+        parts = text.split(":")
+        case = parts[0]
+        if case not in _masks.CASES:
+            raise ValueError(f"unknown dropout case {case!r}; expected one of "
+                             f"{sorted(_masks.CASES)} or 'off'")
+        if len(parts) < 2:
+            raise ValueError(f"dropout override {text!r} is missing a rate "
+                             f"(e.g. '{case}:0.5')")
+        rate = float(parts[1])
+        if not 0.0 <= rate < 1.0:
+            raise ValueError(f"dropout rate must be in [0, 1), got {rate}")
+        block_size, impl = 1, "xla"
+        for tok in parts[2:]:
+            if tok.startswith("bs"):
+                block_size = int(tok[2:])
+                if block_size < 1:
+                    raise ValueError(f"block size must be >= 1, got {tok!r}")
+            elif tok in ("xla", "pallas"):
+                impl = tok
+            else:
+                raise ValueError(f"unknown dropout override token {tok!r}")
+        return DropoutPlan.case(case, rate, block_size=block_size, impl=impl,
+                                sites=sites)
+
+    def replace(self, site_specs: Mapping[str, DropoutSpec]) -> "DropoutPlan":
+        """New plan with the given sites added/overridden (hierarchical
+        names like "enc/layer0/nr" are valid keys)."""
+        d = self.mapping
+        d.update(site_specs)
+        return DropoutPlan(d)
+
+    # -- serialization ------------------------------------------------------
+
+    def to_dict(self) -> dict:
+        """JSON-serializable round-trippable description of the plan."""
+        return {"sites": {name: spec.to_dict() for name, spec in self.sites}}
+
+    @staticmethod
+    def from_dict(d: dict) -> "DropoutPlan":
+        return DropoutPlan({name: DropoutSpec.from_dict(sd)
+                            for name, sd in d.get("sites", {}).items()})
+
+    # -- binding ------------------------------------------------------------
+
+    def bind(self, key: Optional[jax.Array], step=None, *,
+             deterministic: bool = False) -> "DropoutCtx":
+        """Bind the plan to a PRNG key for one training step.
+
+        ``key=None`` or ``deterministic=True`` yields an eval-mode ctx whose
+        states/applies are all no-ops (the explicit replacement for the old
+        implicit ``drop_key is None`` convention).
+        """
+        if key is None or deterministic or not self.any_active:
+            return DropoutCtx(plan=self, key=None)
+        if step is not None:
+            key = jax.random.fold_in(key, step)
+        return DropoutCtx(plan=self, key=key)
+
+
+@dataclasses.dataclass(frozen=True)
+class DropoutCtx:
+    """A plan bound to (key, step): the only source of dropout randomness."""
+
+    plan: DropoutPlan
+    key: Optional[jax.Array] = None
+
+    @property
+    def deterministic(self) -> bool:
+        return self.key is None
+
+    def spec(self, site: str) -> DropoutSpec:
+        return self.plan.spec(site)
+
+    def site_key(self, site: str, *, t=None) -> jax.Array:
+        """The site's PRNG key; ``t`` indexes the site's recurrence axis."""
+        if self.key is None:
+            raise ValueError("site_key on a deterministic DropoutCtx")
+        k = jax.random.fold_in(self.key, site_stream(site))
+        if t is not None and self.spec(site).time_pattern == TimePattern.PER_STEP:
+            k = jax.random.fold_in(k, t)
+        return k
+
+    def state(self, site: str, batch, dim: int, *, t=None) -> DropoutState:
+        """Materialize the site's DropoutState for one application.
+
+        ``batch`` is an int or a tuple of leading dims (random-pattern dense
+        masks are shaped accordingly; structured masks ignore it).
+        """
+        spec = self.spec(site)
+        if self.key is None or not spec.active:
+            return DropoutState(spec=spec)
+        spec = fit_block(spec, dim)
+        shape = (batch,) if isinstance(batch, int) else tuple(batch)
+        n = 1
+        for s in shape:
+            n *= int(s)
+        st = sdrop.make_state(self.site_key(site, t=t), spec, n, dim)
+        if st.dense_mask is not None and len(shape) > 1:
+            st.dense_mask = st.dense_mask.reshape(*shape, dim)
+        return st
+
+    def apply(self, site: str, x: jax.Array, *, t=None) -> jax.Array:
+        """Mask-multiply ``x`` at the site (for elementwise consumers)."""
+        spec = self.spec(site)
+        if self.key is None or not spec.active:
+            return x
+        st = self.state(site, tuple(x.shape[:-1]), x.shape[-1], t=t)
+        return st.apply(x)
+
+
+NULL_CTX = DropoutCtx(plan=DropoutPlan())

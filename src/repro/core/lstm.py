@@ -21,8 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import layers as L
-from repro.core import sdrop
-from repro.core.sdrop import DropoutSpec
+from repro.core.dropout_plan import NULL_CTX, DropoutCtx
 
 
 class LSTMState(NamedTuple):
@@ -73,25 +72,22 @@ def lstm_cell(params, x, h_prev, c_prev, nr_drop, rh_drop, *,
 
 
 def lstm_stack(params, x_seq: jax.Array, state: LSTMState, *,
-               nr_spec: DropoutSpec, rh_spec: DropoutSpec,
-               key: Optional[jax.Array] = None,
-               deterministic: bool = False,
+               ctx: Optional[DropoutCtx] = None,
+               site: str = "lstm",
                forget_bias: float = 0.0,
                pointwise_impl: str = "xla"):
     """Run a multi-layer LSTM over a (T, B, D) sequence.
 
-    Returns (outputs (T, B, H), final LSTMState). Dropout keys are derived per
-    (layer, direction, t): PER_STEP specs fold the time index in (Case-III),
-    FIXED specs reuse the layer key (Case-II/IV).
+    Returns (outputs (T, B, H), final LSTMState). Dropout comes from the
+    bound ``ctx``: layer ``l`` consumes sites ``{site}/layer{l}/nr`` and
+    ``{site}/layer{l}/rh`` (resolved against the plan's "nr" / "rh" entries),
+    with the sequence index ``t`` as the time axis — PER_STEP specs re-sample
+    per step (Case-I/III), FIXED specs reuse one mask (Case-II/IV).
     """
     num_layers = len(params)
     hidden = state.h.shape[-1]
     batch = x_seq.shape[1]
-    if key is None:
-        key = jax.random.PRNGKey(0)
-        deterministic = True
-
-    layer_keys = jax.random.split(key, num_layers * 2).reshape(num_layers, 2, -1)
+    ctx = NULL_CTX if ctx is None else ctx
 
     def step(carry, xt_t):
         hs, cs = carry
@@ -99,12 +95,8 @@ def lstm_stack(params, x_seq: jax.Array, state: LSTMState, *,
         new_h, new_c = [], []
         inp = xt
         for l in range(num_layers):
-            k_nr = sdrop.step_key(layer_keys[l, 0], nr_spec, t)
-            k_rh = sdrop.step_key(layer_keys[l, 1], rh_spec, t)
-            nr = sdrop.make_state(k_nr, nr_spec, batch, inp.shape[-1],
-                                  deterministic=deterministic)
-            rh = sdrop.make_state(k_rh, rh_spec, batch, hidden,
-                                  deterministic=deterministic)
+            nr = ctx.state(f"{site}/layer{l}/nr", batch, inp.shape[-1], t=t)
+            rh = ctx.state(f"{site}/layer{l}/rh", batch, hidden, t=t)
             h, c = lstm_cell(params[l], inp, hs[l], cs[l], nr, rh,
                              forget_bias=forget_bias,
                              pointwise_impl=pointwise_impl)

@@ -1,10 +1,44 @@
-"""User-facing structured-dropout API (the paper's plug-in replacement).
+"""Structured-dropout primitives (the paper's plug-in replacement).
 
 A ``DropoutSpec`` selects one of the four cases of the paper's taxonomy plus
-the TPU block granularity. ``DropoutState`` is what a model threads through
-its layers: for structured cases it carries kept-block ids (compute is
-reclaimed via sparse_matmul); for random cases it carries a dense mask
-(baseline — regularization only, no speedup), matching Zaremba'14 / Gal'16.
+the TPU block granularity. ``DropoutState`` is the materialized decision for
+one application: structured cases carry kept-block ids (compute is reclaimed
+via sparse_matmul); random cases carry a dense mask (baseline —
+regularization only, no speedup), matching Zaremba'14 / Gal'16.
+
+Models do NOT call ``make_state`` directly anymore: they hold a
+``repro.core.dropout_plan.DropoutPlan`` mapping named application sites to
+specs, bind it once per training step (``plan.bind(key, step)``) and draw
+states/applies from the resulting ``DropoutCtx``. The ctx owns every PRNG
+stream (site-name hashing, FIXED vs PER_STEP time behaviour) — see
+``dropout_plan.py`` for the full contract.
+
+Choosing a dropout case (the paper's Fig. 1 taxonomy)
+-----------------------------------------------------
+
+Two axes — within-batch pattern x across-time pattern — give four cases:
+
+  ========  ===========  =========  ===========================================
+  case      batch        time       use it when
+  ========  ===========  =========  ===========================================
+  case1     RANDOM       PER_STEP   Zaremba'14 baseline; best-known
+                                    regularization, zero compute reclaim.
+  case2     RANDOM       FIXED      Gal'16 variational / AWD-LSTM; one mask per
+                                    sequence (RNNs) or shared across layers
+                                    (depth-scanned archs).
+  case3     STRUCTURED   PER_STEP   **the paper** — whole units dropped
+                                    batch-uniformly, re-sampled each step:
+                                    compacted (1-p)-sized matmuls in FP/BP/WG
+                                    with Case-I-level task metrics.
+  case4     STRUCTURED   FIXED      most restricted; static column pruning for
+                                    the duration of one bind (ablation).
+  ========  ===========  =========  ===========================================
+
+"Time" is the architecture's recurrence axis: the sequence dimension for LSTM
+/ sLSTM cells, the layer dimension for depth-scanned stacks (transformer,
+mLSTM, SSM). The training step always re-samples (folded at bind time).
+``block_size`` trades mask granularity for TPU-lane-aligned compaction:
+1 = paper-faithful columns, 128 = MXU/lane-aligned blocks.
 """
 from __future__ import annotations
 
@@ -43,6 +77,25 @@ class DropoutSpec:
         return DropoutSpec(rate=rate, batch_pattern=bp, time_pattern=tp,
                            block_size=block_size, impl=impl)
 
+    @property
+    def case_name(self) -> str:
+        """The Fig.-1 case this spec realizes ("case1".."case4")."""
+        pair = (self.batch_pattern, self.time_pattern)
+        return next(n for n, p in masks.CASES.items() if p == pair)
+
+    def to_dict(self) -> dict:
+        return {"rate": self.rate, "batch_pattern": self.batch_pattern.value,
+                "time_pattern": self.time_pattern.value,
+                "block_size": self.block_size, "impl": self.impl}
+
+    @staticmethod
+    def from_dict(d: dict) -> "DropoutSpec":
+        return DropoutSpec(rate=float(d["rate"]),
+                           batch_pattern=BatchPattern(d["batch_pattern"]),
+                           time_pattern=TimePattern(d["time_pattern"]),
+                           block_size=int(d.get("block_size", 1)),
+                           impl=d.get("impl", "xla"))
+
 
 @dataclasses.dataclass
 class DropoutState:
@@ -58,6 +111,7 @@ class DropoutState:
     # used by the beyond-paper FFN-inner structured dropout.
     inner_kb: Optional[jax.Array] = None
     inner_scale: float = 1.0
+    inner_spec: Optional[DropoutSpec] = None
 
     @property
     def structured(self) -> bool:
@@ -83,10 +137,11 @@ def make_state(key: Optional[jax.Array], spec: DropoutSpec, batch: int,
                hidden: int, *, deterministic: bool = False) -> DropoutState:
     """Sample a DropoutState for one application (one time step / layer).
 
-    Case-III/IV time behaviour is realized by how the *caller* derives ``key``:
-    PER_STEP callers fold the step index into the key (see ``step_key``);
-    FIXED callers reuse the same key each step, which with our counter-based
-    sampling reproduces the identical mask.
+    Time behaviour is realized by how the key is derived: ``DropoutCtx``
+    folds the recurrence index in for PER_STEP specs and reuses the site key
+    for FIXED ones, which with counter-based sampling reproduces the
+    identical mask. Models should draw states via ``DropoutCtx.state``
+    rather than calling this directly.
     """
     if deterministic or not spec.active or key is None:
         return DropoutState(spec=spec)
@@ -96,10 +151,3 @@ def make_state(key: Optional[jax.Array], spec: DropoutSpec, batch: int,
         return DropoutState(spec=spec, keep_blocks=kb, scale=scale)
     dm = masks.random_mask(key, batch, hidden, spec.rate)
     return DropoutState(spec=spec, dense_mask=dm, scale=1.0 / (1.0 - spec.rate))
-
-
-def step_key(key: jax.Array, spec: DropoutSpec, t) -> jax.Array:
-    """Derive the time-step-t key per the spec's time pattern."""
-    if spec.time_pattern == TimePattern.FIXED:
-        return key
-    return jax.random.fold_in(key, t)

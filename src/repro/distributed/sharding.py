@@ -56,9 +56,15 @@ def _is_param(x):
 
 
 def unzip(tree):
-    """Split a Param-tagged tree into (values_tree, axes_tree)."""
-    values = jax.tree.map(lambda p: p.value, tree, is_leaf=_is_param)
-    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=_is_param)
+    """Split a Param-tagged tree into (values_tree, axes_tree).
+
+    Untagged leaves (models without sharding annotations, e.g. the paper's
+    RNN families) pass through with all-None axes, i.e. replicated."""
+    values = jax.tree.map(lambda p: p.value if _is_param(p) else p, tree,
+                          is_leaf=_is_param)
+    axes = jax.tree.map(
+        lambda p: p.axes if _is_param(p)
+        else (None,) * getattr(p, "ndim", 0), tree, is_leaf=_is_param)
     return values, axes
 
 

@@ -43,10 +43,11 @@ def cell_id(arch, shape, mesh_name, variant):
     return f"{arch}|{shape}|{mesh_name}|{variant}"
 
 
-def run_cell(spec, shape, mesh, rules, *, use_dropout, collect_hlo=False):
+def run_cell(spec, shape, mesh, rules, *, use_dropout, dropout="",
+             collect_hlo=False):
     cfg = spec.full()
     cell = steps.build_cell(spec, cfg, shape, mesh, rules,
-                            use_dropout=use_dropout)
+                            use_dropout=use_dropout, dropout=dropout)
     t0 = time.time()
     with mesh:
         lowered = cell.jitted.lower(*cell.example_args)
@@ -115,6 +116,9 @@ def main():
                     choices=["sdrop", "dense"],
                     help="train cells: structured dropout on (paper mode) "
                          "or off (dense baseline)")
+    ap.add_argument("--dropout", default="",
+                    help="dropout-plan override applied to every lowered "
+                         "cell (e.g. case3:0.5:bs128)")
     ap.add_argument("--out", default="results/dryrun.json")
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--rules", default="",
@@ -165,7 +169,8 @@ def main():
                 t0 = time.time()
                 try:
                     rec = run_cell(spec, shape, mesh, rules,
-                                   use_dropout=(args.variant == "sdrop"))
+                                   use_dropout=(args.variant == "sdrop"),
+                                   dropout=args.dropout)
                     rec["variant"] = args.variant
                     cache[cid] = rec
                     n_ok += 1

@@ -156,8 +156,15 @@ def default_opt(cfg) -> optim.optimizers.Optimizer:
 
 def build_cell(spec: ArchSpec, cfg, shape: ShapeSpec, mesh: Mesh,
                rules: shd.ShardingRules, *, use_dropout: bool = True,
-               n_micro: int = 1) -> LoweredCell:
-    """Assemble the jitted step + abstract inputs for one (arch, shape)."""
+               n_micro: int = 1, dropout: str = "") -> LoweredCell:
+    """Assemble the jitted step + abstract inputs for one (arch, shape).
+
+    ``dropout`` is an optional CLI-style plan override ("case3:0.5:bs128")
+    applied to the config before lowering, so dry-runs/perf sweeps lower the
+    exact plan the trainer would run.
+    """
+    if dropout:
+        cfg = adapters.apply_dropout(spec, cfg, dropout)
     init_fn, p_shapes, p_shard, _ = param_setup(spec, cfg, mesh, rules)
     rep = replicated(mesh)
 

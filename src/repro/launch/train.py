@@ -24,6 +24,7 @@ import numpy as np
 from repro import checkpoint as ckpt_mod
 from repro import configs, optim
 from repro.configs import adapters
+from repro.core.dropout_plan import DropoutPlan
 from repro.configs.shapes import ShapeSpec
 from repro.data import synthetic
 from repro.distributed import sharding as shd
@@ -83,11 +84,19 @@ def main(argv=None):
     ap.add_argument("--resume", default="none", choices=["none", "auto"])
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--no-dropout", action="store_true")
+    ap.add_argument("--dropout", default="",
+                    help="dropout-plan override: 'case{1..4}:<rate>[:bs<int>]"
+                         "[:pallas]' (e.g. case3:0.5:bs128) or 'off'; applies "
+                         "the case at the arch's canonical sites")
     ap.add_argument("--straggler-factor", type=float, default=3.0)
     args = ap.parse_args(argv)
 
     spec = configs.get_arch(args.arch)
     cfg = spec.smoke() if args.smoke else spec.full()
+    if args.dropout:
+        cfg = adapters.apply_dropout(spec, cfg, args.dropout)
+        print(f"[dropout] plan override {args.dropout!r} -> sites "
+              f"{list(cfg.plan.active_sites())}")
     mesh = mesh_mod.make_host_mesh()
     rules = shd.rules_for_mesh(mesh)
 
@@ -112,7 +121,14 @@ def main(argv=None):
 
     batch_fn = make_batch_fn(spec, cfg, args.batch, args.seq, args.seed)
     key = jax.random.PRNGKey(args.seed)
+    # record the pattern that actually RAN: --no-dropout withholds the key,
+    # so every site is inactive regardless of the config's plan
+    ckpt_meta = None
+    if hasattr(cfg, "plan"):
+        plan_ran = DropoutPlan.off() if args.no_dropout else cfg.plan
+        ckpt_meta = {"dropout_plan": plan_ran.to_dict()}
     times = []
+    loss = float("nan")   # resume past end of run: no step executes
     t_train0 = time.time()
     for step in range(start, args.steps):
         t0 = time.time()
@@ -134,13 +150,14 @@ def main(argv=None):
             or step + 1 == args.steps)
         if do_ckpt:
             ckpt_mod.save_checkpoint(args.ckpt_dir, step + 1,
-                                     (params, opt_state))
+                                     (params, opt_state), meta=ckpt_meta)
             if hook.should_save:
                 print(f"[preempt] final checkpoint at step {step+1}; exiting")
                 return 0
     total = time.time() - t_train0
-    print(f"done: {args.steps - start} steps in {total:.1f}s "
-          f"({(args.steps - start)/max(total,1e-9):.2f} steps/s), "
+    n_run = max(args.steps - start, 0)
+    print(f"done: {n_run} steps in {total:.1f}s "
+          f"({n_run/max(total,1e-9):.2f} steps/s), "
           f"final loss {loss:.4f}")
     return 0
 

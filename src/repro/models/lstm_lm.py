@@ -2,31 +2,28 @@
 
 Zaremba'14 medium (2x650, NR dropout .5) / large (2x1500, .65) and
 AWD-LSTM (3x1150, embed 400, dropout vector [.4,.1,.25,.4] + recurrent .5).
-The dropout *pattern* (Case I-IV, NR / NR+RH) is the experiment variable —
-``LMDropouts`` bundles every application point so benchmarks flip one knob.
+The dropout *pattern* (Case I-IV, NR / NR+RH placement) is the experiment
+variable — a ``DropoutPlan`` over the named sites
+
+    "embed"  after the embedding lookup
+    "nr"     non-recurrent input of every LSTM layer
+    "rh"     recurrent hidden of every LSTM layer (the paper's extension)
+    "out"    pre-FC output dropout
+
+so benchmarks flip one knob (``cfg.plan``) while the model stays fixed.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import layers as L
 from repro.core import lstm as lstm_mod
-from repro.core import sdrop
+from repro.core.dropout_plan import DropoutPlan
 from repro.core.sdrop import DropoutSpec
-from repro.models import transformer as T
-
-
-@dataclasses.dataclass(frozen=True)
-class LMDropouts:
-    """Dropout specs for each application point of the LSTM LM."""
-    inp: DropoutSpec = DropoutSpec(rate=0.0)    # after embedding lookup
-    nr: DropoutSpec = DropoutSpec(rate=0.0)     # between LSTM layers
-    rh: DropoutSpec = DropoutSpec(rate=0.0)     # recurrent hidden (paper ext.)
-    out: DropoutSpec = DropoutSpec(rate=0.0)    # pre-FC output dropout
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,7 +35,7 @@ class LSTMLMConfig:
     num_layers: int = 2
     tie_embeddings: bool = False
     init_scale: float = 0.05
-    drops: LMDropouts = LMDropouts()
+    plan: DropoutPlan = DropoutPlan()
     param_dtype: Any = jnp.float32
     loss_chunks: int = 4
 
@@ -50,26 +47,24 @@ def _mk(defaults: dict, kw: dict) -> LSTMLMConfig:
 def zaremba_medium(**kw) -> LSTMLMConfig:
     return _mk(dict(name="zaremba_medium", vocab=10000, embed=650, hidden=650,
                     num_layers=2, init_scale=0.05,
-                    drops=LMDropouts(inp=DropoutSpec(rate=0.5),
-                                     nr=DropoutSpec(rate=0.5),
-                                     out=DropoutSpec(rate=0.5))), kw)
+                    plan=DropoutPlan.case("case3", 0.5,
+                                          sites=("embed", "nr", "out"))), kw)
 
 
 def zaremba_large(**kw) -> LSTMLMConfig:
     return _mk(dict(name="zaremba_large", vocab=10000, embed=1500, hidden=1500,
                     num_layers=2, init_scale=0.04,
-                    drops=LMDropouts(inp=DropoutSpec(rate=0.65),
-                                     nr=DropoutSpec(rate=0.65),
-                                     out=DropoutSpec(rate=0.65))), kw)
+                    plan=DropoutPlan.case("case3", 0.65,
+                                          sites=("embed", "nr", "out"))), kw)
 
 
 def awd_lstm(**kw) -> LSTMLMConfig:
     return _mk(dict(name="awd_lstm", vocab=10000, embed=400, hidden=1150,
                     num_layers=3, tie_embeddings=True,
-                    drops=LMDropouts(inp=DropoutSpec(rate=0.4),
-                                     nr=DropoutSpec(rate=0.25),
-                                     rh=DropoutSpec(rate=0.5),
-                                     out=DropoutSpec(rate=0.4))), kw)
+                    plan=DropoutPlan({"embed": DropoutSpec(rate=0.4),
+                                      "nr": DropoutSpec(rate=0.25),
+                                      "rh": DropoutSpec(rate=0.5),
+                                      "out": DropoutSpec(rate=0.4)})), kw)
 
 
 def init_params(key, cfg: LSTMLMConfig):
@@ -90,28 +85,19 @@ def init_params(key, cfg: LSTMLMConfig):
     return p
 
 
-def forward(params, tokens, cfg: LSTMLMConfig, *, state=None, drop_key=None):
+def forward(params, tokens, cfg: LSTMLMConfig, *, state=None, ctx=None):
     """tokens: (B, S) -> (logits (B,S,V), final state)."""
+    if ctx is None:
+        ctx = cfg.plan.bind(None)
     B, S = tokens.shape
     x = jnp.take(params["embed"], tokens, axis=0)         # (B,S,E)
-    if drop_key is not None and cfg.drops.inp.active:
-        k_in = jax.random.fold_in(drop_key, 1)
-        st = sdrop.make_state(k_in, cfg.drops.inp, B * S, cfg.embed)
-        x = st.apply(x.reshape(B * S, -1)).reshape(B, S, -1) \
-            if st.dense_mask is not None else st.apply(x)
+    x = ctx.apply("embed", x)
     if state is None:
         state = lstm_mod.zero_state(cfg.num_layers, B, cfg.hidden)
     ys, state = lstm_mod.lstm_stack(
-        params["lstm"], x.transpose(1, 0, 2), state,
-        nr_spec=cfg.drops.nr, rh_spec=cfg.drops.rh,
-        key=jax.random.fold_in(drop_key, 2) if drop_key is not None else None,
-        deterministic=drop_key is None)
+        params["lstm"], x.transpose(1, 0, 2), state, ctx=ctx)
     h = ys.transpose(1, 0, 2)                              # (B,S,H)
-    if drop_key is not None and cfg.drops.out.active:
-        k_out = jax.random.fold_in(drop_key, 3)
-        st = sdrop.make_state(k_out, cfg.drops.out, B * S, cfg.hidden)
-        h = st.apply(h.reshape(B * S, -1)).reshape(B, S, -1) \
-            if st.dense_mask is not None else st.apply(h)
+    h = ctx.apply("out", h)
     if cfg.tie_embeddings:
         if "proj" in params:
             h = L.dense(params["proj"], h)
@@ -124,9 +110,8 @@ def forward(params, tokens, cfg: LSTMLMConfig, *, state=None, drop_key=None):
 
 def loss_fn(params, batch, cfg: LSTMLMConfig, *, state=None, drop_key=None,
             rules=None, step=0):
-    key = (jax.random.fold_in(drop_key, step) if drop_key is not None else None)
-    logits, _ = forward(params, batch["tokens"], cfg, state=state,
-                        drop_key=key)
+    ctx = cfg.plan.bind(drop_key, step)
+    logits, _ = forward(params, batch["tokens"], cfg, state=state, ctx=ctx)
     lp = jax.nn.log_softmax(logits, axis=-1)
     nll = -jnp.take_along_axis(lp, batch["labels"][..., None], axis=-1)
     return nll.mean()

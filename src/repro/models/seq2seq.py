@@ -1,9 +1,10 @@
 """Luong'15 attention NMT (paper Table 2): 2-layer unidirectional LSTM
 encoder-decoder with general attention + input feeding.
 
-Structured dropout (NR and the paper's RH extension) is applied in both the
-encoder and decoder stacks; an additional NR dropout on the encoder/decoder
-outputs matches the paper's §4.2 modification.
+Dropout comes from a ``DropoutPlan`` over named sites — "nr" / "rh" resolve
+for both stacks (full site names "enc/layer0/nr", "dec/layer1/rh", ... keep
+the PRNG streams independent), and "out" covers the encoder/decoder output
+dropout of the paper's §4.2 modification.
 """
 from __future__ import annotations
 
@@ -15,7 +16,7 @@ import jax.numpy as jnp
 
 from repro.core import layers as L
 from repro.core import lstm as lstm_mod
-from repro.core import sdrop
+from repro.core.dropout_plan import DropoutPlan
 from repro.core.sdrop import DropoutSpec
 
 
@@ -27,9 +28,7 @@ class NMTConfig:
     embed: int = 512
     hidden: int = 512
     num_layers: int = 2
-    nr: DropoutSpec = DropoutSpec(rate=0.3)
-    rh: DropoutSpec = DropoutSpec(rate=0.0)
-    out: DropoutSpec = DropoutSpec(rate=0.0)   # encoder/decoder output drop
+    plan: DropoutPlan = DropoutPlan({"nr": DropoutSpec(rate=0.3)})
     param_dtype: Any = jnp.float32
 
 
@@ -50,38 +49,27 @@ def init_params(key, cfg: NMTConfig):
     }
 
 
-def _apply_out_drop(h, spec, key):
-    if key is None or not spec.active:
-        return h
-    st = sdrop.make_state(key, spec, h.shape[0] * h.shape[1], h.shape[-1])
-    if st.dense_mask is not None:
-        B, S, H = h.shape
-        return st.apply(h.reshape(B * S, H)).reshape(B, S, H)
-    return st.apply(h)
-
-
-def encode(params, src, cfg: NMTConfig, *, drop_key=None):
+def encode(params, src, cfg: NMTConfig, *, ctx=None):
+    if ctx is None:
+        ctx = cfg.plan.bind(None)
     B, S = src.shape
     x = jnp.take(params["src_embed"], src, axis=0)
     state = lstm_mod.zero_state(cfg.num_layers, B, cfg.hidden)
     ys, state = lstm_mod.lstm_stack(
-        params["encoder"], x.transpose(1, 0, 2), state,
-        nr_spec=cfg.nr, rh_spec=cfg.rh,
-        key=jax.random.fold_in(drop_key, 1) if drop_key is not None else None,
-        deterministic=drop_key is None)
+        params["encoder"], x.transpose(1, 0, 2), state, ctx=ctx, site="enc")
     enc = ys.transpose(1, 0, 2)                            # (B,S,H)
-    enc = _apply_out_drop(
-        enc, cfg.out,
-        jax.random.fold_in(drop_key, 2) if drop_key is not None else None)
+    enc = ctx.apply("enc/out", enc)
     return enc, state
 
 
 def decode_train(params, tgt_in, enc_out, enc_state, cfg: NMTConfig, *,
-                 drop_key=None, src_mask=None):
+                 ctx=None, src_mask=None):
     """Teacher-forced decoding with Luong general attention + input feeding.
 
     tgt_in: (B, St); enc_out: (B, Ss, H). Returns logits (B, St, V).
     """
+    if ctx is None:
+        ctx = cfg.plan.bind(None)
     B, St = tgt_in.shape
     H = cfg.hidden
     x = jnp.take(params["tgt_embed"], tgt_in, axis=0)      # (B,St,E)
@@ -90,9 +78,6 @@ def decode_train(params, tgt_in, enc_out, enc_state, cfg: NMTConfig, *,
         src_mask = jnp.ones(enc_out.shape[:2], bool)
 
     dec_params = params["decoder"]
-    key = jax.random.fold_in(drop_key, 3) if drop_key is not None else None
-    layer_keys = (jax.random.split(key, cfg.num_layers * 2)
-                  .reshape(cfg.num_layers, 2, -1) if key is not None else None)
 
     def step(carry, inp):
         (hs, cs, feed) = carry
@@ -101,15 +86,8 @@ def decode_train(params, tgt_in, enc_out, enc_state, cfg: NMTConfig, *,
         new_h, new_c = [], []
         cur = inp_t
         for l in range(cfg.num_layers):
-            if layer_keys is not None:
-                nr = sdrop.make_state(
-                    sdrop.step_key(layer_keys[l, 0], cfg.nr, t), cfg.nr,
-                    B, cur.shape[-1])
-                rh = sdrop.make_state(
-                    sdrop.step_key(layer_keys[l, 1], cfg.rh, t), cfg.rh,
-                    B, H)
-            else:
-                nr = rh = None
+            nr = ctx.state(f"dec/layer{l}/nr", B, cur.shape[-1], t=t)
+            rh = ctx.state(f"dec/layer{l}/rh", B, H, t=t)
             h, c = lstm_mod.lstm_cell(dec_params[l], cur, hs[l], cs[l], nr, rh)
             new_h.append(h)
             new_c.append(c)
@@ -118,9 +96,9 @@ def decode_train(params, tgt_in, enc_out, enc_state, cfg: NMTConfig, *,
         scores = jnp.einsum("bh,bsh->bs", cur, enc_proj)
         scores = jnp.where(src_mask, scores, -1e30)
         alpha = jax.nn.softmax(scores, axis=-1)
-        ctx = jnp.einsum("bs,bsh->bh", alpha, enc_out)
+        ctx_vec = jnp.einsum("bs,bsh->bh", alpha, enc_out)
         h_tilde = jnp.tanh(L.dense(params["w_comb"],
-                                   jnp.concatenate([ctx, cur], -1)))
+                                   jnp.concatenate([ctx_vec, cur], -1)))
         return (jnp.stack(new_h), jnp.stack(new_c), h_tilde), h_tilde
 
     h0 = enc_state.h
@@ -129,19 +107,17 @@ def decode_train(params, tgt_in, enc_out, enc_state, cfg: NMTConfig, *,
     (_, _, _), h_tildes = jax.lax.scan(
         step, (h0, c0, feed0), (x.transpose(1, 0, 2), jnp.arange(St)))
     ht = h_tildes.transpose(1, 0, 2)                       # (B,St,H)
-    ht = _apply_out_drop(
-        ht, cfg.out,
-        jax.random.fold_in(drop_key, 4) if drop_key is not None else None)
+    ht = ctx.apply("dec/out", ht)
     return L.dense(params["fc"], ht).astype(jnp.float32)
 
 
 def loss_fn(params, batch, cfg: NMTConfig, *, drop_key=None, rules=None,
             step=0):
     """batch: {"src", "tgt_in", "tgt_out", ["src_mask", "tgt_mask"]}."""
-    key = (jax.random.fold_in(drop_key, step) if drop_key is not None else None)
-    enc, st = encode(params, batch["src"], cfg, drop_key=key)
+    ctx = cfg.plan.bind(drop_key, step)
+    enc, st = encode(params, batch["src"], cfg, ctx=ctx)
     logits = decode_train(params, batch["tgt_in"], enc, st, cfg,
-                          drop_key=key, src_mask=batch.get("src_mask"))
+                          ctx=ctx, src_mask=batch.get("src_mask"))
     lp = jax.nn.log_softmax(logits, axis=-1)
     nll = -jnp.take_along_axis(lp, batch["tgt_out"][..., None], -1)[..., 0]
     mask = batch.get("tgt_mask")

@@ -23,9 +23,8 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import sdrop
 from repro.core import sparse_matmul as sm
-from repro.core.sdrop import DropoutSpec
+from repro.core.dropout_plan import DropoutPlan
 from repro.distributed.sharding import tag, shard_act
 from repro.models import transformer as T
 
@@ -51,7 +50,9 @@ class Mamba2Config:
     compute_dtype: Any = jnp.float32
     loss_chunks: int = 8
     remat: str = "full"
-    nr_drop: DropoutSpec = DropoutSpec(rate=0.0)
+    # dropout pattern over the "nr" site (block input projection; the SSM
+    # core has no h-to-h weight, so RH does not apply — DESIGN §Arch-applic.)
+    plan: DropoutPlan = DropoutPlan()
 
     @property
     def inner(self) -> int:
@@ -269,15 +270,9 @@ def mamba_block_apply(pl, x, cfg: Mamba2Config, drop_state=None, initial=None):
     return x + out, Sf
 
 
-def _drop_state(key, cfg, layer_idx, step):
-    if key is None or not cfg.nr_drop.active:
-        return None
-    k = sdrop.step_key(jax.random.fold_in(key, layer_idx), cfg.nr_drop, step)
-    return sdrop.make_state(k, cfg.nr_drop, 0, cfg.d_model)
-
-
-def forward(params, tokens, cfg: Mamba2Config, *, rules=None, drop_key=None,
-            step=0):
+def forward(params, tokens, cfg: Mamba2Config, *, rules=None, ctx=None):
+    if ctx is None:
+        ctx = cfg.plan.bind(None)
     x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
     x = shard_act(x, ("batch", "seq", "embed_act"), rules)
     x0 = x                                                # zamba residual feed
@@ -288,7 +283,9 @@ def forward(params, tokens, cfg: Mamba2Config, *, rules=None, drop_key=None,
 
         def body(x, inp):
             pl, li = inp
-            ds = _drop_state(drop_key, cfg, li, step)
+            # layer index = the depth-scan time axis; inactive sites yield
+            # a no-op state inside ctx.state
+            ds = ctx.state("nr", x.shape[:2], cfg.d_model, t=li)
             y, _ = mamba_block_apply(pl, x, cfg, drop_state=ds)
             return y, None
         f = jax.checkpoint(body) if cfg.remat != "none" else body
@@ -325,8 +322,8 @@ def lm_logits(params, feats):
 
 def loss_fn(params, batch, cfg: Mamba2Config, *, rules=None, drop_key=None,
             step=0):
-    feats = forward(params, batch["tokens"], cfg, rules=rules,
-                    drop_key=drop_key, step=step)
+    ctx = cfg.plan.bind(drop_key, step)
+    feats = forward(params, batch["tokens"], cfg, rules=rules, ctx=ctx)
     tcfg = T.TransformerConfig(vocab=cfg.vocab, d_model=cfg.d_model,
                                loss_chunks=cfg.loss_chunks)
     return T.lm_loss({"lm_head": params["lm_head"]}, feats, batch["labels"],

@@ -18,7 +18,7 @@ import jax.numpy as jnp
 
 from repro.core import layers as L
 from repro.core import lstm as lstm_mod
-from repro.core import sdrop
+from repro.core.dropout_plan import DropoutPlan
 from repro.core.sdrop import DropoutSpec
 
 
@@ -33,8 +33,8 @@ class TaggerConfig:
     word_embed: int = 100
     hidden: int = 200
     num_tags: int = 9
-    inp: DropoutSpec = DropoutSpec(rate=0.5)   # on concat(CNN, embed)
-    rh: DropoutSpec = DropoutSpec(rate=0.0)    # recurrent (paper extension)
+    # sites: "inp" on concat(CNN, embed); "rh" recurrent (paper extension)
+    plan: DropoutPlan = DropoutPlan({"inp": DropoutSpec(rate=0.5)})
     param_dtype: Any = jnp.float32
 
 
@@ -69,8 +69,10 @@ def char_cnn(params, chars, cfg: TaggerConfig):
     return jnp.max(jax.nn.relu(conv), axis=2)              # (B,S,F)
 
 
-def features(params, batch, cfg: TaggerConfig, *, drop_key=None):
+def features(params, batch, cfg: TaggerConfig, *, ctx=None):
     """-> (B, S, 2H) BiLSTM features."""
+    if ctx is None:
+        ctx = cfg.plan.bind(None)
     words, chars = batch["words"], batch["chars"]
     B, S = words.shape
     we = jnp.take(params["word_embed"], words, axis=0)
@@ -78,33 +80,24 @@ def features(params, batch, cfg: TaggerConfig, *, drop_key=None):
     x = jnp.concatenate([we, ce], axis=-1)                 # (B,S,feat)
 
     # paper §4.3: structured dropout on the concatenated features
-    if drop_key is not None and cfg.inp.active:
-        st = sdrop.make_state(jax.random.fold_in(drop_key, 1), cfg.inp,
-                              B * S, x.shape[-1])
-        if st.dense_mask is not None:
-            x = st.apply(x.reshape(B * S, -1)).reshape(B, S, -1)
-        else:
-            x = st.apply(x)
+    x = ctx.apply("inp", x)
 
-    def run(dirn, xs, key):
+    def run(dirn, xs):
         state = lstm_mod.zero_state(1, B, cfg.hidden)
-        ys, _ = lstm_mod.lstm_stack(
-            params[dirn], xs, state, nr_spec=DropoutSpec(rate=0.0),
-            rh_spec=cfg.rh, key=key, deterministic=key is None)
+        # site prefix = direction -> independent fwd/bwd RH streams
+        ys, _ = lstm_mod.lstm_stack(params[dirn], xs, state, ctx=ctx,
+                                    site=dirn)
         return ys
 
-    kf = jax.random.fold_in(drop_key, 2) if drop_key is not None else None
-    kb = jax.random.fold_in(drop_key, 3) if drop_key is not None else None
     xs = x.transpose(1, 0, 2)                              # (S,B,feat)
-    fwd = run("fwd", xs, kf)
-    bwd = run("bwd", xs[::-1], kb)[::-1]
+    fwd = run("fwd", xs)
+    bwd = run("bwd", xs[::-1])[::-1]
     h = jnp.concatenate([fwd, bwd], axis=-1).transpose(1, 0, 2)
     return h
 
 
-def emissions(params, batch, cfg: TaggerConfig, *, drop_key=None):
-    return L.dense(params["fc"], features(params, batch, cfg,
-                                          drop_key=drop_key))
+def emissions(params, batch, cfg: TaggerConfig, *, ctx=None):
+    return L.dense(params["fc"], features(params, batch, cfg, ctx=ctx))
 
 
 def crf_log_norm(emit, trans, mask):
@@ -135,8 +128,8 @@ def crf_score(emit, tags, trans, mask):
 
 def loss_fn(params, batch, cfg: TaggerConfig, *, drop_key=None, rules=None,
             step=0):
-    key = (jax.random.fold_in(drop_key, step) if drop_key is not None else None)
-    emit = emissions(params, batch, cfg, drop_key=key)
+    ctx = cfg.plan.bind(drop_key, step)
+    emit = emissions(params, batch, cfg, ctx=ctx)
     mask = batch.get("mask", jnp.ones(batch["words"].shape, bool))
     logZ = crf_log_norm(emit, params["crf"], mask)
     score = crf_score(emit, batch["tags"], params["crf"], mask)

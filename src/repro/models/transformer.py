@@ -30,9 +30,8 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import sdrop
 from repro.core import sparse_matmul as sm
-from repro.core.sdrop import DropoutSpec
+from repro.core.dropout_plan import DropoutPlan, fit_block
 from repro.distributed.sharding import tag, shard_act
 
 # ---------------------------------------------------------------------------
@@ -89,9 +88,11 @@ class TransformerConfig:
     kv_chunk: int = 512
     loss_chunks: int = 8
     remat: str = "full"          # full | dots | none
-    # structured dropout (the paper's technique, NR direction)
-    nr_drop: DropoutSpec = DropoutSpec(rate=0.0)
-    ffn_inner_drop: DropoutSpec = DropoutSpec(rate=0.0)   # beyond-paper
+    # the paper's dropout pattern, over named sites: "nr" covers the
+    # residual-stream inputs of both sub-layers (full site names "attn/nr",
+    # "mlp/nr" keep the streams independent); "ffn_inner" is the
+    # beyond-paper structured drop over the FFN inner dimension.
+    plan: DropoutPlan = DropoutPlan()
     kv_repeat: int = 1           # replicate kv heads for TP shardability
 
     @property
@@ -459,8 +460,8 @@ def _proj_sdrop(x, w, b, drop_state):
 
 def _mlp(pl, h, cfg, drop_state, rules):
     """Dense FFN with NR sdrop on input; optional FFN-inner structured drop."""
-    inner = cfg.ffn_inner_drop
-    if inner.structured and drop_state is not None and drop_state.inner_kb is not None:
+    inner = drop_state.inner_spec if drop_state is not None else None
+    if inner is not None and drop_state.inner_kb is not None:
         kb, scale = drop_state.inner_kb, drop_state.inner_scale
         bs = inner.block_size
         up = sm.sdrop_matmul_out(h, pl["w_up"], kb, rate=inner.rate, block_size=bs)
@@ -580,37 +581,32 @@ def block_apply(pl, x, cfg: TransformerConfig, *, causal: bool,
 # ---------------------------------------------------------------------------
 
 
-def _layer_drop_states(key, cfg: TransformerConfig, layer_idx, step, bs_shape):
+def _layer_drop_states(ctx, cfg: TransformerConfig, layer_idx, bs_shape,
+                       prefix=""):
     """Two NR DropoutStates (attention-in, mlp-in) + optional FFN-inner ids.
 
     bs_shape = (B, S): the random (Case-I/II) baseline samples a per-token
     mask of that shape; structured cases sample kept-block ids over d_model.
+    The layer index is this arch's time axis: PER_STEP specs re-sample per
+    layer, FIXED specs share one mask across the depth scan. ``prefix``
+    separates the encoder stack's streams ("enc/") from the decoder's.
     """
     from repro.core import masks as _m
-    if key is None or not (cfg.nr_drop.active or cfg.ffn_inner_drop.structured):
+    if ctx is None or ctx.deterministic:
         return (None, None)
-    k = jax.random.fold_in(key, layer_idx)
-    ka = sdrop.step_key(jax.random.fold_in(k, 0), cfg.nr_drop, step)
-    km = sdrop.step_key(jax.random.fold_in(k, 1), cfg.nr_drop, step)
-    ki = sdrop.step_key(jax.random.fold_in(k, 2), cfg.ffn_inner_drop, step)
-
-    def nr_state(kk):
-        if not cfg.nr_drop.active:
-            return sdrop.DropoutState(spec=cfg.nr_drop)
-        if cfg.nr_drop.batch_pattern == sdrop.BatchPattern.STRUCTURED:
-            return sdrop.make_state(kk, cfg.nr_drop, 0, cfg.d_model)
-        B, S = bs_shape
-        dm = _m.random_mask(kk, B * S, cfg.d_model, cfg.nr_drop.rate)
-        return sdrop.DropoutState(spec=cfg.nr_drop,
-                                  dense_mask=dm.reshape(B, S, cfg.d_model),
-                                  scale=1.0 / (1.0 - cfg.nr_drop.rate))
-
-    st_a, st_m = nr_state(ka), nr_state(km)
-    if cfg.ffn_inner_drop.structured and cfg.moe is None:
+    inner = fit_block(ctx.spec(prefix + "mlp/ffn_inner"), cfg.d_ff)
+    if not (ctx.spec(prefix + "attn/nr").active
+            or ctx.spec(prefix + "mlp/nr").active or inner.structured):
+        return (None, None)
+    st_a = ctx.state(prefix + "attn/nr", bs_shape, cfg.d_model, t=layer_idx)
+    st_m = ctx.state(prefix + "mlp/nr", bs_shape, cfg.d_model, t=layer_idx)
+    if inner.structured and cfg.moe is None:
+        ki = ctx.site_key(prefix + "mlp/ffn_inner", t=layer_idx)
         st_m.inner_kb = _m.sample_keep_blocks(
-            ki, cfg.d_ff, cfg.ffn_inner_drop.rate, cfg.ffn_inner_drop.block_size)
+            ki, cfg.d_ff, inner.rate, inner.block_size)
         st_m.inner_scale = _m.inverted_scale(
-            cfg.ffn_inner_drop.rate, cfg.d_ff, cfg.ffn_inner_drop.block_size)
+            inner.rate, cfg.d_ff, inner.block_size)
+        st_m.inner_spec = inner
     return (st_a, st_m)
 
 
@@ -635,14 +631,14 @@ def _embed_tokens(params, tokens, cfg):
     return x
 
 
-def _run_stack(blocks, x, cfg, *, causal, positions, rules, drop_key, step,
-               memory=None, num_layers=None):
+def _run_stack(blocks, x, cfg, *, causal, positions, rules, ctx=None,
+               site_prefix="", memory=None, num_layers=None):
     """scan over stacked layer params; remat per block."""
     L = num_layers or cfg.num_layers
 
     def body(x, inp):
         pl, li = inp
-        ds = _layer_drop_states(drop_key, cfg, li, step, x.shape[:2])
+        ds = _layer_drop_states(ctx, cfg, li, x.shape[:2], prefix=site_prefix)
         y, _ = block_apply(pl, x, cfg, causal=causal, drop_states=ds,
                            positions=positions, rules=rules, memory=memory)
         return y, None
@@ -651,18 +647,18 @@ def _run_stack(blocks, x, cfg, *, causal, positions, rules, drop_key, step,
     return x
 
 
-def encode(params, frames, cfg: TransformerConfig, rules=None):
+def encode(params, frames, cfg: TransformerConfig, rules=None, ctx=None):
     """Whisper encoder: frames (B, T_enc, D) from the conv-frontend stub."""
     pos = sinusoidal_table(frames.shape[1], cfg.d_model).astype(cfg.compute_dtype)
     x = frames.astype(cfg.compute_dtype) + pos[None]
     x = _run_stack(params["enc_blocks"], x, cfg, causal=False, positions=None,
-                   rules=rules, drop_key=None, step=0,
+                   rules=rules, ctx=ctx, site_prefix="enc/",
                    num_layers=cfg.enc_layers)
     return _norm(cfg, params["enc_ln_f"], x)
 
 
 def forward(params, inputs, cfg: TransformerConfig, *, rules=None,
-            drop_key=None, step=0, memory=None):
+            ctx=None, memory=None):
     """Token/embeds -> final-norm features (B, S, D)."""
     if cfg.embeds_in:
         x = inputs.astype(cfg.compute_dtype)
@@ -675,7 +671,7 @@ def forward(params, inputs, cfg: TransformerConfig, *, rules=None,
         positions = None
     x = shard_act(x, ("batch", "seq", "embed_act"), rules)
     x = _run_stack(params["blocks"], x, cfg, causal=True, positions=positions,
-                   rules=rules, drop_key=drop_key, step=step, memory=memory)
+                   rules=rules, ctx=ctx, memory=memory)
     return _norm(cfg, params["ln_f"], x)
 
 
@@ -710,12 +706,13 @@ def lm_loss(params, feats, labels, cfg: TransformerConfig, rules=None):
 def loss_fn(params, batch, cfg: TransformerConfig, *, rules=None,
             drop_key=None, step=0):
     """Training loss. batch: {"tokens" | "embeds", "labels", ["frames"]}."""
+    ctx = cfg.plan.bind(drop_key, step)
     memory = None
     if cfg.is_encoder_decoder:
-        memory = encode(params, batch["frames"], cfg, rules=rules)
+        memory = encode(params, batch["frames"], cfg, rules=rules, ctx=ctx)
     inputs = batch["embeds"] if cfg.embeds_in else batch["tokens"]
-    feats = forward(params, inputs, cfg, rules=rules, drop_key=drop_key,
-                    step=step, memory=memory)
+    feats = forward(params, inputs, cfg, rules=rules, ctx=ctx,
+                    memory=memory)
     return lm_loss(params, feats, batch["labels"], cfg, rules=rules)
 
 

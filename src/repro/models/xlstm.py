@@ -27,9 +27,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import masks as _masks
-from repro.core import sdrop
 from repro.core import sparse_matmul as sm
-from repro.core.sdrop import DropoutSpec
+from repro.core.dropout_plan import DropoutPlan
 from repro.distributed.sharding import tag, shard_act
 from repro.models import transformer as T
 
@@ -49,8 +48,10 @@ class XLSTMConfig:
     compute_dtype: Any = jnp.float32
     loss_chunks: int = 8
     remat: str = "full"
-    nr_drop: DropoutSpec = DropoutSpec(rate=0.0)
-    rh_drop: DropoutSpec = DropoutSpec(rate=0.0)   # sLSTM recurrent direction
+    # dropout pattern over named sites: "nr" (block input projections, time
+    # axis = layer index) and "rh" (sLSTM recurrent direction, time axis =
+    # sequence step)
+    plan: DropoutPlan = DropoutPlan()
     # §Perf (EXPERIMENTS.md xlstm iter 3): keep the sLSTM h carry replicated
     # so the per-step RH compaction gather stays local. Off by default =
     # the paper-faithful baseline recorded in the §Roofline table.
@@ -201,7 +202,10 @@ def slstm_step(x_gates, h_prev, state, R, *, rh_state=None, rules=None,
         r_gates = jnp.einsum("bhk,hkg->bhg", h_c, R_c,
                              preferred_element_type=jnp.float32)
     elif rh_state is not None and rh_state.dense_mask is not None:
-        hm = h_prev * rh_state.dense_mask.reshape(h_prev.shape) * rh_state.scale
+        # mask (B, 1, dh) or (B, dh): broadcast over (shared across) heads
+        dm = rh_state.dense_mask
+        dm = dm if dm.ndim == 3 else dm[:, None, :]
+        hm = h_prev * dm * rh_state.scale
         r_gates = jnp.einsum("bhd,hdg->bhg", hm, R,
                              preferred_element_type=jnp.float32)
     else:
@@ -368,7 +372,8 @@ def mlstm_block_apply(pl, x, cfg: XLSTMConfig, drop_state=None, initial=None,
     return x + y, state
 
 
-def slstm_block_apply(pl, x, cfg: XLSTMConfig, nr_state=None, rh_key=None,
+def slstm_block_apply(pl, x, cfg: XLSTMConfig, nr_state=None, ctx=None,
+                      rh_site: str = "slstm/rh",
                       initial=None, step0: int = 0, rules=None):
     """sLSTM block with scan over time; RH structured dropout per step."""
     B, S, D = x.shape
@@ -386,9 +391,10 @@ def slstm_block_apply(pl, x, cfg: XLSTMConfig, nr_state=None, rh_key=None,
         h_prev, st = carry
         xg_t, t = inp
         rh = None
-        if rh_key is not None and cfg.rh_drop.active:
-            k_t = sdrop.step_key(rh_key, cfg.rh_drop, t)
-            rh = sdrop.make_state(k_t, cfg.rh_drop, B, dh)
+        if ctx is not None and not ctx.deterministic \
+                and ctx.spec(rh_site).active:
+            # mask shared across heads: (B, 1, dh) broadcasts in slstm_step
+            rh = ctx.state(rh_site, (B, 1), dh, t=t)
         h_new, st_new = slstm_step(xg_t, h_prev, st, pl["R"], rh_state=rh,
                                    rules=rules, pin_h=cfg.pin_h_carry)
         return (h_new, st_new), h_new
@@ -413,16 +419,9 @@ def slstm_block_apply(pl, x, cfg: XLSTMConfig, nr_state=None, rh_key=None,
 # ---------------------------------------------------------------------------
 
 
-def _drop_state(key, cfg, layer_idx, kind_idx, step):
-    if key is None or not cfg.nr_drop.active:
-        return None
-    k = jax.random.fold_in(jax.random.fold_in(key, layer_idx), kind_idx)
-    k = sdrop.step_key(k, cfg.nr_drop, step)
-    return sdrop.make_state(k, cfg.nr_drop, 0, cfg.d_model)
-
-
-def forward(params, tokens, cfg: XLSTMConfig, *, rules=None, drop_key=None,
-            step=0):
+def forward(params, tokens, cfg: XLSTMConfig, *, rules=None, ctx=None):
+    if ctx is None:
+        ctx = cfg.plan.bind(None)
     x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
     x = shard_act(x, ("batch", "seq", "embed_act"), rules)
     kinds = cfg.layer_kinds
@@ -432,7 +431,9 @@ def forward(params, tokens, cfg: XLSTMConfig, *, rules=None, drop_key=None,
     def m_scan(x, blocks, base, count):
         def body(x, inp):
             pl, li = inp
-            ds = _drop_state(drop_key, cfg, li, 0, step)
+            # layer index = the depth-scan time axis; inactive sites yield
+            # a no-op state inside ctx.state
+            ds = ctx.state("mlstm/nr", x.shape[:2], cfg.d_model, t=li)
             y, _ = mlstm_block_apply(pl, x, cfg, drop_state=ds, rules=rules)
             return y, None
         f = jax.checkpoint(body) if cfg.remat != "none" else body
@@ -450,11 +451,10 @@ def forward(params, tokens, cfg: XLSTMConfig, *, rules=None, drop_key=None,
         grp = jax.tree.map(lambda a: a[mi:mi + per_group], mt)
         x = m_scan(x, grp, g * cfg.slstm_every, per_group)
         sl = jax.tree.map(lambda a: a[g], st)
-        nr = _drop_state(drop_key, cfg, g * cfg.slstm_every + per_group, 1, step)
-        rhk = (jax.random.fold_in(drop_key, 10_000 + g)
-               if drop_key is not None else None)
-        x, _ = slstm_block_apply(sl, x, cfg, nr_state=nr, rh_key=rhk,
-                                 rules=rules)
+        nr = ctx.state("slstm/nr", x.shape[:2], cfg.d_model,
+                       t=g * cfg.slstm_every + per_group)
+        x, _ = slstm_block_apply(sl, x, cfg, nr_state=nr, ctx=ctx,
+                                 rh_site=f"slstm{g}/rh", rules=rules)
         mi += per_group
     n_m = kinds.count("m")
     if mi < n_m:
@@ -474,8 +474,8 @@ def lm_logits(params, feats):
 
 def loss_fn(params, batch, cfg: XLSTMConfig, *, rules=None, drop_key=None,
             step=0):
-    feats = forward(params, batch["tokens"], cfg, rules=rules,
-                    drop_key=drop_key, step=step)
+    ctx = cfg.plan.bind(drop_key, step)
+    feats = forward(params, batch["tokens"], cfg, rules=rules, ctx=ctx)
     tcfg = T.TransformerConfig(vocab=cfg.vocab, d_model=cfg.d_model,
                                loss_chunks=cfg.loss_chunks)
     return T.lm_loss({"lm_head": params["lm_head"]}, feats, batch["labels"],

@@ -1,0 +1,222 @@
+"""DropoutPlan / DropoutCtx contract tests.
+
+The invariants the unified API guarantees:
+  * per-site PRNG streams are independent (different sites => different
+    masks) and deterministic (same site + key + step => same mask);
+  * FIXED time patterns yield identical masks across the recurrence axis
+    through the ctx, PER_STEP re-samples;
+  * migrated model forward passes are bit-identical to the deterministic
+    path at rate=0, and Case-III applications equal the mask-multiply
+    reference;
+  * plans round-trip through to_dict/from_dict and the CLI parser.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import masks
+from repro.core.dropout_plan import DropoutCtx, DropoutPlan, fit_block
+from repro.core.sdrop import DropoutSpec
+
+KEY = jax.random.PRNGKey(7)
+
+CASE3 = DropoutSpec.case("case3", 0.5, block_size=8)
+CASE4 = DropoutSpec.case("case4", 0.5, block_size=8)
+CASE1 = DropoutSpec.case("case1", 0.5)
+CASE2 = DropoutSpec.case("case2", 0.5)
+
+
+def _kb(ctx, site, t=None, dim=64):
+    return np.asarray(ctx.state(site, 4, dim, t=t).keep_blocks)
+
+
+class TestStreams:
+    def test_sites_are_independent(self):
+        plan = DropoutPlan({"a": CASE3, "b": CASE3})
+        ctx = plan.bind(KEY, 0)
+        assert not np.array_equal(_kb(ctx, "a"), _kb(ctx, "b"))
+
+    def test_same_site_reproducible(self):
+        plan = DropoutPlan({"a": CASE3})
+        k1 = _kb(plan.bind(KEY, 3), "a", t=2)
+        k2 = _kb(plan.bind(KEY, 3), "a", t=2)
+        assert np.array_equal(k1, k2)
+
+    def test_training_step_resamples(self):
+        plan = DropoutPlan({"a": CASE3, "f": CASE4})
+        a0 = _kb(plan.bind(KEY, 0), "a")
+        a1 = _kb(plan.bind(KEY, 1), "a")
+        assert not np.array_equal(a0, a1)
+        # even FIXED specs re-sample across *training* steps
+        f0 = _kb(plan.bind(KEY, 0), "f", t=0)
+        f1 = _kb(plan.bind(KEY, 1), "f", t=0)
+        assert not np.array_equal(f0, f1)
+
+    def test_hierarchical_resolution(self):
+        plan = DropoutPlan({"nr": CASE3, "enc/layer1/nr": CASE1})
+        assert plan.spec("enc/layer0/nr") == CASE3      # basename fallback
+        assert plan.spec("enc/layer1/nr") == CASE1      # exact wins
+        assert not plan.spec("unknown").active          # default inactive
+        wild = DropoutPlan({"*": CASE3})
+        assert wild.spec("anything/at/all") == CASE3
+
+    def test_shared_spec_distinct_streams(self):
+        """Two sites resolving to the same plan entry get different masks."""
+        plan = DropoutPlan({"nr": CASE3})
+        ctx = plan.bind(KEY, 0)
+        assert not np.array_equal(_kb(ctx, "lstm/layer0/nr"),
+                                  _kb(ctx, "lstm/layer1/nr"))
+
+
+class TestTimePattern:
+    def test_fixed_identical_across_t(self):
+        ctx = DropoutPlan({"rh": CASE4}).bind(KEY, 0)
+        assert np.array_equal(_kb(ctx, "rh", t=0), _kb(ctx, "rh", t=9))
+
+    def test_per_step_resamples_across_t(self):
+        ctx = DropoutPlan({"rh": CASE3}).bind(KEY, 0)
+        assert not np.array_equal(_kb(ctx, "rh", t=0), _kb(ctx, "rh", t=9))
+
+    def test_random_fixed_mask(self):
+        ctx = DropoutPlan({"x": CASE2}).bind(KEY, 0)
+        m0 = np.asarray(ctx.state("x", 4, 64, t=0).dense_mask)
+        m9 = np.asarray(ctx.state("x", 4, 64, t=9).dense_mask)
+        assert np.array_equal(m0, m9)
+
+
+class TestCtxMechanics:
+    def test_deterministic_ctx_is_noop(self):
+        plan = DropoutPlan({"a": CASE3})
+        for ctx in (plan.bind(None), plan.bind(KEY, deterministic=True)):
+            assert ctx.deterministic
+            x = jnp.ones((2, 8))
+            assert ctx.state("a", 2, 8).inactive
+            np.testing.assert_array_equal(ctx.apply("a", x), x)
+
+    def test_apply_equals_mask_multiply(self):
+        """Case-III through the ctx == dense mask-multiply reference."""
+        ctx = DropoutPlan({"a": CASE3}).bind(KEY, 0)
+        x = jax.random.normal(KEY, (3, 5, 64))
+        st = ctx.state("a", (3, 5), 64)
+        m = masks.keep_blocks_to_mask(st.keep_blocks, 64, 8)
+        ref = x * m * st.scale
+        np.testing.assert_allclose(np.asarray(ctx.apply("a", x)),
+                                   np.asarray(ref), rtol=1e-6)
+
+    def test_random_mask_shaped_to_leading_dims(self):
+        ctx = DropoutPlan({"a": CASE1}).bind(KEY, 0)
+        st = ctx.state("a", (3, 5), 16)
+        assert st.dense_mask.shape == (3, 5, 16)
+
+    def test_block_size_is_clamped_to_divisor(self):
+        spec = DropoutSpec.case("case3", 0.5, block_size=128)
+        assert fit_block(spec, 64).block_size == 64
+        assert fit_block(spec, 96).block_size == 96
+        assert fit_block(spec, 256).block_size == 128
+        ctx = DropoutPlan({"a": spec}).bind(KEY, 0)
+        st = ctx.state("a", 2, 48)          # 128 -> 48
+        assert st.keep_blocks is not None
+
+
+class TestSerialization:
+    def test_round_trip(self):
+        plan = DropoutPlan({"nr": CASE3, "rh": CASE2,
+                            "out": DropoutSpec(rate=0.1, block_size=4,
+                                               impl="pallas")})
+        assert DropoutPlan.from_dict(plan.to_dict()) == plan
+
+    def test_parse_override(self):
+        plan = DropoutPlan.parse("case3:0.5:bs128", sites=("nr", "rh"))
+        spec = plan.spec("nr")
+        assert spec.case_name == "case3"
+        assert spec.rate == 0.5 and spec.block_size == 128
+        assert plan.spec("rh") == spec
+        assert not DropoutPlan.parse("off").any_active
+        with pytest.raises(ValueError):
+            DropoutPlan.parse("case9:0.5")
+        with pytest.raises(ValueError):
+            DropoutPlan.parse("case3")
+
+    def test_adapter_sites_cover_all_kinds(self):
+        from repro.configs import adapters
+        assert set(adapters.DROPOUT_SITES) == set(adapters._MODULES)
+        for kind in adapters.DROPOUT_SITES:
+            plan = adapters.dropout_override(kind, "case3:0.5:bs8")
+            assert plan.any_active
+
+
+class TestModelEquivalence:
+    def _lm(self, plan):
+        from repro.models import lstm_lm
+        cfg = lstm_lm.LSTMLMConfig(vocab=64, embed=32, hidden=32,
+                                   num_layers=2, plan=plan)
+        params = lstm_lm.init_params(KEY, cfg)
+        tok = jax.random.randint(KEY, (2, 6), 0, 64)
+        return lstm_lm, cfg, params, tok
+
+    def test_rate0_bit_identical_to_deterministic(self):
+        """A rate-0 plan with a live key must not perturb the forward pass."""
+        zero = DropoutPlan({"embed": DropoutSpec(rate=0.0),
+                            "nr": DropoutSpec(rate=0.0)})
+        lstm_lm, cfg, params, tok = self._lm(zero)
+        with_key, _ = lstm_lm.forward(params, tok, cfg,
+                                      ctx=cfg.plan.bind(KEY, 0))
+        without, _ = lstm_lm.forward(params, tok, cfg)
+        np.testing.assert_array_equal(np.asarray(with_key),
+                                      np.asarray(without))
+
+    def test_rate0_transformer_bit_identical(self):
+        from repro.models import transformer as T
+        from repro.distributed.sharding import strip
+        cfg = T.TransformerConfig(num_layers=2, d_model=32, n_heads=4,
+                                  n_kv_heads=2, d_ff=64, vocab=50,
+                                  plan=DropoutPlan({"nr": DropoutSpec(0.0)}))
+        p = strip(T.init_params(KEY, cfg))
+        tk = jax.random.randint(KEY, (2, 8), 0, 50)
+        a = T.forward(p, tk, cfg, ctx=cfg.plan.bind(KEY, 0))
+        b = T.forward(p, tk, cfg)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    @pytest.mark.parametrize("case", ["case1", "case2", "case3", "case4"])
+    def test_all_cases_train_on_lstm_lm(self, case):
+        plan = DropoutPlan.case(case, 0.5, block_size=8,
+                                sites=("embed", "nr", "rh", "out"))
+        lstm_lm, cfg, params, tok = self._lm(plan)
+        batch = {"tokens": tok, "labels": tok}
+        loss, grads = jax.value_and_grad(
+            lambda p: lstm_lm.loss_fn(p, batch, cfg, drop_key=KEY,
+                                      step=0))(params)
+        assert jnp.isfinite(loss)
+        gn = jnp.sqrt(sum(jnp.sum(g * g) for g in jax.tree.leaves(grads)))
+        assert jnp.isfinite(gn) and float(gn) > 0
+
+    def test_slstm_identity_rh_mask_is_noop(self):
+        """An all-keep dense RH mask with scale 1 must not perturb sLSTM."""
+        from repro.core.sdrop import DropoutState
+        from repro.models import xlstm as X
+        B, H, dh = 2, 4, 8
+        ks = [jax.random.fold_in(KEY, i) for i in range(4)]
+        xg = jax.random.normal(ks[0], (B, 4 * H * dh))
+        h_prev = jax.random.normal(ks[1], (B, H, dh))
+        st = (jnp.zeros((B, H, dh)), jnp.zeros((B, H, dh)),
+              jax.random.normal(ks[2], (B, H, dh)))
+        R = jax.random.normal(ks[3], (H, dh, 4 * dh)) * dh ** -0.5
+        ident = DropoutState(spec=CASE1, dense_mask=jnp.ones((B, 1, dh)),
+                             scale=1.0)
+        a, sa = X.slstm_step(xg, h_prev, st, R, rh_state=ident)
+        b, sb = X.slstm_step(xg, h_prev, st, R, rh_state=None)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+        for x, y in zip(sa, sb):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       rtol=1e-6)
+
+    def test_case3_changes_forward(self):
+        plan = DropoutPlan.case("case3", 0.5, block_size=8,
+                                sites=("nr", "rh"))
+        lstm_lm, cfg, params, tok = self._lm(plan)
+        a, _ = lstm_lm.forward(params, tok, cfg, ctx=cfg.plan.bind(KEY, 0))
+        b, _ = lstm_lm.forward(params, tok, cfg)
+        assert not np.allclose(np.asarray(a), np.asarray(b))
