@@ -46,9 +46,12 @@ class RunResult:
     final_loss: float
     # exact dropout pattern that ran, for the benchmark JSON record
     dropout_plan: Optional[dict] = None
+    # recurrent execution engine the run used ("scheduled" | "stepwise")
+    engine: str = ""
 
     def row(self):
-        return (f"{self.name:12s} {self.metric_name}={self.metric:8.3f}  "
+        label = f"{self.name}/{self.engine}" if self.engine else self.name
+        return (f"{label:22s} {self.metric_name}={self.metric:8.3f}  "
                 f"{self.ms_per_step:7.1f} ms/step  loss={self.final_loss:.3f}")
 
 
@@ -72,9 +75,27 @@ def train_and_time(step_fn: Callable, batches, params, opt_state, key,
 
 
 def speedup_table(results: list, baseline: str = "baseline"):
-    base = next(r for r in results if r.name == baseline)
+    """Rows + speedup vs the baseline run (same engine when engines vary)."""
+    def base_for(r):
+        cands = [b for b in results if b.name == baseline]
+        same = [b for b in cands if b.engine == r.engine]
+        return (same or cands)[0]
+
     lines = []
     for r in results:
+        base = base_for(r)
         lines.append(f"{r.row()}   speedup vs {baseline}: "
                      f"{base.ms_per_step / r.ms_per_step:5.2f}x")
     return "\n".join(lines)
+
+
+def engine_ratio_lines(results: list):
+    """scheduled/stepwise wall-clock ratio per dropout mode."""
+    lines = []
+    for name in {r.name for r in results}:
+        by_eng = {r.engine: r for r in results if r.name == name}
+        if "stepwise" in by_eng and "scheduled" in by_eng:
+            ratio = by_eng["stepwise"].ms_per_step / \
+                by_eng["scheduled"].ms_per_step
+            lines.append(f"  {name:12s} scheduled-engine speedup: {ratio:.2f}x")
+    return "\n".join(sorted(lines))

@@ -1,0 +1,247 @@
+"""Engine matrix benchmark: arch x dropout case x engine step-times.
+
+Times one full training step (fwd + bwd + optimizer, jitted, CPU backend)
+for every recurrent arch under every dropout case, on both recurrent
+engines, and reports the scheduled/stepwise ratio — the wall-clock value of
+hoisting mask sampling and the NR gate matmuls out of the ``lax.scan``.
+
+    PYTHONPATH=src python -m benchmarks.engines [--quick]
+
+``snapshot()`` is the perf-trajectory entry point: ``benchmarks.run
+--snapshot PR2`` calls it and writes ``BENCH_PR2.json`` at the repo root so
+future PRs can regress against this PR's step-times. The snapshot includes
+the acceptance cell ``lstm_lm_ptb_large`` — the Zaremba-large recurrent
+geometry (2x1500, rate .65, batch 20, unroll 35; bench-reduced vocab so the
+softmax does not mask the recurrent engine under test).
+"""
+from __future__ import annotations
+
+import argparse
+import gc
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.core.dropout_plan import DropoutPlan
+from repro.core.lstm import ENGINES as _ALL_ENGINES
+from repro.data import synthetic
+from repro.models import lstm_lm, seq2seq, tagger, xlstm
+
+# measurement order: stepwise first, then scheduled, within each round
+ENGINES = tuple(sorted(_ALL_ENGINES, reverse=True))
+CASES = ("case1", "case2", "case3", "case4")
+
+
+# ---------------------------------------------------------------------------
+# cell definitions: (kind, cfg_fn(case, engine), batch, seq)
+# ---------------------------------------------------------------------------
+
+
+def _plan(kind: str, case: str, rate: float, block: int) -> DropoutPlan:
+    sites = {
+        "lstm_lm": ("embed", "nr", "rh", "out"),
+        "nmt": ("nr", "rh", "out"),
+        "tagger": ("inp", "rh"),
+        "xlstm": ("nr", "rh"),
+    }[kind]
+    bs = block if case in ("case3", "case4") else 1
+    return DropoutPlan.case(case, rate, block_size=bs, sites=sites)
+
+
+def _cells(quick: bool):
+    """-> {name: (kind, cfg_fn(case, engine), batch, seq, steps)}."""
+    s = 4 if quick else 12
+    h_lm = 128 if quick else 256
+    d_x = 128 if quick else 256
+    bs_x = 8 if quick else 16
+    sq_x = 32 if quick else 48
+    cells = {
+        "lstm_lm": ("lstm_lm", lambda case, eng: lstm_lm.LSTMLMConfig(
+            vocab=1000, embed=h_lm, hidden=h_lm, num_layers=2,
+            plan=_plan("lstm_lm", case, 0.5, 8), engine=eng), 16, 32, s),
+        "nmt": ("nmt", lambda case, eng: seq2seq.NMTConfig(
+            src_vocab=500, tgt_vocab=500, embed=h_lm, hidden=h_lm,
+            num_layers=2, plan=_plan("nmt", case, 0.3, 8), engine=eng),
+            16, 24, s),
+        "tagger": ("tagger", lambda case, eng: tagger.TaggerConfig(
+            vocab=300, char_vocab=40, hidden=128, num_tags=9,
+            word_embed=100, char_filters=28,
+            plan=_plan("tagger", case, 0.5, 8), engine=eng), 16, 24, s),
+        # all-sLSTM so the time-scan (the part the engine changes) dominates;
+        # sized so the step is well above the host-noise floor (~40 ms cells
+        # measured +/-20% run-to-run; >=150 ms cells are stable)
+        "xlstm": ("xlstm", lambda case, eng: xlstm.XLSTMConfig(
+            num_layers=4, d_model=d_x, n_heads=4, vocab=256, chunk=16,
+            slstm_every=1, plan=_plan("xlstm", case, 0.5, 8), engine=eng),
+            bs_x, sq_x, s),
+    }
+    return cells
+
+
+def _acceptance_cell(quick: bool):
+    """The PTB-large case3 cell (paper Table 1 geometry, reduced vocab)."""
+    H = 512 if quick else 1500
+    steps = 3 if quick else 5
+    return ("lstm_lm", lambda case, eng: lstm_lm.LSTMLMConfig(
+        vocab=2000, embed=H, hidden=H, num_layers=2,
+        plan=_plan("lstm_lm", case, 0.65, 4), engine=eng), 20, 35, steps)
+
+
+# ---------------------------------------------------------------------------
+# one timed cell
+# ---------------------------------------------------------------------------
+
+
+def _batch_fn(kind: str, cfg, batch: int, seq: int):
+    if kind in ("lstm_lm", "xlstm"):
+        vocab = cfg.vocab
+        stream = synthetic.lm_stream(vocab, batch * (seq + 1) * 8, seed=0)
+
+        def fn(i):
+            n = batch * (seq + 1)
+            off = (i * n) % (len(stream) - n - 1)
+            chunk = stream[off:off + n].reshape(batch, seq + 1)
+            return {"tokens": chunk[:, :-1], "labels": chunk[:, 1:]}
+        return fn
+    if kind == "nmt":
+        return lambda i: synthetic.nmt_pairs(batch, cfg.src_vocab,
+                                             cfg.tgt_vocab, max_len=seq,
+                                             seed=i)
+    if kind == "tagger":
+        return lambda i: synthetic.ner_examples(batch, cfg.vocab,
+                                                cfg.char_vocab, cfg.num_tags,
+                                                seq=seq, seed=i)
+    raise ValueError(kind)
+
+
+class _Runner:
+    """One jitted training cell (params + opt state + batches), steppable."""
+
+    def __init__(self, kind, cfg, batch, seq, n_batches):
+        from repro.configs import adapters
+        from repro.distributed.sharding import strip
+
+        lfn = adapters.loss_fn(kind)
+        self.key = jax.random.PRNGKey(0)
+        self.params = strip(adapters.init_params(kind, self.key, cfg))
+        self.opt = optim.chain(optim.clip_by_global_norm(1.0),
+                               optim.adamw(1e-3))
+        self.opt_state = self.opt.init(self.params)
+        bf = _batch_fn(kind, cfg, batch, seq)
+        self.batches = [jax.tree.map(jnp.asarray, bf(i))
+                        for i in range(n_batches)]
+
+        @jax.jit
+        def step_fn(params, opt_state, b, key, i):
+            l, g = jax.value_and_grad(
+                lambda p: lfn(p, b, cfg, drop_key=key, step=i))(params)
+            upd, opt_state = self.opt.update(g, opt_state, params)
+            return optim.apply_updates(params, upd), opt_state, l
+
+        self._step = step_fn
+
+    def step(self, i):
+        b = self.batches[i % len(self.batches)]
+        self.params, self.opt_state, loss = self._step(
+            self.params, self.opt_state, b,
+            jax.random.fold_in(self.key, i), jnp.int32(i))
+        jax.block_until_ready(loss)
+
+
+def time_engines(kind, cfg_fn, case, batch, seq, steps, warmup=2):
+    """Paired step-times + ratio for one (arch, case) cell.
+
+    Both engines' cells are built up front, then stepped in interleaved
+    rounds (A/B per round) so host-load drift hits both equally. Reported
+    ms are best-observed (noise only ever adds); the ratio is the MEDIAN
+    of per-round paired ratios — the drift-cancelling estimator (a single
+    slow round perturbs each engine once, in the same round).
+    """
+    runners = {eng: _Runner(kind, cfg_fn(case, eng), batch, seq,
+                            warmup + steps) for eng in ENGINES}
+    for eng in ENGINES:
+        for i in range(warmup):
+            runners[eng].step(i)
+    times = {eng: [] for eng in ENGINES}
+    for i in range(warmup, warmup + steps):
+        for eng in ENGINES:
+            t0 = time.time()
+            runners[eng].step(i)
+            times[eng].append(time.time() - t0)
+    out = {eng: float(np.min(ts) * 1e3) for eng, ts in times.items()}
+    out["ratio"] = float(np.median([a / b for a, b in
+                                    zip(times["stepwise"],
+                                        times["scheduled"])]))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# matrix + snapshot
+# ---------------------------------------------------------------------------
+
+
+def run_matrix(quick: bool = False, cases=CASES, verbose: bool = True):
+    out = {}
+    cells = dict(_cells(quick))
+    cells["lstm_lm_ptb_large"] = _acceptance_cell(quick)
+    for name, (kind, cfg_fn, B, S, steps) in cells.items():
+        run_cases = ("case3",) if name == "lstm_lm_ptb_large" else cases
+        out[name] = {}
+        for case in run_cases:
+            row = time_engines(kind, cfg_fn, case, B, S, steps)
+            out[name][case] = row
+            if verbose:
+                print(f"{name:20s} {case}: stepwise {row['stepwise']:8.1f} ms"
+                      f"  scheduled {row['scheduled']:8.1f} ms"
+                      f"  ratio {row['ratio']:.2f}x")
+            # drop this cell's executables/buffers before the next one —
+            # long-process allocator state was measured skewing small cells
+            jax.clear_caches()
+            gc.collect()
+    return out
+
+
+def arch_ratios(cells: dict) -> dict:
+    """Per-arch scheduled-engine speedup: geometric mean over that arch's
+    case cells (individual ~40-400 ms cells carry a few % host noise; the
+    per-arch aggregate is the stable quantity)."""
+    out = {}
+    for name, by_case in cells.items():
+        rs = [row["ratio"] for row in by_case.values()]
+        out[name] = float(np.exp(np.mean(np.log(rs))))
+    return out
+
+
+def snapshot(tag: str, out_path: str, quick: bool = False) -> dict:
+    cells = run_matrix(quick=quick)
+    snap = {
+        "tag": tag,
+        "backend": jax.default_backend(),
+        "impl": "xla",
+        "quick": bool(quick),
+        "cells": cells,
+        # scheduled/stepwise per arch (geomean over cases): the headline
+        # "no slower on any recurrent arch" number
+        "arch_ratios": arch_ratios(cells),
+    }
+    with open(out_path, "w") as f:
+        json.dump(snap, f, indent=1, default=float)
+    print(f"\nsnapshot {tag} -> {out_path}")
+    for name, r in snap["arch_ratios"].items():
+        print(f"  {name:20s} scheduled-engine speedup {r:.2f}x")
+    return snap
+
+
+def main(quick: bool = False):
+    return run_matrix(quick=quick)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    main(quick=args.quick)

@@ -3,6 +3,13 @@
     PYTHONPATH=src python -m benchmarks.run [--quick]
 
 Emits a summary JSON to results/bench.json as well.
+
+``--snapshot TAG`` switches to perf-trajectory mode: it runs only the
+recurrent-engine matrix (benchmarks/engines.py — arch x case x engine
+step-times + scheduled/stepwise ratios) and writes ``BENCH_TAG.json`` at
+the repo root, so later PRs can regress their step-times against this one:
+
+    PYTHONPATH=src python -m benchmarks.run --snapshot PR2
 """
 from __future__ import annotations
 
@@ -11,15 +18,28 @@ import json
 import os
 import time
 
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="fewer steps (CI-speed)")
     ap.add_argument("--out", default="results/bench.json")
+    ap.add_argument("--snapshot", default="",
+                    help="perf-trajectory tag (e.g. PR2): run the engine "
+                         "matrix only and write BENCH_<tag>.json at the "
+                         "repo root")
     args = ap.parse_args(argv)
 
+    if args.snapshot:
+        from benchmarks import engines
+        path = os.path.join(_REPO_ROOT, f"BENCH_{args.snapshot}.json")
+        engines.snapshot(args.snapshot, path, quick=args.quick)
+        return
+
     from benchmarks import fig3_curve, table1_ptb, table2_nmt, table3_ner
+    from benchmarks import engines
     from benchmarks import kernels as kernel_bench
 
     t0 = time.time()
@@ -32,6 +52,7 @@ def main(argv=None) -> None:
     out["table2_nmt"] = table2_nmt.main(steps=steps23, quick=args.quick)
     out["table3_ner"] = table3_ner.main(steps=steps23, quick=args.quick)
     out["fig3_curve"] = fig3_curve.main(steps=steps_f, quick=args.quick)
+    out["engines"] = engines.main(quick=args.quick)
     out["kernels"] = kernel_bench.main(quick=args.quick)
 
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)

@@ -20,7 +20,7 @@ from repro.data import synthetic
 from repro.models import lstm_lm
 
 
-def _cfg(mode: str, hidden=650, vocab=2000):
+def _cfg(mode: str, hidden=650, vocab=2000, engine="scheduled"):
     rate = 0.5
     if mode == "baseline":
         plan = common.plan_random(rate, sites=("embed", "nr", "out"))
@@ -32,11 +32,12 @@ def _cfg(mode: str, hidden=650, vocab=2000):
         plan = common.plan_structured(rate, sites=("embed", "nr", "rh", "out"),
                                       block=2)
     return lstm_lm.LSTMLMConfig(vocab=vocab, embed=hidden, hidden=hidden,
-                                num_layers=2, plan=plan)
+                                num_layers=2, plan=plan, engine=engine)
 
 
-def run_mode(mode: str, steps: int, batch=20, seq=35, hidden=650):
-    cfg = _cfg(mode, hidden=hidden)
+def run_mode(mode: str, steps: int, batch=20, seq=35, hidden=650,
+             engine="scheduled"):
+    cfg = _cfg(mode, hidden=hidden, engine=engine)
     key = jax.random.PRNGKey(0)
     params = lstm_lm.init_params(key, cfg)
     opt = optim.chain(optim.clip_by_global_norm(5.0), optim.sgd(0.7))
@@ -58,7 +59,8 @@ def run_mode(mode: str, steps: int, batch=20, seq=35, hidden=650):
     ppl = lstm_lm.perplexity(params, jnp.asarray(val[0]),
                              jnp.asarray(val[1]), cfg)
     return common.RunResult(mode, ppl, "val_ppl", ms, loss,
-                            dropout_plan=cfg.plan.to_dict())
+                            dropout_plan=cfg.plan.to_dict(),
+                            engine=cfg.engine)
 
 
 def phase_speedups(rate=0.5, B=700, H=650, N=2600, block=2, n=10):
@@ -97,9 +99,11 @@ def main(steps: int = 25, quick: bool = False):
     print("Table 1 — PTB LM (Zaremba-medium geometry, synthetic stream)")
     print("=" * 72)
     hidden = 256 if quick else 650     # full mode = the paper's true width
-    results = [run_mode(m, steps, hidden=hidden) for m in
-               ("baseline", "nr_st", "nr_rh_st")]
+    results = [run_mode(m, steps, hidden=hidden, engine=e)
+               for m in ("baseline", "nr_st", "nr_rh_st")
+               for e in ("stepwise", "scheduled")]
     print(common.speedup_table(results))
+    print(common.engine_ratio_lines(results))
     fp, bp, wg = phase_speedups()
     print(f"\nper-phase matmul speedup at true medium gate shape "
           f"(rate .5): FP {fp:.2f}x  BP {bp:.2f}x  WG {wg:.2f}x "

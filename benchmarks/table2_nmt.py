@@ -16,7 +16,7 @@ from repro.data import synthetic
 from repro.models import seq2seq
 
 
-def _cfg(mode: str, hidden=512):
+def _cfg(mode: str, hidden=512, engine="scheduled"):
     rate = 0.3
     if mode == "baseline":
         plan = common.plan_random(rate, sites=("nr",))
@@ -25,7 +25,7 @@ def _cfg(mode: str, hidden=512):
     else:  # nr_rh_st
         plan = common.plan_structured(rate, sites=("nr", "rh", "out"))
     return seq2seq.NMTConfig(src_vocab=500, tgt_vocab=500, embed=hidden,
-                             hidden=hidden, plan=plan)
+                             hidden=hidden, plan=plan, engine=engine)
 
 
 def token_accuracy(params, cfg, val):
@@ -38,8 +38,9 @@ def token_accuracy(params, cfg, val):
     return float((jnp.asarray(val["tgt_out"]) == pred)[mask].mean())
 
 
-def run_mode(mode: str, steps: int, batch=32, hidden=512):
-    cfg = _cfg(mode, hidden=hidden)
+def run_mode(mode: str, steps: int, batch=32, hidden=512,
+             engine="scheduled"):
+    cfg = _cfg(mode, hidden=hidden, engine=engine)
     key = jax.random.PRNGKey(0)
     params = seq2seq.init_params(key, cfg)
     opt = optim.chain(optim.clip_by_global_norm(5.0), optim.adamw(2e-3))
@@ -61,7 +62,8 @@ def run_mode(mode: str, steps: int, batch=32, hidden=512):
                                              opt_state, key, steps)
     acc = token_accuracy(params, cfg, val)
     return common.RunResult(mode, acc, "tok_acc", ms, loss,
-                            dropout_plan=cfg.plan.to_dict())
+                            dropout_plan=cfg.plan.to_dict(),
+                            engine=cfg.engine)
 
 
 def main(steps: int = 20, quick: bool = False):
@@ -69,9 +71,11 @@ def main(steps: int = 20, quick: bool = False):
     print("Table 2 — NMT (Luong seq2seq geometry, synthetic De-En-like pairs)")
     print("=" * 72)
     hidden = 128 if quick else 512     # full mode = the paper's true width
-    results = [run_mode(m, steps, hidden=hidden)
-               for m in ("baseline", "nr_st", "nr_rh_st")]
+    results = [run_mode(m, steps, hidden=hidden, engine=e)
+               for m in ("baseline", "nr_st", "nr_rh_st")
+               for e in ("stepwise", "scheduled")]
     print(common.speedup_table(results))
+    print(common.engine_ratio_lines(results))
     return {"results": [r.__dict__ for r in results]}
 
 

@@ -11,10 +11,11 @@ from repro.data import synthetic
 from repro.models import tagger
 
 
-def _cfg(mode: str):
+def _cfg(mode: str, engine="scheduled"):
     rate = 0.5
     kw = dict(vocab=300, char_vocab=40, hidden=200, num_tags=9,
-              word_embed=100, char_filters=28)   # 128-dim concat feature
+              word_embed=100, char_filters=28,   # 128-dim concat feature
+              engine=engine)
     if mode == "baseline":
         return tagger.TaggerConfig(plan=common.plan_random(rate, ("inp",)),
                                    **kw)
@@ -37,8 +38,8 @@ def f1_score(params, cfg, val):
     return 2 * prec * rec / max(prec + rec, 1e-9)
 
 
-def run_mode(mode: str, steps: int, batch=32):
-    cfg = _cfg(mode)
+def run_mode(mode: str, steps: int, batch=32, engine="scheduled"):
+    cfg = _cfg(mode, engine=engine)
     key = jax.random.PRNGKey(0)
     params = tagger.init_params(key, cfg)
     opt = optim.chain(optim.clip_by_global_norm(5.0), optim.adamw(2e-3))
@@ -61,15 +62,19 @@ def run_mode(mode: str, steps: int, batch=32):
                                              opt_state, key, steps)
     f1 = f1_score(params, cfg, val)
     return common.RunResult(mode, f1, "F1", ms, loss,
-                            dropout_plan=cfg.plan.to_dict())
+                            dropout_plan=cfg.plan.to_dict(),
+                            engine=cfg.engine)
 
 
 def main(steps: int = 40, quick: bool = False):
     print("=" * 72)
     print("Table 3 — NER (BiLSTM-CNN-CRF, synthetic CoNLL-like tag patterns)")
     print("=" * 72)
-    results = [run_mode(m, steps) for m in ("baseline", "nr_st", "nr_rh_st")]
+    results = [run_mode(m, steps, engine=e)
+               for m in ("baseline", "nr_st", "nr_rh_st")
+               for e in ("stepwise", "scheduled")]
     print(common.speedup_table(results))
+    print(common.engine_ratio_lines(results))
     return {"results": [r.__dict__ for r in results]}
 
 

@@ -17,9 +17,29 @@ Choosing a dropout case (paper Fig. 1):
     their dense FLOPs in FP, BP and WG, at Case-I-level task metrics.
   * case4 — STRUCTURED x FIXED: most restricted; ablation only.
 
+How the plan is executed — the two-phase recurrent engine
+---------------------------------------------------------
+
+Since PR 2 the LSTM stack runs on a *scheduled* engine by default
+(``cfg.engine="scheduled"``, ``core/lstm.py``):
+
+  Phase A (pre-scan):  ``ctx.schedule(site, T, ...)`` samples every time
+      step's mask in one pass (a ``(T, nk)`` keep-block table for
+      structured cases, a ``(T, B, H)`` bitmask for random ones; FIXED
+      patterns store one broadcast row), and each layer's non-recurrent
+      x@W gate matmul runs time-batched outside the ``lax.scan``.
+  Phase B (in-scan):   the scan body is just the recurrent h@U matmul +
+      the pointwise cell update; gate slices and mask rows ride in as
+      scan xs. No PRNG and no NR matmul inside the recurrence.
+
+``engine="stepwise"`` keeps the reference in-scan path; the two compute
+the same function (tests/test_engine.py), and every trainer accepts an
+``--engine`` override next to ``--dropout``.
+
 This script trains a small LSTM LM on a synthetic PTB-like stream under
 case1 and case3 and reports both the task metric (perplexity) and measured
-wall-clock per step — the case3 speedup is the paper's whole point.
+wall-clock per step — the case3 speedup is the paper's whole point, and
+the scheduled engine is what turns it into an end-to-end step-time win.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -91,3 +111,5 @@ if __name__ == "__main__":
           f"{kept:.2f}x their dense FLOPs in FP, BP and WG (exact)")
     print("\nthe same pattern on any arch: python -m repro.launch.train "
           "--arch xlstm-1.3b --smoke --dropout case3:0.65:bs8")
+    print("engine A/B on any recurrent arch: add --engine stepwise "
+          "(reference) or --engine scheduled (two-phase, default)")

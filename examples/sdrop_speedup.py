@@ -1,27 +1,40 @@
-"""Measure the paper's FP/BP/WG speedups in isolation (Table-1 style).
+"""Measure the paper's speedups: isolated gate matmuls AND the full stack.
 
-For a Zaremba-large-sized gate matmul (B*T x 2H x 4H-ish), times
+Part 1 (Table-1 style, matmul in isolation) — for a Zaremba-large-sized
+gate matmul (B x H x 4H-ish), times
   dense          : x @ W                      (no dropout)
   NR+Random      : (x * mask) @ W             (baseline: no reclaim)
   NR+ST (paper)  : sdrop_matmul(x, W, keep)   (compacted FP/BP/WG)
-at rates {0.5, 0.65} on the CPU backend, reporting per-phase speedup
-(FP = fwd, BP+WG = grad), mirroring the paper's Table 1 breakdown.
+at rates {0.5, 0.65}, reporting per-phase times (FP = fwd, BP+WG = grad)
+and the structured-vs-random speedup.
 
-    PYTHONPATH=src python examples/sdrop_speedup.py
+Part 2 (what actually ships) — times the full 2-layer ``lstm_stack``
+(fwd + bwd) under dense / case1 / case3 plans on BOTH recurrent engines:
+  stepwise  : reference — masks sampled and NR matmuls run inside the scan
+  scheduled : two-phase — masks pre-sampled, NR matmuls time-batched
+              outside the scan, scan body = RH matmul + pointwise
+The scheduled/stepwise ratio is the wall-clock value of the engine
+refactor; the case3-vs-case1 ratio is the paper's structured-sparsity win.
+
+    PYTHONPATH=src python examples/sdrop_speedup.py [--quick]
 """
+import argparse
 import time
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import lstm as lstm_mod
 from repro.core import masks, sparse_matmul as sm
+from repro.core.dropout_plan import DropoutPlan
 
 B, H, N = 700, 1500, 6000            # Zaremba-large LSTM gate matmul shape
 
 
 def timeit(f, *args, n=20):
-    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
-        jax.block_until_ready(f(*args))
+    """Median-free simple timer; exactly one warmup invocation."""
+    out = f(*args)
+    jax.block_until_ready(out)
     t0 = time.time()
     for _ in range(n):
         out = f(*args)
@@ -29,7 +42,7 @@ def timeit(f, *args, n=20):
     return (time.time() - t0) / n
 
 
-def main():
+def matmul_phases(n=20):
     key = jax.random.PRNGKey(0)
     x = jax.random.normal(key, (B, H))
     w = jax.random.normal(jax.random.fold_in(key, 1), (H, N)) / H ** 0.5
@@ -37,8 +50,8 @@ def main():
     dense_f = jax.jit(lambda x, w: x @ w)
     dense_g = jax.jit(jax.grad(lambda x, w: ((x @ w) ** 2).sum(),
                                argnums=(0, 1)))
-    t_df = timeit(dense_f, x, w)
-    t_dg = timeit(lambda x, w: dense_g(x, w)[0], x, w)
+    t_df = timeit(dense_f, x, w, n=n)
+    t_dg = timeit(lambda x, w: dense_g(x, w)[0], x, w, n=n)
     print(f"dense         : FP {t_df*1e3:7.2f} ms   BP+WG {t_dg*1e3:7.2f} ms")
 
     for rate in (0.5, 0.65):
@@ -48,8 +61,8 @@ def main():
         rand_f = jax.jit(lambda x, w, m: (x * m) @ w)
         rand_g = jax.jit(jax.grad(
             lambda x, w, m: (((x * m) @ w) ** 2).sum(), argnums=(0, 1)))
-        t_rf = timeit(rand_f, x, w, m)
-        t_rg = timeit(lambda x, w, m: rand_g(x, w, m)[0], x, w, m)
+        t_rf = timeit(rand_f, x, w, m, n=n)
+        t_rg = timeit(lambda x, w, m: rand_g(x, w, m)[0], x, w, m, n=n)
 
         st_f = jax.jit(lambda x, w, kb: sm.sdrop_matmul(
             x, w, kb, rate=rate, block_size=4))
@@ -57,14 +70,68 @@ def main():
             lambda x, w, kb: (sm.sdrop_matmul(x, w, kb, rate=rate,
                                               block_size=4) ** 2).sum(),
             argnums=(0, 1)))
-        t_sf = timeit(st_f, x, w, kb)
-        t_sg = timeit(lambda x, w, kb: st_g(x, w, kb)[0], x, w, kb)
+        t_sf = timeit(st_f, x, w, kb, n=n)
+        t_sg = timeit(lambda x, w, kb: st_g(x, w, kb)[0], x, w, kb, n=n)
 
         print(f"rate={rate}:")
-        print(f"  NR+Random   : FP {t_rf*1e3:7.2f} ms   BP+WG {t_rg*1e3:7.2f} ms"
-              f"   (speedup {t_rf/t_rf:.2f}x / {t_rg/t_rg:.2f}x vs itself)")
-        print(f"  NR+ST(paper): FP {t_sf*1e3:7.2f} ms   BP+WG {t_sg*1e3:7.2f} ms"
-              f"   speedup vs random: FP {t_rf/t_sf:.2f}x  BP+WG {t_rg/t_sg:.2f}x")
+        print(f"  NR+Random   : FP {t_rf*1e3:7.2f} ms   "
+              f"BP+WG {t_rg*1e3:7.2f} ms   (dense-FLOP baseline)")
+        print(f"  NR+ST(paper): FP {t_sf*1e3:7.2f} ms   "
+              f"BP+WG {t_sg*1e3:7.2f} ms   speedup vs random: "
+              f"FP {t_rf/t_sf:.2f}x  BP+WG {t_rg/t_sg:.2f}x")
+
+
+def stack_time(plan: DropoutPlan, engine: str, T, Bs, D, Hs, n=8):
+    """Full 2-layer lstm_stack fwd+bwd ms/step under one plan + engine."""
+    key = jax.random.PRNGKey(0)
+    params = lstm_mod.init_lstm_params(key, D, Hs, 2)
+    x = jax.random.normal(jax.random.fold_in(key, 2), (T, Bs, D))
+    state = lstm_mod.zero_state(2, Bs, Hs)
+
+    @jax.jit
+    def step(params, x, key):
+        def loss(p):
+            ctx = plan.bind(key, 0)
+            ys, _ = lstm_mod.lstm_stack(p, x, state, ctx=ctx, engine=engine)
+            return (ys ** 2).sum()
+        return jax.grad(loss)(params)
+
+    return timeit(step, params, x, key, n=n) * 1e3
+
+
+def full_stack(quick=False):
+    T, Bs, Hs = (16, 8, 256) if quick else (35, 20, 1024)
+    D = Hs
+    n = 4 if quick else 8
+    plans = {
+        "dense": DropoutPlan.off(),
+        "case1": DropoutPlan.case("case1", 0.5, sites=("nr", "rh")),
+        "case3": DropoutPlan.case("case3", 0.5, block_size=4,
+                                  sites=("nr", "rh")),
+    }
+    print(f"\nfull 2-layer lstm_stack fwd+bwd (T={T}, B={Bs}, H={Hs}):")
+    times = {}
+    for name, plan in plans.items():
+        for engine in ("stepwise", "scheduled"):
+            times[(name, engine)] = stack_time(plan, engine, T, Bs, D, Hs,
+                                               n=n)
+            print(f"  {name:6s} {engine:9s}: "
+                  f"{times[(name, engine)]:8.1f} ms/step")
+    for name in plans:
+        r = times[(name, "stepwise")] / times[(name, "scheduled")]
+        print(f"  {name:6s} scheduled-engine speedup: {r:.2f}x")
+    r13 = times[("case1", "scheduled")] / times[("case3", "scheduled")]
+    print(f"  case3 vs case1 (scheduled engine):    {r13:.2f}x "
+          f"(structured-sparsity reclaim; needs paper-scale H to pay for "
+          f"its gathers — run without --quick)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    matmul_phases(n=5 if args.quick else 20)
+    full_stack(quick=args.quick)
 
 
 if __name__ == "__main__":

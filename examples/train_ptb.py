@@ -28,14 +28,18 @@ def main():
     ap.add_argument("--block-size", type=int, default=2,
                     help="structured-dropout block; must divide hidden "
                          "(650 medium / 1500 large -> 2 works for both)")
+    ap.add_argument("--engine", default="scheduled",
+                    choices=["scheduled", "stepwise"],
+                    help="recurrent engine (scheduled = two-phase default)")
     args = ap.parse_args()
 
     rate = 0.65 if args.large else 0.5
     mk = lstm_lm.zaremba_large if args.large else lstm_lm.zaremba_medium
     cfg = mk(plan=DropoutPlan.case("case3", rate, block_size=args.block_size,
-                                   sites=("embed", "nr", "rh", "out")))
+                                   sites=("embed", "nr", "rh", "out")),
+             engine=args.engine)
     print(f"config: {cfg.name}  hidden={cfg.hidden}  vocab={cfg.vocab}  "
-          f"NR+RH+ST rate={rate}")
+          f"NR+RH+ST rate={rate}  engine={cfg.engine}")
 
     key = jax.random.PRNGKey(0)
     params = lstm_lm.init_params(key, cfg)

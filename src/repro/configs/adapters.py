@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from repro.configs.base import ArchSpec
 from repro.configs.shapes import SHAPES, ShapeSpec
 from repro.core.dropout_plan import DropoutPlan
+from repro.core.lstm import ENGINES
 from repro.models import lstm_lm, seq2seq, ssm, tagger, transformer, xlstm
 
 I32 = jnp.int32
@@ -81,6 +82,32 @@ def apply_dropout(spec: ArchSpec, cfg, text: str):
     if not text:
         return cfg
     return dataclasses.replace(cfg, plan=dropout_override(spec.kind, text))
+
+
+# ---------------------------------------------------------------------------
+# recurrent-engine overrides (the --engine flag, mirroring --dropout).
+# ENGINES (the valid names) is owned by repro.core.lstm.
+# ---------------------------------------------------------------------------
+
+# Kinds with a time-recurrent scan the engine knob applies to. The depth-
+# scanned kinds (transformer, ssm, and xlstm's mLSTM blocks) have no
+# sequential NR dependence to hoist — they are already "scheduled".
+ENGINE_KINDS = ("lstm_lm", "nmt", "tagger", "xlstm")
+
+
+def apply_engine(spec: ArchSpec, cfg, text: str):
+    """Return cfg with its recurrent engine replaced by the CLI override.
+
+    ``""`` keeps the config's engine; non-recurrent kinds ignore the
+    override (there is no scan engine to select).
+    """
+    if not text:
+        return cfg
+    if text not in ENGINES:
+        raise ValueError(f"unknown engine {text!r}; expected one of {ENGINES}")
+    if spec.kind not in ENGINE_KINDS:
+        return cfg
+    return dataclasses.replace(cfg, engine=text)
 
 
 # ---------------------------------------------------------------------------

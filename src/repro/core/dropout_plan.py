@@ -7,7 +7,20 @@ model stays fixed while the plan flips the paper's pattern knob (Case I-IV,
 NR/RH placement, block granularity) for every architecture family.
 
 ``plan.bind(key, step)`` returns a ``DropoutCtx`` that owns all PRNG-stream
-derivation. The contract:
+derivation. Sites can be consumed two ways:
+
+  * **stepwise** — ``ctx.state(site, batch, dim, t=t)`` materializes one
+    step's mask at a time (the reference path, used inside ``lax.scan``
+    bodies);
+  * **scheduled** — ``ctx.schedule(site, steps, batch, dim)`` samples *all*
+    steps' masks in one pre-scan pass (Phase A of the two-phase recurrent
+    engine) into a ``MaskSchedule``: a ``(T, nk)`` keep-block table for
+    structured specs, a ``(T, B, H)`` bitmask for random ones, and a single
+    broadcast row for FIXED time patterns. Row ``t`` of a schedule is
+    bit-identical to ``ctx.state(..., t=t)`` — both derive the same per-step
+    key — so the two consumption styles are interchangeable.
+
+The contract:
 
   * the training ``step`` is folded into ``key`` once, at bind time — every
     training step re-samples (standard dropout behaviour);
@@ -37,6 +50,7 @@ import zlib
 from typing import Mapping, Optional, Tuple, Union
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import masks as _masks
 from repro.core import sdrop
@@ -191,6 +205,78 @@ class DropoutPlan:
         return DropoutCtx(plan=self, key=key)
 
 
+@dataclasses.dataclass
+class MaskSchedule:
+    """All ``steps`` time steps' masks for one site, sampled pre-scan.
+
+    Phase A of the scheduled engine: the whole schedule is materialized in
+    one vmapped sampling pass, so the ``lax.scan`` body never touches the
+    PRNG. Structured specs store a ``(rows, nk)`` keep-block id table;
+    random specs store a ``(rows, *batch, dim)`` dense mask. ``rows`` is
+    ``steps`` for PER_STEP specs and 1 for FIXED ones (one mask reused at
+    every step — ``rows()`` broadcasts it).
+    """
+
+    spec: DropoutSpec                          # block-size fitted
+    steps: int
+    keep_blocks: Optional[jax.Array] = None    # structured: (rows, nk) int32
+    dense_mask: Optional[jax.Array] = None     # random: (rows, *batch, dim)
+    scale: float = 1.0
+
+    @property
+    def inactive(self) -> bool:
+        return self.keep_blocks is None and self.dense_mask is None
+
+    @property
+    def structured(self) -> bool:
+        return self.keep_blocks is not None
+
+    @property
+    def fixed(self) -> bool:
+        return self.spec.time_pattern == TimePattern.FIXED
+
+    def rows(self) -> Optional[jax.Array]:
+        """Per-step mask rows, leading axis ``steps`` — thread as scan xs.
+
+        FIXED schedules hold one physical row; the broadcast here is a view
+        under jit (XLA fuses it), so no T-fold copy is materialized.
+        """
+        table = self.keep_blocks if self.structured else self.dense_mask
+        if table is None:
+            return None
+        if table.shape[0] == self.steps:
+            return table
+        return jnp.broadcast_to(table, (self.steps, *table.shape[1:]))
+
+    def scan_rows(self) -> Optional[jax.Array]:
+        """Rows a scan body actually needs as xs: the (T, ...) table of a
+        PER_STEP schedule. FIXED and inactive schedules return None — their
+        one mask should be closed over as a scan constant (``state(0)``),
+        not sliced per step."""
+        table = self.keep_blocks if self.structured else self.dense_mask
+        if table is None or table.shape[0] == 1:
+            return None
+        return table
+
+    def state_for_row(self, row: Optional[jax.Array]) -> DropoutState:
+        """DropoutState for one scan step, built from a ``rows()`` slice
+        (no PRNG — the only mask source inside a scheduled scan body)."""
+        if self.inactive or row is None:
+            return DropoutState(spec=self.spec)
+        if self.structured:
+            return DropoutState(spec=self.spec, keep_blocks=row,
+                                scale=self.scale)
+        return DropoutState(spec=self.spec, dense_mask=row, scale=self.scale)
+
+    def state(self, t) -> DropoutState:
+        """DropoutState at step ``t`` (index-based access, non-scan users)."""
+        if self.inactive:
+            return DropoutState(spec=self.spec)
+        table = self.keep_blocks if self.structured else self.dense_mask
+        row = table[0] if table.shape[0] == 1 else table[t]
+        return self.state_for_row(row)
+
+
 @dataclasses.dataclass(frozen=True)
 class DropoutCtx:
     """A plan bound to (key, step): the only source of dropout randomness."""
@@ -232,6 +318,41 @@ class DropoutCtx:
         if st.dense_mask is not None and len(shape) > 1:
             st.dense_mask = st.dense_mask.reshape(*shape, dim)
         return st
+
+    def schedule(self, site: str, steps: int, batch, dim: int, *,
+                 t0=0) -> MaskSchedule:
+        """Sample the site's masks for ``steps`` consecutive time steps.
+
+        The per-row key derivation is identical to ``state(site, ..., t)``:
+        row ``t`` folds ``t0 + t`` into the site key for PER_STEP specs,
+        FIXED specs sample a single row from the bare site key. ``t0``
+        offsets the time axis (e.g. a chunk resuming mid-sequence) and may
+        be traced.
+        """
+        spec = self.spec(site)
+        if self.key is None or not spec.active:
+            return MaskSchedule(spec=spec, steps=steps)
+        spec = fit_block(spec, dim)
+        base = jax.random.fold_in(self.key, site_stream(site))
+        if spec.time_pattern == TimePattern.FIXED:
+            keys = base[None]
+        else:
+            keys = jax.vmap(lambda t: jax.random.fold_in(base, t))(
+                t0 + jnp.arange(steps))
+        if spec.batch_pattern == _masks.BatchPattern.STRUCTURED:
+            kb = jax.vmap(lambda k: _masks.sample_keep_blocks(
+                k, dim, spec.rate, spec.block_size))(keys)
+            return MaskSchedule(
+                spec=spec, steps=steps, keep_blocks=kb,
+                scale=_masks.inverted_scale(spec.rate, dim, spec.block_size))
+        shape = (batch,) if isinstance(batch, int) else tuple(batch)
+        n = 1
+        for s in shape:
+            n *= int(s)
+        dm = jax.vmap(lambda k: _masks.random_mask(k, n, dim, spec.rate))(keys)
+        dm = dm.reshape(dm.shape[0], *shape, dim)
+        return MaskSchedule(spec=spec, steps=steps, dense_mask=dm,
+                            scale=1.0 / (1.0 - spec.rate))
 
     def apply(self, site: str, x: jax.Array, *, t=None) -> jax.Array:
         """Mask-multiply ``x`` at the site (for elementwise consumers)."""

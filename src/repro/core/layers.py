@@ -69,6 +69,40 @@ def dense_sdrop(params, x, drop: Optional[DropoutState], *, x_is_compact=False):
     return y + b if b is not None else y
 
 
+def dense_sdrop_scheduled(params, x_seq, sched):
+    """Time-batched linear over a (T, B, D) sequence consumed through a
+    ``MaskSchedule`` (Phase A of the scheduled recurrent engine).
+
+    Structured schedule -> one per-step-ids compacted matmul pass
+    (sparse_matmul.sdrop_matmul_scheduled); FIXED schedules share a single
+    compaction. Random schedule -> mask-multiply then one dense batched
+    matmul. Inactive -> one dense batched matmul. In every branch the T
+    steps' non-recurrent matmuls are a single XLA op, not T scan bodies.
+    """
+    b = params.get("b")
+
+    def dense(x):
+        y = jax.lax.dot_general(x, params["w"],
+                                (((x.ndim - 1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32
+                                ).astype(x.dtype)
+        return y + b if b is not None else y
+
+    if sched is None or sched.inactive:
+        return dense(x_seq)
+    if sched.structured:
+        return sm.sdrop_matmul_scheduled(x_seq, params["w"],
+                                         sched.keep_blocks,
+                                         rate=sched.spec.rate,
+                                         block_size=sched.spec.block_size,
+                                         impl=sched.spec.impl,
+                                         bias=b, scale=sched.scale)
+    m = sched.dense_mask
+    m = jnp.broadcast_to(m, (x_seq.shape[0], *m.shape[1:]))
+    xm = x_seq * m.astype(x_seq.dtype) * jnp.asarray(sched.scale, x_seq.dtype)
+    return dense(xm)
+
+
 def init_embedding(key, vocab, dim, *, scale=0.1, dtype=jnp.float32):
     return {"emb": uniform_init(key, (vocab, dim), scale, dtype)}
 

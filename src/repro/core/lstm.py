@@ -11,6 +11,21 @@ time step):
 The cell state c is never dropped (paper §3.2). Both matmuls are
 ``sdrop_matmul`` calls, so FP/BP/WG all run compacted.
 
+Two execution engines share the same numerics (tests assert equivalence):
+
+  * ``engine="scheduled"`` (default) — the two-phase engine. Phase A
+    (pre-scan): every site's masks for all T steps are sampled at once into
+    ``MaskSchedule``s and each layer's NR gate matmul runs time-batched —
+    one (T·B, D)@(D, 4H) compacted matmul instead of T scan-serialized
+    (B, D) ones. Phase B (in-scan): the per-layer ``lax.scan`` body shrinks
+    to the RH matmul + ``lstm_pointwise``, consuming precomputed gate
+    slices and schedule rows threaded through as scan xs — no PRNG calls
+    and no NR matmul inside the scan. Layers run as successive scans
+    (cuDNN-style), which is exactly the same recurrence unrolled in a
+    different order.
+  * ``engine="stepwise"`` — the reference path: one scan over time with a
+    Python layer loop inside, masks drawn per step via ``ctx.state``.
+
 Time iteration is ``jax.lax.scan`` (compact HLO, O(1) program size in T).
 """
 from __future__ import annotations
@@ -22,6 +37,8 @@ import jax.numpy as jnp
 
 from repro.core import layers as L
 from repro.core.dropout_plan import NULL_CTX, DropoutCtx
+
+ENGINES = ("scheduled", "stepwise")
 
 
 class LSTMState(NamedTuple):
@@ -71,23 +88,12 @@ def lstm_cell(params, x, h_prev, c_prev, nr_drop, rh_drop, *,
                           impl=pointwise_impl)
 
 
-def lstm_stack(params, x_seq: jax.Array, state: LSTMState, *,
-               ctx: Optional[DropoutCtx] = None,
-               site: str = "lstm",
-               forget_bias: float = 0.0,
-               pointwise_impl: str = "xla"):
-    """Run a multi-layer LSTM over a (T, B, D) sequence.
-
-    Returns (outputs (T, B, H), final LSTMState). Dropout comes from the
-    bound ``ctx``: layer ``l`` consumes sites ``{site}/layer{l}/nr`` and
-    ``{site}/layer{l}/rh`` (resolved against the plan's "nr" / "rh" entries),
-    with the sequence index ``t`` as the time axis — PER_STEP specs re-sample
-    per step (Case-I/III), FIXED specs reuse one mask (Case-II/IV).
-    """
+def _lstm_stack_stepwise(params, x_seq, state, *, ctx, site, forget_bias,
+                         pointwise_impl):
+    """Reference engine: one scan over time, per-step mask sampling."""
     num_layers = len(params)
     hidden = state.h.shape[-1]
     batch = x_seq.shape[1]
-    ctx = NULL_CTX if ctx is None else ctx
 
     def step(carry, xt_t):
         hs, cs = carry
@@ -109,3 +115,75 @@ def lstm_stack(params, x_seq: jax.Array, state: LSTMState, *,
     (h_fin, c_fin), ys = jax.lax.scan(
         step, (state.h, state.c), (x_seq, jnp.arange(T)))
     return ys, LSTMState(h=h_fin, c=c_fin)
+
+
+def _lstm_stack_scheduled(params, x_seq, state, *, ctx, site, forget_bias,
+                          pointwise_impl):
+    """Two-phase engine: NR matmuls + mask sampling hoisted out of the scan.
+
+    Layers run as successive per-layer scans: layer l's full output sequence
+    (its T hidden states) is the time-batched NR input of layer l+1, so
+    every layer's x@W runs as one compacted matmul over all steps. The scan
+    body is RH matmul + pointwise only; its mask rows arrive as scan xs.
+    """
+    num_layers = len(params)
+    T, batch, _ = x_seq.shape
+    hidden = state.h.shape[-1]
+
+    inp = x_seq
+    h_fin, c_fin = [], []
+    for l in range(num_layers):
+        nr_sched = ctx.schedule(f"{site}/layer{l}/nr", T, batch,
+                                inp.shape[-1])
+        rh_sched = ctx.schedule(f"{site}/layer{l}/rh", T, batch, hidden)
+        # Phase A: time-batched NR gate matmul (no sequential dependence).
+        gx = L.dense_sdrop_scheduled({"w": params[l]["W"]}, inp, nr_sched)
+        U, b = params[l]["U"], params[l]["b"]
+        # PER_STEP masks ride through the scan as xs; FIXED/inactive ones
+        # are a single state closed over as a scan constant.
+        rh_xs = rh_sched.scan_rows()
+        rh_const = rh_sched.state(0) if rh_xs is None else None
+
+        def step(carry, xs, _U=U, _b=b, _rh=rh_sched, _const=rh_const):
+            h_prev, c_prev = carry
+            gx_t, rh_row = xs
+            st = _const if rh_row is None else _rh.state_for_row(rh_row)
+            gh = L.dense_sdrop({"w": _U}, h_prev, st)
+            gates = gx_t + gh + _b
+            h, c = lstm_pointwise(gates, c_prev, forget_bias=forget_bias,
+                                  impl=pointwise_impl)
+            return (h, c), h
+
+        (h_l, c_l), ys = jax.lax.scan(
+            step, (state.h[l], state.c[l]), (gx, rh_xs))
+        h_fin.append(h_l)
+        c_fin.append(c_l)
+        inp = ys
+    return inp, LSTMState(h=jnp.stack(h_fin), c=jnp.stack(c_fin))
+
+
+def lstm_stack(params, x_seq: jax.Array, state: LSTMState, *,
+               ctx: Optional[DropoutCtx] = None,
+               site: str = "lstm",
+               forget_bias: float = 0.0,
+               pointwise_impl: str = "xla",
+               engine: str = "scheduled"):
+    """Run a multi-layer LSTM over a (T, B, D) sequence.
+
+    Returns (outputs (T, B, H), final LSTMState). Dropout comes from the
+    bound ``ctx``: layer ``l`` consumes sites ``{site}/layer{l}/nr`` and
+    ``{site}/layer{l}/rh`` (resolved against the plan's "nr" / "rh" entries),
+    with the sequence index ``t`` as the time axis — PER_STEP specs re-sample
+    per step (Case-I/III), FIXED specs reuse one mask (Case-II/IV).
+
+    ``engine`` selects the execution path (same numerics): "scheduled" =
+    the two-phase engine (masks + NR matmuls hoisted out of the scan),
+    "stepwise" = the in-scan reference.
+    """
+    ctx = NULL_CTX if ctx is None else ctx
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; expected one of {ENGINES}")
+    run = (_lstm_stack_scheduled if engine == "scheduled"
+           else _lstm_stack_stepwise)
+    return run(params, x_seq, state, ctx=ctx, site=site,
+               forget_bias=forget_bias, pointwise_impl=pointwise_impl)

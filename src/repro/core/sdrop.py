@@ -9,9 +9,29 @@ regularization only, no speedup), matching Zaremba'14 / Gal'16.
 Models do NOT call ``make_state`` directly anymore: they hold a
 ``repro.core.dropout_plan.DropoutPlan`` mapping named application sites to
 specs, bind it once per training step (``plan.bind(key, step)``) and draw
-states/applies from the resulting ``DropoutCtx``. The ctx owns every PRNG
-stream (site-name hashing, FIXED vs PER_STEP time behaviour) — see
+masks from the resulting ``DropoutCtx``. The ctx owns every PRNG stream
+(site-name hashing, FIXED vs PER_STEP time behaviour) — see
 ``dropout_plan.py`` for the full contract.
+
+Two consumption styles, two engines (core/lstm.py)
+--------------------------------------------------
+
+``ctx.state(site, batch, dim, t=t)`` materializes ONE step's mask — the
+*stepwise* engine draws these inside the ``lax.scan`` body (the reference
+path). ``ctx.schedule(site, T, batch, dim)`` samples ALL steps at once into
+a ``MaskSchedule`` — the *scheduled* engine (default) is two-phase:
+
+  Phase A (pre-scan):  every site's schedule is sampled in one vmapped
+      pass, and the non-recurrent (x@W) gate matmuls of every layer run
+      time-batched through ``sdrop_matmul_scheduled`` — one big matmul
+      instead of T scan-serialized small ones.
+  Phase B (in-scan):   the scan body shrinks to the recurrent (h@U) matmul
+      + the pointwise cell update; precomputed gate slices and schedule
+      rows arrive as scan xs. No PRNG calls, no NR matmul in the body.
+
+Row ``t`` of a schedule is bit-identical to ``ctx.state(..., t=t)``, so the
+engines compute the same function (tests/test_engine.py asserts it for
+Case I-IV, op-by-op exactly).
 
 Choosing a dropout case (the paper's Fig. 1 taxonomy)
 -----------------------------------------------------

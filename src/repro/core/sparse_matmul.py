@@ -127,6 +127,102 @@ _sdrop_matmul_in.defvjp(_sdrop_matmul_in_fwd, _sdrop_matmul_in_bwd)
 
 
 # ---------------------------------------------------------------------------
+# scheduled (per-step ids table): the whole sequence's NR matmuls at once.
+# x: (T, B, D); keep_blocks: (T, nk) — step t applies its own kept blocks.
+#
+# Two impls with the same semantics (y_t = scale * (x_t ⊙ m_t) @ w):
+#   * "pallas" — true (1-p) compaction: the stepped gather_matmul kernel
+#     resolves each step's kept blocks in the BlockSpec index_map (ids table
+#     scalar-prefetched), so FP/BP run at compact FLOPs with zero-cost
+#     gathers and no per-step weight copies. The TPU path.
+#   * "xla"   — masked-dense batching: expand the ids table to a (T, H) 0/1
+#     mask and run ONE flattened (T·B, D)@(D, N) matmul. Generic backends
+#     have no fused gather-matmul: materializing w[ids_t] per step costs
+#     (T, k, N) HBM (hundreds of MB at paper widths) and degrades the
+#     batched matmul to T small-M gemms — measured slower than dense on
+#     CPU. One big gemm is the wall-clock-optimal fallback; masked columns
+#     still contribute exact zeros to δx/δW (sparsity structure preserved).
+# statics: (scale, block_size, impl)
+# ---------------------------------------------------------------------------
+
+
+def _unit_ids_table(kb_table: jax.Array, block_size: int) -> jax.Array:
+    if block_size == 1:
+        return kb_table
+    return jax.vmap(
+        lambda kb: _masks.keep_blocks_to_unit_ids(kb, block_size))(kb_table)
+
+
+def _mask_table(kb_table: jax.Array, hidden: int, block_size: int) -> jax.Array:
+    """(T, nk) kept-block ids -> (T, hidden) 0/1 float mask."""
+    return jax.vmap(
+        lambda kb: _masks.keep_blocks_to_mask(kb, hidden, block_size)
+    )(kb_table)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _sdrop_matmul_sched(scale, block_size, impl, x, w, kb_table):
+    y, _ = _sdrop_matmul_sched_fwd(scale, block_size, impl, x, w, kb_table)
+    return y
+
+
+def _sdrop_matmul_sched_fwd(scale, block_size, impl, x, w, kb_table):
+    if impl == "pallas":
+        from repro.kernels import ops as _kops
+        ids = _unit_ids_table(kb_table, block_size)          # (T, k)
+        x_c = jnp.take_along_axis(x, ids[:, None, :], axis=2)  # (T, B, k)
+        y = _kops.gather_matmul_stepped(x_c, w, kb_table,
+                                        block_size=block_size,
+                                        a_is_compact=True)
+        y = y * jnp.asarray(scale, y.dtype)
+        # Residuals compact: (B, k) per step — (1-p) of dense residency.
+        return y, (x_c, w, kb_table)
+    m = _mask_table(kb_table, x.shape[-1], block_size)       # (T, H)
+    xm = x * m[:, None, :].astype(x.dtype) * jnp.asarray(scale, x.dtype)
+    y = _matmul(xm, w, x.dtype)                              # one big gemm
+    return y, (xm, w, kb_table)
+
+
+def _sdrop_matmul_sched_bwd(scale, block_size, impl, res, dy):
+    if impl == "pallas":
+        x_c, w, kb_table = res
+        ids = _unit_ids_table(kb_table, block_size)
+        from repro.kernels import ops as _kops
+        # BP (output sparsity): only each step's kept columns of δx.
+        dx_c = _kops.gather_matmul_stepped(dy, w, kb_table,
+                                           block_size=block_size,
+                                           transpose_b=True)
+        dx_c = dx_c * jnp.asarray(scale, dx_c.dtype)
+        in_dim = w.shape[0]
+        dx = jax.vmap(
+            lambda ids_t, d_t: jnp.zeros((d_t.shape[0], in_dim), d_t.dtype)
+            .at[:, ids_t].set(d_t))(ids, dx_c)
+        # WG (row sparsity): per-step compact (k, N) products scatter-added
+        # into the kept rows; blocks kept at several steps accumulate.
+        dw_c = jnp.einsum("tbk,tbn->tkn", x_c, dy,
+                          preferred_element_type=jnp.float32)
+        dw_c = (dw_c * scale).astype(w.dtype)
+        dw = jnp.zeros_like(w).at[ids].add(dw_c)
+        return dx, dw, _float0_like(kb_table)
+    xm, w, kb_table = res
+    m = _mask_table(kb_table, w.shape[0], block_size)
+    # BP: one big gemm; each step's dropped columns masked to exact zeros.
+    dx = _matmul(dy, w.T, dy.dtype)
+    dx = dx * m[:, None, :].astype(dx.dtype) * jnp.asarray(scale, dx.dtype)
+    # WG: one big gemm; rows dropped at EVERY step receive exactly zero
+    # (their xm rows are zero), matching the scatter-add result.
+    x2 = xm.reshape(-1, xm.shape[-1])
+    dy2 = dy.reshape(-1, dy.shape[-1])
+    dw = jax.lax.dot_general(x2, dy2, (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32
+                             ).astype(w.dtype)
+    return dx, dw, _float0_like(kb_table)
+
+
+_sdrop_matmul_sched.defvjp(_sdrop_matmul_sched_fwd, _sdrop_matmul_sched_bwd)
+
+
+# ---------------------------------------------------------------------------
 # direction="out": y_c = scale * (x @ w)[:, kept]  (compact output).
 # ---------------------------------------------------------------------------
 
@@ -195,6 +291,42 @@ def sdrop_matmul(x: jax.Array, w: jax.Array,
             scale = _masks.inverted_scale(rate, w.shape[0], block_size)
         y = _sdrop_matmul_in(float(scale), int(block_size), bool(x_is_compact),
                              impl, x, w, keep_blocks)
+    if bias is not None:
+        y = y + bias
+    return y
+
+
+def sdrop_matmul_scheduled(x: jax.Array, w: jax.Array,
+                           keep_blocks: Optional[jax.Array],
+                           *,
+                           rate: float,
+                           block_size: int = 1,
+                           impl: str = "xla",
+                           bias: Optional[jax.Array] = None,
+                           scale: Optional[float] = None) -> jax.Array:
+    """Time-batched ``dropout(x_t) @ w`` for a whole mask schedule.
+
+    x: (T, B, D); ``keep_blocks``: a (T, nk) per-step ids table (PER_STEP
+    schedules) or (1, nk) (FIXED — delegates to the single-mask
+    ``sdrop_matmul``, one compaction shared by all steps). All T steps'
+    non-recurrent matmuls run in one pass outside the scan: FP/BP are
+    per-step compact, WG scatter-adds each step's compact (k, N) product
+    into the kept rows of δW.
+    """
+    if keep_blocks is None or rate <= 0.0:
+        y = _matmul(x, w, x.dtype)
+    else:
+        if scale is None:
+            scale = _masks.inverted_scale(rate, w.shape[0], block_size)
+        if keep_blocks.ndim != 2:
+            raise ValueError(f"scheduled keep_blocks must be (T, nk), got "
+                             f"{keep_blocks.shape}")
+        if keep_blocks.shape[0] == 1:
+            return sdrop_matmul(x, w, keep_blocks[0], rate=rate,
+                                block_size=block_size, impl=impl, bias=bias,
+                                scale=scale)
+        y = _sdrop_matmul_sched(float(scale), int(block_size), impl,
+                                x, w, keep_blocks)
     if bias is not None:
         y = y + bias
     return y

@@ -4,7 +4,7 @@ On TPU the kernels run compiled; elsewhere they run in interpret mode
 (auto-detected), which executes the kernel body on CPU for correctness.
 ``ref.py`` holds the independent pure-jnp oracles used by the tests.
 """
-from repro.kernels.gather_matmul import gather_matmul
+from repro.kernels.gather_matmul import gather_matmul, gather_matmul_stepped
 from repro.kernels.lstm_pointwise import lstm_pointwise
 
-__all__ = ["gather_matmul", "lstm_pointwise"]
+__all__ = ["gather_matmul", "gather_matmul_stepped", "lstm_pointwise"]

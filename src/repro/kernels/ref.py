@@ -37,6 +37,20 @@ def gather_matmul_ref(a, b, keep_blocks, *, block_size, gather, a_is_compact=Fal
     return y.astype(a.dtype)
 
 
+def gather_matmul_stepped_ref(a, b, keep_blocks, *, block_size,
+                              a_is_compact=False, transpose_b=False):
+    """Oracle for kernels.gather_matmul_stepped: per-step ids table.
+
+    a: (T, M, ·); keep_blocks: (T, nk). Each step t runs the corresponding
+    single-mask gather_matmul_ref against its own kept blocks.
+    """
+    def one(a_t, kb_t):
+        return gather_matmul_ref(a_t, b, kb_t, block_size=block_size,
+                                 gather="b_rows", a_is_compact=a_is_compact,
+                                 transpose_b=transpose_b)
+    return jax.vmap(one)(a, keep_blocks)
+
+
 def lstm_pointwise_ref(gates, c_prev, *, forget_bias=0.0):
     """Oracle for kernels.lstm_pointwise. gates: (B, 4H) order (i,f,g,o)."""
     i, f, g, o = jnp.split(gates, 4, axis=-1)

@@ -44,10 +44,11 @@ def cell_id(arch, shape, mesh_name, variant):
 
 
 def run_cell(spec, shape, mesh, rules, *, use_dropout, dropout="",
-             collect_hlo=False):
+             engine="", collect_hlo=False):
     cfg = spec.full()
     cell = steps.build_cell(spec, cfg, shape, mesh, rules,
-                            use_dropout=use_dropout, dropout=dropout)
+                            use_dropout=use_dropout, dropout=dropout,
+                            engine=engine)
     t0 = time.time()
     with mesh:
         lowered = cell.jitted.lower(*cell.example_args)
@@ -119,6 +120,10 @@ def main():
     ap.add_argument("--dropout", default="",
                     help="dropout-plan override applied to every lowered "
                          "cell (e.g. case3:0.5:bs128)")
+    ap.add_argument("--engine", default="",
+                    choices=["", "scheduled", "stepwise"],
+                    help="recurrent-engine override applied to every "
+                         "lowered cell")
     ap.add_argument("--out", default="results/dryrun.json")
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--rules", default="",
@@ -170,7 +175,8 @@ def main():
                 try:
                     rec = run_cell(spec, shape, mesh, rules,
                                    use_dropout=(args.variant == "sdrop"),
-                                   dropout=args.dropout)
+                                   dropout=args.dropout,
+                                   engine=args.engine)
                     rec["variant"] = args.variant
                     cache[cid] = rec
                     n_ok += 1

@@ -156,15 +156,20 @@ def default_opt(cfg) -> optim.optimizers.Optimizer:
 
 def build_cell(spec: ArchSpec, cfg, shape: ShapeSpec, mesh: Mesh,
                rules: shd.ShardingRules, *, use_dropout: bool = True,
-               n_micro: int = 1, dropout: str = "") -> LoweredCell:
+               n_micro: int = 1, dropout: str = "",
+               engine: str = "") -> LoweredCell:
     """Assemble the jitted step + abstract inputs for one (arch, shape).
 
     ``dropout`` is an optional CLI-style plan override ("case3:0.5:bs128")
     applied to the config before lowering, so dry-runs/perf sweeps lower the
-    exact plan the trainer would run.
+    exact plan the trainer would run. ``engine`` likewise overrides the
+    recurrent execution engine ("scheduled" | "stepwise") on the kinds that
+    have one.
     """
     if dropout:
         cfg = adapters.apply_dropout(spec, cfg, dropout)
+    if engine:
+        cfg = adapters.apply_engine(spec, cfg, engine)
     init_fn, p_shapes, p_shard, _ = param_setup(spec, cfg, mesh, rules)
     rep = replicated(mesh)
 

@@ -88,6 +88,12 @@ def main(argv=None):
                     help="dropout-plan override: 'case{1..4}:<rate>[:bs<int>]"
                          "[:pallas]' (e.g. case3:0.5:bs128) or 'off'; applies "
                          "the case at the arch's canonical sites")
+    ap.add_argument("--engine", default="",
+                    choices=["", "scheduled", "stepwise"],
+                    help="recurrent-engine override: 'scheduled' (two-phase: "
+                         "masks + NR matmuls hoisted out of the scan) or "
+                         "'stepwise' (in-scan reference); applies to the "
+                         "recurrent archs, no-op elsewhere")
     ap.add_argument("--straggler-factor", type=float, default=3.0)
     args = ap.parse_args(argv)
 
@@ -97,6 +103,10 @@ def main(argv=None):
         cfg = adapters.apply_dropout(spec, cfg, args.dropout)
         print(f"[dropout] plan override {args.dropout!r} -> sites "
               f"{list(cfg.plan.active_sites())}")
+    if args.engine:
+        cfg = adapters.apply_engine(spec, cfg, args.engine)
+        if spec.kind in adapters.ENGINE_KINDS:
+            print(f"[engine] recurrent engine -> {cfg.engine!r}")
     mesh = mesh_mod.make_host_mesh()
     rules = shd.rules_for_mesh(mesh)
 

@@ -36,6 +36,9 @@ class LSTMLMConfig:
     tie_embeddings: bool = False
     init_scale: float = 0.05
     plan: DropoutPlan = DropoutPlan()
+    # recurrent execution engine: "scheduled" (two-phase: masks + NR matmuls
+    # hoisted out of the scan) or "stepwise" (in-scan reference)
+    engine: str = "scheduled"
     param_dtype: Any = jnp.float32
     loss_chunks: int = 4
 
@@ -95,7 +98,8 @@ def forward(params, tokens, cfg: LSTMLMConfig, *, state=None, ctx=None):
     if state is None:
         state = lstm_mod.zero_state(cfg.num_layers, B, cfg.hidden)
     ys, state = lstm_mod.lstm_stack(
-        params["lstm"], x.transpose(1, 0, 2), state, ctx=ctx)
+        params["lstm"], x.transpose(1, 0, 2), state, ctx=ctx,
+        engine=cfg.engine)
     h = ys.transpose(1, 0, 2)                              # (B,S,H)
     h = ctx.apply("out", h)
     if cfg.tie_embeddings:

@@ -5,6 +5,14 @@ Dropout comes from a ``DropoutPlan`` over named sites — "nr" / "rh" resolve
 for both stacks (full site names "enc/layer0/nr", "dec/layer1/rh", ... keep
 the PRNG streams independent), and "out" covers the encoder/decoder output
 dropout of the paper's §4.2 modification.
+
+``cfg.engine`` selects the recurrent execution path. The encoder runs the
+full two-phase engine (lstm_stack ``engine="scheduled"``: NR matmuls and
+mask sampling hoisted out of the scan). The decoder's NR input is
+``[embed_t ; h~_{t-1}]`` — *input feeding* makes it sequentially dependent,
+so its NR matmul cannot leave the scan; the scheduled engine still hoists
+all mask sampling (Phase A schedules threaded through as scan xs — no PRNG
+calls in the decode scan body).
 """
 from __future__ import annotations
 
@@ -29,6 +37,7 @@ class NMTConfig:
     hidden: int = 512
     num_layers: int = 2
     plan: DropoutPlan = DropoutPlan({"nr": DropoutSpec(rate=0.3)})
+    engine: str = "scheduled"      # recurrent engine (see module docstring)
     param_dtype: Any = jnp.float32
 
 
@@ -56,7 +65,8 @@ def encode(params, src, cfg: NMTConfig, *, ctx=None):
     x = jnp.take(params["src_embed"], src, axis=0)
     state = lstm_mod.zero_state(cfg.num_layers, B, cfg.hidden)
     ys, state = lstm_mod.lstm_stack(
-        params["encoder"], x.transpose(1, 0, 2), state, ctx=ctx, site="enc")
+        params["encoder"], x.transpose(1, 0, 2), state, ctx=ctx, site="enc",
+        engine=cfg.engine)
     enc = ys.transpose(1, 0, 2)                            # (B,S,H)
     enc = ctx.apply("enc/out", enc)
     return enc, state
@@ -78,17 +88,52 @@ def decode_train(params, tgt_in, enc_out, enc_state, cfg: NMTConfig, *,
         src_mask = jnp.ones(enc_out.shape[:2], bool)
 
     dec_params = params["decoder"]
+    nl = cfg.num_layers
+    in_dims = [cfg.embed + H] + [H] * (nl - 1)
+
+    scheduled = cfg.engine == "scheduled"
+    if scheduled:
+        # Phase A: all T steps' masks for every decoder site, sampled
+        # pre-scan. PER_STEP rows ride through the scan as xs, FIXED masks
+        # are closed over as scan constants — no in-scan PRNG either way.
+        # Input feeding ([embed_t ; h~_{t-1}] entering W) keeps the NR
+        # matmul itself inside the scan — it is sequentially dependent.
+        nr_scheds = [ctx.schedule(f"dec/layer{l}/nr", St, B, in_dims[l])
+                     for l in range(nl)]
+        rh_scheds = [ctx.schedule(f"dec/layer{l}/rh", St, B, H)
+                     for l in range(nl)]
+        drop_xs = ([s.scan_rows() for s in nr_scheds],
+                   [s.scan_rows() for s in rh_scheds])
+        nr_const = [s.state(0) if r is None else None
+                    for s, r in zip(nr_scheds, drop_xs[0])]
+        rh_const = [s.state(0) if r is None else None
+                    for s, r in zip(rh_scheds, drop_xs[1])]
+    else:
+        drop_xs = None
+
+    def drop_states(t, rows):
+        if scheduled:
+            nr_rows, rh_rows = rows
+            return ([nr_const[l] if nr_rows[l] is None
+                     else nr_scheds[l].state_for_row(nr_rows[l])
+                     for l in range(nl)],
+                    [rh_const[l] if rh_rows[l] is None
+                     else rh_scheds[l].state_for_row(rh_rows[l])
+                     for l in range(nl)])
+        return ([ctx.state(f"dec/layer{l}/nr", B, in_dims[l], t=t)
+                 for l in range(nl)],
+                [ctx.state(f"dec/layer{l}/rh", B, H, t=t) for l in range(nl)])
 
     def step(carry, inp):
         (hs, cs, feed) = carry
-        x_t, t = inp                                       # (B,E)
+        x_t, t, rows = inp                                 # x_t: (B,E)
         inp_t = jnp.concatenate([x_t, feed], axis=-1)
+        nr_sts, rh_sts = drop_states(t, rows)
         new_h, new_c = [], []
         cur = inp_t
-        for l in range(cfg.num_layers):
-            nr = ctx.state(f"dec/layer{l}/nr", B, cur.shape[-1], t=t)
-            rh = ctx.state(f"dec/layer{l}/rh", B, H, t=t)
-            h, c = lstm_mod.lstm_cell(dec_params[l], cur, hs[l], cs[l], nr, rh)
+        for l in range(nl):
+            h, c = lstm_mod.lstm_cell(dec_params[l], cur, hs[l], cs[l],
+                                      nr_sts[l], rh_sts[l])
             new_h.append(h)
             new_c.append(c)
             cur = h
@@ -105,7 +150,8 @@ def decode_train(params, tgt_in, enc_out, enc_state, cfg: NMTConfig, *,
     c0 = enc_state.c
     feed0 = jnp.zeros((B, H), x.dtype)
     (_, _, _), h_tildes = jax.lax.scan(
-        step, (h0, c0, feed0), (x.transpose(1, 0, 2), jnp.arange(St)))
+        step, (h0, c0, feed0),
+        (x.transpose(1, 0, 2), jnp.arange(St), drop_xs))
     ht = h_tildes.transpose(1, 0, 2)                       # (B,St,H)
     ht = ctx.apply("dec/out", ht)
     return L.dense(params["fc"], ht).astype(jnp.float32)

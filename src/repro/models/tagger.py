@@ -35,6 +35,7 @@ class TaggerConfig:
     num_tags: int = 9
     # sites: "inp" on concat(CNN, embed); "rh" recurrent (paper extension)
     plan: DropoutPlan = DropoutPlan({"inp": DropoutSpec(rate=0.5)})
+    engine: str = "scheduled"      # recurrent engine (core.lstm.lstm_stack)
     param_dtype: Any = jnp.float32
 
 
@@ -86,7 +87,7 @@ def features(params, batch, cfg: TaggerConfig, *, ctx=None):
         state = lstm_mod.zero_state(1, B, cfg.hidden)
         # site prefix = direction -> independent fwd/bwd RH streams
         ys, _ = lstm_mod.lstm_stack(params[dirn], xs, state, ctx=ctx,
-                                    site=dirn)
+                                    site=dirn, engine=cfg.engine)
         return ys
 
     xs = x.transpose(1, 0, 2)                              # (S,B,feat)

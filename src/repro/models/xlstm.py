@@ -52,6 +52,11 @@ class XLSTMConfig:
     # axis = layer index) and "rh" (sLSTM recurrent direction, time axis =
     # sequence step)
     plan: DropoutPlan = DropoutPlan()
+    # recurrent engine for the sLSTM time scan: "scheduled" samples the RH
+    # mask schedule pre-scan (rows threaded as scan xs — no in-scan PRNG);
+    # "stepwise" draws ctx.state per step. The NR projections are already
+    # time-batched outside the scan in both engines.
+    engine: str = "scheduled"
     # §Perf (EXPERIMENTS.md xlstm iter 3): keep the sLSTM h carry replicated
     # so the per-step RH compaction gather stays local. Off by default =
     # the paper-faithful baseline recorded in the §Roofline table.
@@ -387,13 +392,25 @@ def slstm_block_apply(pl, x, cfg: XLSTMConfig, nr_state=None, ctx=None,
     else:
         h0, st0 = initial
 
+    rh_active = (ctx is not None and not ctx.deterministic
+                 and ctx.spec(rh_site).active)
+    rh_sched, rh_xs, rh_const = None, None, None
+    if rh_active and cfg.engine == "scheduled":
+        # Phase A: the whole RH mask schedule, sampled pre-scan; the mask
+        # is shared across heads ((B, 1, dh) broadcasts in slstm_step).
+        # PER_STEP rows thread as scan xs; FIXED masks are a scan constant.
+        rh_sched = ctx.schedule(rh_site, S, (B, 1), dh, t0=step0)
+        rh_xs = rh_sched.scan_rows()
+        if rh_xs is None:
+            rh_const = rh_sched.state(0)
+
     def step(carry, inp):
         h_prev, st = carry
-        xg_t, t = inp
+        xg_t, t, rh_row = inp
         rh = None
-        if ctx is not None and not ctx.deterministic \
-                and ctx.spec(rh_site).active:
-            # mask shared across heads: (B, 1, dh) broadcasts in slstm_step
+        if rh_sched is not None:
+            rh = rh_const if rh_row is None else rh_sched.state_for_row(rh_row)
+        elif rh_active:
             rh = ctx.state(rh_site, (B, 1), dh, t=t)
         h_new, st_new = slstm_step(xg_t, h_prev, st, pl["R"], rh_state=rh,
                                    rules=rules, pin_h=cfg.pin_h_carry)
@@ -401,7 +418,7 @@ def slstm_block_apply(pl, x, cfg: XLSTMConfig, nr_state=None, ctx=None,
 
     (hf, stf), hs = jax.lax.scan(step, (h0, st0),
                                  (xg.transpose(1, 0, 2),
-                                  step0 + jnp.arange(S)))
+                                  step0 + jnp.arange(S), rh_xs))
     hs = hs.transpose(1, 0, 2, 3).reshape(B, S, D).astype(x.dtype)
     out = _group_rms(pl["gn"]["g"], hs, H)
     x = x + out
@@ -448,8 +465,9 @@ def forward(params, tokens, cfg: XLSTMConfig, *, rules=None, ctx=None):
     st = params["slstm"]
     mi = 0
     for g in range(n_groups):
-        grp = jax.tree.map(lambda a: a[mi:mi + per_group], mt)
-        x = m_scan(x, grp, g * cfg.slstm_every, per_group)
+        if per_group:      # slstm_every=1 -> all-sLSTM, no mLSTM sub-stack
+            grp = jax.tree.map(lambda a: a[mi:mi + per_group], mt)
+            x = m_scan(x, grp, g * cfg.slstm_every, per_group)
         sl = jax.tree.map(lambda a: a[g], st)
         nr = ctx.state("slstm/nr", x.shape[:2], cfg.d_model,
                        t=g * cfg.slstm_every + per_group)
@@ -572,7 +590,8 @@ def decode_step(params, cfg: XLSTMConfig, state, tokens, pos, *, rules=None):
 
     mi = 0
     for g in range(n_groups):
-        x = run_m(x, mi, mi + per_group)
+        if per_group:      # slstm_every=1 -> all-sLSTM, no mLSTM sub-stack
+            x = run_m(x, mi, mi + per_group)
         sl = jax.tree.map(lambda a: a[g], st_p)
         stt = (state["s_c"][g], state["s_n"][g], state["s_m"][g])
         x, h_new, st_new = s_body(x, sl, state["s_h"][g], stt)

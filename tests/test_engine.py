@@ -1,0 +1,312 @@
+"""Cross-engine equivalence: scheduled == stepwise on every dropout case.
+
+The scheduled engine restructures execution (masks pre-sampled, NR matmuls
+time-batched outside the scan, per-layer scans) but must compute the same
+function. Contract, asserted here:
+
+  * mask schedules are BIT-identical to the stepwise per-step derivation
+    (same site keys, same fold order) — for all four cases;
+  * op-by-op (``jax.disable_jit``) the two engines are bit-identical for
+    rate 0 AND for every active case — the graphs are mathematically
+    identical, so eager dispatch (each op compiled standalone) gives
+    exactly equal floats;
+  * jitted, outputs/grads agree to fp32 tolerance (XLA fuses the two graph
+    shapes differently, so transcendental codegen may differ in the last
+    bits — that is an XLA CPU property, not an engine property);
+  * FIXED time-patterns materialize ONE mask row, broadcast over steps;
+  * the pallas ``impl`` (interpret mode on CPU) agrees across engines;
+  * all four model families produce identical losses under either engine.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lstm as lstm_mod
+from repro.core import masks, sparse_matmul as sm
+from repro.core.dropout_plan import DropoutPlan
+from repro.data import synthetic
+from repro.distributed.sharding import strip
+from repro.models import lstm_lm, seq2seq, tagger, xlstm
+
+KEY = jax.random.PRNGKey(0)
+CASES = ("case1", "case2", "case3", "case4")
+
+
+def _bs(case):
+    return 4 if case in ("case3", "case4") else 1
+
+
+def _stack_setup(num_layers=2, T=9, B=4, D=24, H=32):
+    params = lstm_mod.init_lstm_params(KEY, D, H, num_layers)
+    x = jax.random.normal(jax.random.fold_in(KEY, 9), (T, B, D))
+    state = lstm_mod.zero_state(num_layers, B, H)
+    return params, x, state
+
+
+class TestScheduleMatchesStepwise:
+    """ctx.schedule row t == ctx.state(..., t=t) — bit-identical masks."""
+
+    @pytest.mark.parametrize("case", CASES)
+    def test_rows_match_states(self, case):
+        T, B, D = 7, 5, 32
+        plan = DropoutPlan.case(case, 0.5, block_size=_bs(case),
+                                sites=("nr", "rh"))
+        ctx = plan.bind(jax.random.PRNGKey(3), 11)
+        sched = ctx.schedule("lstm/layer0/nr", T, B, D)
+        for t in range(T):
+            st = ctx.state("lstm/layer0/nr", B, D, t=t)
+            row = sched.state(t)
+            if st.keep_blocks is not None:
+                np.testing.assert_array_equal(np.asarray(st.keep_blocks),
+                                              np.asarray(row.keep_blocks))
+                assert st.scale == row.scale
+            else:
+                np.testing.assert_array_equal(np.asarray(st.dense_mask),
+                                              np.asarray(row.dense_mask))
+
+    @pytest.mark.parametrize("case", ("case2", "case4"))
+    def test_fixed_materializes_one_row(self, case):
+        """FIXED schedules hold ONE physical mask row, broadcast over T."""
+        T, B, D = 13, 3, 32
+        plan = DropoutPlan.case(case, 0.5, block_size=_bs(case),
+                                sites=("nr",))
+        ctx = plan.bind(jax.random.PRNGKey(1), 0)
+        sched = ctx.schedule("nr", T, B, D)
+        table = sched.keep_blocks if sched.structured else sched.dense_mask
+        assert table.shape[0] == 1, "FIXED schedule must store a single row"
+        rows = np.asarray(sched.rows())
+        assert rows.shape[0] == T
+        flat = rows.reshape(T, -1)
+        assert np.unique(flat, axis=0).shape[0] == 1, \
+            "every broadcast row must be the same mask"
+
+    @pytest.mark.parametrize("case", ("case1", "case3"))
+    def test_per_step_rows_distinct(self, case):
+        T, B, D = 13, 3, 32
+        plan = DropoutPlan.case(case, 0.5, block_size=_bs(case),
+                                sites=("nr",))
+        ctx = plan.bind(jax.random.PRNGKey(1), 0)
+        rows = np.asarray(ctx.schedule("nr", T, B, D).rows()).reshape(T, -1)
+        assert np.unique(rows, axis=0).shape[0] > 1, \
+            "PER_STEP schedule should re-sample across steps"
+
+    def test_inactive_schedule(self):
+        ctx = DropoutPlan.off().bind(jax.random.PRNGKey(0))
+        sched = ctx.schedule("nr", 5, 2, 16)
+        assert sched.inactive and sched.rows() is None
+        assert sched.state_for_row(None).inactive
+
+
+class TestStackEquivalence:
+    """2-layer lstm_stack: scheduled == stepwise."""
+
+    def _run(self, ctx, engine, pointwise_impl="xla"):
+        params, x, state = _stack_setup()
+        return lstm_mod.lstm_stack(params, x, state, ctx=ctx, engine=engine,
+                                   pointwise_impl=pointwise_impl)
+
+    def test_rate0_bit_identical(self):
+        """Op-by-op, the engines are exactly equal at rate 0."""
+        with jax.disable_jit():
+            y1, s1 = self._run(None, "stepwise")
+            y2, s2 = self._run(None, "scheduled")
+        np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+        np.testing.assert_array_equal(np.asarray(s1.h), np.asarray(s2.h))
+        np.testing.assert_array_equal(np.asarray(s1.c), np.asarray(s2.c))
+
+    @pytest.mark.parametrize("case", CASES)
+    def test_active_bit_identical_opbyop(self, case):
+        """Identical masks + identical math -> exactly equal, op-by-op."""
+        plan = DropoutPlan.case(case, 0.5, block_size=_bs(case),
+                                sites=("nr", "rh"))
+        ctx = plan.bind(jax.random.PRNGKey(2), 5)
+        with jax.disable_jit():
+            y1, s1 = self._run(ctx, "stepwise")
+            y2, s2 = self._run(ctx, "scheduled")
+        np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2),
+                                      err_msg=case)
+        np.testing.assert_array_equal(np.asarray(s1.c), np.asarray(s2.c))
+
+    @pytest.mark.parametrize("case", CASES)
+    def test_active_allclose_jitted(self, case):
+        """Jitted: fp32-allclose (XLA codegen may differ in the last bits)."""
+        plan = DropoutPlan.case(case, 0.5, block_size=_bs(case),
+                                sites=("nr", "rh"))
+        ctx = plan.bind(jax.random.PRNGKey(2), 5)
+        y1, s1 = self._run(ctx, "stepwise")
+        y2, s2 = self._run(ctx, "scheduled")
+        np.testing.assert_allclose(y1, y2, rtol=2e-5, atol=2e-5,
+                                   err_msg=case)
+        np.testing.assert_allclose(s1.c, s2.c, rtol=2e-5, atol=2e-5)
+
+    def test_grads_match(self):
+        params, x, state = _stack_setup()
+        plan = DropoutPlan.case("case3", 0.5, block_size=4,
+                                sites=("nr", "rh"))
+        ctx = plan.bind(jax.random.PRNGKey(2), 5)
+
+        def loss(p, engine):
+            ys, _ = lstm_mod.lstm_stack(p, x, state, ctx=ctx, engine=engine)
+            return (ys ** 2).sum()
+
+        g1 = jax.grad(lambda p: loss(p, "stepwise"))(params)
+        g2 = jax.grad(lambda p: loss(p, "scheduled"))(params)
+        for l in range(len(params)):
+            for k in ("W", "U", "b"):
+                np.testing.assert_allclose(g1[l][k], g2[l][k], rtol=2e-4,
+                                           atol=2e-4, err_msg=f"{l}/{k}")
+
+    def test_pallas_impl_equivalent(self):
+        """pallas sdrop impl (interpret=True on CPU) agrees across engines."""
+        plan = DropoutPlan.case("case3", 0.5, block_size=8, impl="pallas",
+                                sites=("nr", "rh"))
+        ctx = plan.bind(jax.random.PRNGKey(3), 1)
+        y1, _ = self._run(ctx, "stepwise")
+        y2, _ = self._run(ctx, "scheduled")
+        np.testing.assert_allclose(y1, y2, rtol=2e-5, atol=2e-5)
+
+    def test_unknown_engine_raises(self):
+        params, x, state = _stack_setup()
+        with pytest.raises(ValueError):
+            lstm_mod.lstm_stack(params, x, state, engine="warp")
+
+
+class TestScheduledMatmul:
+    """sdrop_matmul_scheduled == per-step sdrop_matmul loop (fwd + grads)."""
+
+    def setup_method(self, _):
+        T, B, H, N, bs, rate = 6, 4, 48, 20, 4, 0.5
+        self.rate, self.bs = rate, bs
+        self.kb = jax.vmap(lambda k: masks.sample_keep_blocks(
+            k, H, rate, bs))(jax.random.split(KEY, T))
+        self.x = jax.random.normal(KEY, (T, B, H))
+        self.w = jax.random.normal(jax.random.fold_in(KEY, 1), (H, N)) / 7.0
+
+    def _per_step(self, x, w):
+        return jnp.stack([sm.sdrop_matmul(x[t], w, self.kb[t],
+                                          rate=self.rate, block_size=self.bs)
+                          for t in range(x.shape[0])])
+
+    @pytest.mark.parametrize("impl", ("xla", "pallas"))
+    def test_forward_and_grads(self, impl):
+        def f(x, w):
+            return (sm.sdrop_matmul_scheduled(
+                x, w, self.kb, rate=self.rate, block_size=self.bs,
+                impl=impl) ** 2).sum()
+
+        def f_ref(x, w):
+            return (self._per_step(x, w) ** 2).sum()
+
+        np.testing.assert_allclose(f(self.x, self.w), f_ref(self.x, self.w),
+                                   rtol=1e-5)
+        g = jax.grad(f, argnums=(0, 1))(self.x, self.w)
+        gr = jax.grad(f_ref, argnums=(0, 1))(self.x, self.w)
+        np.testing.assert_allclose(g[0], gr[0], rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(g[1], gr[1], rtol=1e-4, atol=1e-4)
+
+    def test_bp_sparsity_structure(self):
+        """Dropped columns of δx are exactly zero at each step."""
+        g = jax.grad(lambda x: (sm.sdrop_matmul_scheduled(
+            x, self.w, self.kb, rate=self.rate,
+            block_size=self.bs) ** 2).sum())(self.x)
+        for t in range(self.x.shape[0]):
+            ids = masks.keep_blocks_to_unit_ids(self.kb[t], self.bs)
+            kept = np.zeros(self.x.shape[-1], bool)
+            kept[np.asarray(ids)] = True
+            assert np.all(np.asarray(g[t][:, ~kept]) == 0), f"step {t}"
+
+    def test_fixed_row_delegates(self):
+        y1 = sm.sdrop_matmul_scheduled(self.x, self.w, self.kb[:1],
+                                       rate=self.rate, block_size=self.bs)
+        y2 = sm.sdrop_matmul(self.x, self.w, self.kb[0], rate=self.rate,
+                             block_size=self.bs)
+        np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+
+class TestModelEquivalence:
+    """Same loss from both engines on every recurrent model family."""
+
+    def test_lstm_lm(self):
+        plan = DropoutPlan.case("case3", 0.5, block_size=4,
+                                sites=("embed", "nr", "rh", "out"))
+        batch = {"tokens": jax.random.randint(KEY, (4, 12), 0, 100),
+                 "labels": jax.random.randint(KEY, (4, 12), 0, 100)}
+        losses = []
+        for e in ("stepwise", "scheduled"):
+            cfg = lstm_lm.LSTMLMConfig(vocab=100, embed=32, hidden=32,
+                                       num_layers=2, plan=plan, engine=e)
+            p = lstm_lm.init_params(KEY, cfg)
+            losses.append(float(lstm_lm.loss_fn(
+                p, batch, cfg, drop_key=jax.random.PRNGKey(1), step=2)))
+        np.testing.assert_allclose(*losses, rtol=1e-5)
+
+    def test_nmt(self):
+        plan = DropoutPlan.case("case3", 0.3, block_size=4,
+                                sites=("nr", "rh", "out"))
+        b = jax.tree.map(jnp.asarray,
+                         synthetic.nmt_pairs(4, 60, 60, max_len=10, seed=3))
+        losses = []
+        for e in ("stepwise", "scheduled"):
+            cfg = seq2seq.NMTConfig(src_vocab=60, tgt_vocab=60, embed=24,
+                                    hidden=24, num_layers=2, plan=plan,
+                                    engine=e)
+            p = seq2seq.init_params(KEY, cfg)
+            losses.append(float(seq2seq.loss_fn(
+                p, b, cfg, drop_key=jax.random.PRNGKey(4), step=1)))
+        np.testing.assert_allclose(*losses, rtol=1e-5)
+
+    def test_tagger(self):
+        plan = DropoutPlan.case("case3", 0.5, block_size=4,
+                                sites=("inp", "rh"))
+        b = jax.tree.map(jnp.asarray, synthetic.ner_examples(
+            4, 80, 30, 5, seq=10, seed=5))
+        losses = []
+        for e in ("stepwise", "scheduled"):
+            cfg = tagger.TaggerConfig(vocab=80, char_vocab=30, hidden=32,
+                                      num_tags=5, word_embed=20,
+                                      char_filters=12, plan=plan, engine=e)
+            p = tagger.init_params(KEY, cfg)
+            losses.append(float(tagger.loss_fn(
+                p, b, cfg, drop_key=jax.random.PRNGKey(6), step=1)))
+        np.testing.assert_allclose(*losses, rtol=1e-5)
+
+    def test_xlstm(self):
+        plan = DropoutPlan.case("case3", 0.5, block_size=4,
+                                sites=("nr", "rh"))
+        tok = jax.random.randint(KEY, (2, 16), 0, 50)
+        losses = []
+        for e in ("stepwise", "scheduled"):
+            cfg = xlstm.XLSTMConfig(num_layers=4, d_model=32, n_heads=4,
+                                    vocab=50, chunk=4, slstm_every=4,
+                                    plan=plan, engine=e)
+            p = strip(xlstm.init_params(KEY, cfg))
+            losses.append(float(xlstm.loss_fn(
+                p, {"tokens": tok, "labels": tok}, cfg,
+                drop_key=jax.random.PRNGKey(8), step=0)))
+        np.testing.assert_allclose(*losses, rtol=1e-5)
+
+
+@pytest.mark.parametrize("hyp", [None])
+def test_property_schedule_vs_state(hyp):
+    """Property-style sweep: schedule rows == stepwise states across a grid
+    of (case, rate, block, T) without requiring hypothesis at runtime."""
+    for case in CASES:
+        for rate in (0.25, 0.5, 0.65):
+            for block in ((1, 8) if case in ("case3", "case4") else (1,)):
+                T, B, D = 5, 3, 32
+                plan = DropoutPlan.case(case, rate, block_size=block,
+                                        sites=("s",))
+                ctx = plan.bind(jax.random.PRNGKey(hash((case, block)) %
+                                                   (2 ** 31)), 7)
+                sched = ctx.schedule("s", T, B, D)
+                for t in range(T):
+                    st = ctx.state("s", B, D, t=t)
+                    row = sched.state(t)
+                    a = st.keep_blocks if st.keep_blocks is not None \
+                        else st.dense_mask
+                    b = row.keep_blocks if row.keep_blocks is not None \
+                        else row.dense_mask
+                    np.testing.assert_array_equal(
+                        np.asarray(a), np.asarray(b),
+                        err_msg=f"{case} rate={rate} bs={block} t={t}")

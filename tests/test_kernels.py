@@ -94,6 +94,61 @@ class TestGatherMatmulBCols:
         np.testing.assert_allclose(y, y_ref, rtol=1e-4, atol=1e-4)
 
 
+class TestGatherMatmulStepped:
+    """Scheduled variant: (T, nk) ids table as extra leading grid axis."""
+
+    @pytest.mark.parametrize("T,M,H,N,bs,rate", [
+        (4, 8, 64, 32, 8, 0.5),
+        (6, 16, 128, 96, 8, 0.25),
+        (3, 128, 256, 256, 128, 0.5),   # production tile sizes
+        (5, 7, 64, 33, 8, 0.5),         # unaligned M and N (padding path)
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_fp_sweep(self, T, M, H, N, bs, rate, dtype):
+        a, b = mk((T, M, H), dtype, 11), mk((H, N), dtype, 12)
+        kb = jnp.stack([masks.sample_keep_blocks(
+            jax.random.fold_in(KEY, t), H, rate, bs) for t in range(T)])
+        ids = jnp.stack([masks.keep_blocks_to_unit_ids(kb[t], bs)
+                         for t in range(T)])
+        a_c = jnp.take_along_axis(a, ids[:, None, :], axis=2)
+        y = ops.gather_matmul_stepped(a_c, b, kb, block_size=bs,
+                                      a_is_compact=True)
+        y_ref = ref.gather_matmul_stepped_ref(a_c, b, kb, block_size=bs,
+                                              a_is_compact=True)
+        np.testing.assert_allclose(np.asarray(y, np.float32),
+                                   np.asarray(y_ref, np.float32), **TOL[dtype])
+        # gathering a's columns inside the kernel must agree too
+        y2 = ops.gather_matmul_stepped(a, b, kb, block_size=bs)
+        np.testing.assert_allclose(np.asarray(y2, np.float32),
+                                   np.asarray(y_ref, np.float32), **TOL[dtype])
+
+    @pytest.mark.parametrize("T,M,H,N,bs,rate", [
+        (4, 8, 64, 32, 8, 0.5),
+        (3, 16, 256, 96, 8, 0.25),
+        (5, 7, 64, 33, 8, 0.5),
+    ])
+    def test_bp_sweep(self, T, M, H, N, bs, rate):
+        dy, b = mk((T, M, N), jnp.float32, 13), mk((H, N), jnp.float32, 14)
+        kb = jnp.stack([masks.sample_keep_blocks(
+            jax.random.fold_in(KEY, t), H, rate, bs) for t in range(T)])
+        y = ops.gather_matmul_stepped(dy, b, kb, block_size=bs,
+                                      transpose_b=True)
+        y_ref = ref.gather_matmul_stepped_ref(dy, b, kb, block_size=bs,
+                                              transpose_b=True)
+        np.testing.assert_allclose(y, y_ref, rtol=1e-4, atol=1e-4)
+
+    def test_per_step_masks_differ(self):
+        """Each step really contracts its own kept blocks (not step 0's)."""
+        T, M, H, N, bs = 3, 4, 32, 16, 8
+        a, b = mk((T, M, H), jnp.float32, 15), mk((H, N), jnp.float32, 16)
+        kb = jnp.stack([masks.sample_keep_blocks(
+            jax.random.fold_in(KEY, 100 + t), H, 0.5, bs) for t in range(T)])
+        y = ops.gather_matmul_stepped(a, b, kb, block_size=bs)
+        y0 = ops.gather_matmul_stepped(
+            a, b, jnp.broadcast_to(kb[:1], kb.shape), block_size=bs)
+        assert not np.allclose(np.asarray(y), np.asarray(y0))
+
+
 class TestLSTMPointwise:
     @pytest.mark.parametrize("B,H", [(4, 32), (8, 650), (128, 512), (3, 17)])
     @pytest.mark.parametrize("fb", [0.0, 1.0])
