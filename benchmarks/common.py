@@ -22,7 +22,6 @@ from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.dropout_plan import DropoutPlan
 

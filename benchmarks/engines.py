@@ -1,14 +1,38 @@
 """Engine matrix benchmark: arch x dropout case x engine step-times.
 
 Times one full training step (fwd + bwd + optimizer, jitted, CPU backend)
-for every recurrent arch under every dropout case, on both recurrent
-engines, and reports the scheduled/stepwise ratio — the wall-clock value of
-hoisting mask sampling and the NR gate matmuls out of the ``lax.scan``.
+for every recurrent arch under every dropout case, on all three recurrent
+engines, and reports the paired engine ratios — ``ratio`` =
+stepwise/scheduled (the wall-clock value of hoisting mask sampling and the
+NR gate matmuls out of the ``lax.scan``) and ``fused_vs_scheduled`` =
+scheduled/fused (the additional value of running Phase B as one fused pass
+per layer, kernels/lstm_scan.py).
 
-    PYTHONPATH=src python -m benchmarks.engines [--quick]
+    PYTHONPATH=src python -m benchmarks.engines [--quick] [--out PATH]
+
+``--quick`` doubles as the CI perf-regression gate: after the (reduced-size)
+matrix it loads the latest committed ``BENCH_*.json`` at the repo root and
+FAILS (exit 1) on a scheduled-engine ratio regression. Ratios — not
+absolute ms — are what gates portably: both engines of a pair run
+interleaved on the same host, so the paired ratio cancels machine speed and
+host-load drift, while CI runners and dev machines disagree wildly on raw
+step times. Two further design points, both measured:
+
+  * quick-mode cells are compared against the snapshot's ``quick_cells``
+    (snapshots since PR 3 record the quick matrix alongside the full one) —
+    quick geometries have legitimately different ratios than full ones, so
+    cross-size comparison false-positives (older snapshots without
+    quick_cells fall back to the full cells, warned);
+  * the ~40-400 ms quick cells carry enough host noise that a single
+    paired-median ratio swings ~1.25x run-to-run, so the per arch x case
+    check uses a 1.5x tolerance and the tight 1.25x bound is applied to
+    the per-arch GEOMEAN over its cases (the stable quantity) — a cell
+    collapse trips the first, a broad slowdown the second.
+
+``--no-check`` skips the gate.
 
 ``snapshot()`` is the perf-trajectory entry point: ``benchmarks.run
---snapshot PR2`` calls it and writes ``BENCH_PR2.json`` at the repo root so
+--snapshot PR3`` calls it and writes ``BENCH_PR3.json`` at the repo root so
 future PRs can regress against this PR's step-times. The snapshot includes
 the acceptance cell ``lstm_lm_ptb_large`` — the Zaremba-large recurrent
 geometry (2x1500, rate .65, batch 20, unroll 35; bench-reduced vocab so the
@@ -18,7 +42,11 @@ from __future__ import annotations
 
 import argparse
 import gc
+import glob
 import json
+import os
+import re
+import sys
 import time
 
 import jax
@@ -31,8 +59,13 @@ from repro.core.lstm import ENGINES as _ALL_ENGINES
 from repro.data import synthetic
 from repro.models import lstm_lm, seq2seq, tagger, xlstm
 
-# measurement order: stepwise first, then scheduled, within each round
-ENGINES = tuple(sorted(_ALL_ENGINES, reverse=True))
+# measurement order within each round: reference first, then the two
+# restructured engines in the order they were introduced
+ENGINES = ("stepwise", "scheduled", "fused")
+assert set(ENGINES) == set(_ALL_ENGINES), (ENGINES, _ALL_ENGINES)
+# (numerator, denominator, row key) for the paired per-round ratios
+RATIO_PAIRS = (("stepwise", "scheduled", "ratio"),
+               ("scheduled", "fused", "fused_vs_scheduled"))
 CASES = ("case1", "case2", "case3", "case4")
 
 
@@ -173,9 +206,9 @@ def time_engines(kind, cfg_fn, case, batch, seq, steps, warmup=2):
             runners[eng].step(i)
             times[eng].append(time.time() - t0)
     out = {eng: float(np.min(ts) * 1e3) for eng, ts in times.items()}
-    out["ratio"] = float(np.median([a / b for a, b in
-                                    zip(times["stepwise"],
-                                        times["scheduled"])]))
+    for num, den, key in RATIO_PAIRS:
+        out[key] = float(np.median([a / b for a, b in
+                                    zip(times[num], times[den])]))
     return out
 
 
@@ -197,7 +230,9 @@ def run_matrix(quick: bool = False, cases=CASES, verbose: bool = True):
             if verbose:
                 print(f"{name:20s} {case}: stepwise {row['stepwise']:8.1f} ms"
                       f"  scheduled {row['scheduled']:8.1f} ms"
-                      f"  ratio {row['ratio']:.2f}x")
+                      f"  fused {row['fused']:8.1f} ms"
+                      f"  ratio {row['ratio']:.2f}x"
+                      f"  fused/sched {row['fused_vs_scheduled']:.2f}x")
             # drop this cell's executables/buffers before the next one —
             # long-process allocator state was measured skewing small cells
             jax.clear_caches()
@@ -205,14 +240,15 @@ def run_matrix(quick: bool = False, cases=CASES, verbose: bool = True):
     return out
 
 
-def arch_ratios(cells: dict) -> dict:
-    """Per-arch scheduled-engine speedup: geometric mean over that arch's
-    case cells (individual ~40-400 ms cells carry a few % host noise; the
-    per-arch aggregate is the stable quantity)."""
+def arch_ratios(cells: dict, key: str = "ratio") -> dict:
+    """Per-arch engine speedup: geometric mean over that arch's case cells
+    (individual ~40-400 ms cells carry a few % host noise; the per-arch
+    aggregate is the stable quantity)."""
     out = {}
     for name, by_case in cells.items():
-        rs = [row["ratio"] for row in by_case.values()]
-        out[name] = float(np.exp(np.mean(np.log(rs))))
+        rs = [row[key] for row in by_case.values() if key in row]
+        if rs:
+            out[name] = float(np.exp(np.mean(np.log(rs))))
     return out
 
 
@@ -227,21 +263,152 @@ def snapshot(tag: str, out_path: str, quick: bool = False) -> dict:
         # scheduled/stepwise per arch (geomean over cases): the headline
         # "no slower on any recurrent arch" number
         "arch_ratios": arch_ratios(cells),
+        # scheduled/fused per arch: the value of the fused Phase-B pass
+        "fused_arch_ratios": arch_ratios(cells, "fused_vs_scheduled"),
     }
+    if not quick:
+        # the CI gate runs --quick, whose smaller geometries have
+        # legitimately different ratios — record a quick-mode baseline
+        # alongside so the gate compares like with like
+        print("\nquick-mode matrix (CI gate baseline):")
+        snap["quick_cells"] = run_matrix(quick=True)
+        snap["quick_arch_ratios"] = arch_ratios(snap["quick_cells"])
     with open(out_path, "w") as f:
         json.dump(snap, f, indent=1, default=float)
     print(f"\nsnapshot {tag} -> {out_path}")
-    for name, r in snap["arch_ratios"].items():
-        print(f"  {name:20s} scheduled-engine speedup {r:.2f}x")
+    for name in snap["arch_ratios"]:
+        print(f"  {name:20s} scheduled {snap['arch_ratios'][name]:.2f}x"
+              f"  fused/sched {snap['fused_arch_ratios'].get(name, 1.0):.2f}x")
     return snap
 
 
-def main(quick: bool = False):
-    return run_matrix(quick=quick)
+# ---------------------------------------------------------------------------
+# CI perf-regression gate
+# ---------------------------------------------------------------------------
+
+
+def latest_baseline(root: str) -> str:
+    """Path of the most recent committed ``BENCH_*.json`` snapshot, or "".
+
+    "Latest" = highest numeric PR tag (BENCH_PR2 < BENCH_PR10); snapshots
+    with non-numeric tags sort before any numeric one, ties by mtime.
+    """
+    def order(path):
+        m = re.search(r"BENCH_\D*(\d+)\.json$", os.path.basename(path))
+        return (int(m.group(1)) if m else -1, os.path.getmtime(path))
+
+    paths = glob.glob(os.path.join(root, "BENCH_*.json"))
+    return max(paths, key=order) if paths else ""
+
+
+def check_regression(cells: dict, baseline_path: str,
+                     tolerance_cell: float = 1.5,
+                     tolerance_arch: float = 1.25,
+                     quick: bool = True) -> list:
+    """Compare scheduled-engine ratios against a committed snapshot.
+
+    The gated quantity is the MEDIAN PAIRED RATIO (stepwise/scheduled):
+    machine-portable because both engines of a pair run interleaved on the
+    same host. Quick runs compare against the snapshot's ``quick_cells``
+    (same geometries; pre-PR3 snapshots fall back to the full cells with a
+    warning). Two checks, both measured-noise-calibrated (module
+    docstring): per arch x case at ``tolerance_cell`` (catches a cell
+    collapse) and per-arch geomean over cases at ``tolerance_arch``
+    (catches a broad slowdown; single-cell paired medians swing ~1.25x
+    run-to-run at quick sizes, the geomean does not). Cells/cases absent
+    from the baseline are skipped (new archs don't fail the gate). Returns
+    a list of failure strings (empty = pass).
+    """
+    with open(baseline_path) as f:
+        base = json.load(f)
+    base_cells = base.get("quick_cells") if quick else base.get("cells")
+    if quick and not base_cells:
+        print("  (baseline has no quick_cells — comparing against its "
+              "full-size cells; expect larger legitimate drift)")
+        base_cells = base.get("cells")
+    base_cells = base_cells or {}
+    failures = []
+    for name, by_case in cells.items():
+        for case, row in by_case.items():
+            b = base_cells.get(name, {}).get(case)
+            if not b or "ratio" not in b or "ratio" not in row:
+                continue
+            drift = b["ratio"] / row["ratio"]
+            status = "FAIL" if drift > tolerance_cell else "ok"
+            print(f"  gate {name:20s} {case}: baseline {b['ratio']:.2f}x "
+                  f"now {row['ratio']:.2f}x  drift {drift:.2f} [{status}]")
+            if drift > tolerance_cell:
+                failures.append(
+                    f"{name}/{case}: scheduled-engine ratio fell "
+                    f"{b['ratio']:.2f}x -> {row['ratio']:.2f}x "
+                    f"(drift {drift:.2f} > tolerance {tolerance_cell})")
+    # geomeans over the SAME case set on both sides — a case present on
+    # only one side (new case added / baseline predates it) is excluded,
+    # never a spurious failure
+    common = {n: sorted(set(by_case) & set(base_cells.get(n, {})))
+              for n, by_case in cells.items()}
+    cur_arch = arch_ratios({n: {c: cells[n][c] for c in cs}
+                            for n, cs in common.items() if cs})
+    base_arch = arch_ratios({n: {c: base_cells[n][c] for c in cs}
+                             for n, cs in common.items() if cs})
+    for name, br in base_arch.items():
+        if name not in cur_arch:
+            continue
+        drift = br / cur_arch[name]
+        status = "FAIL" if drift > tolerance_arch else "ok"
+        print(f"  gate {name:20s} geomean: baseline {br:.2f}x "
+              f"now {cur_arch[name]:.2f}x  drift {drift:.2f} [{status}]")
+        if drift > tolerance_arch:
+            failures.append(
+                f"{name} (geomean over cases): scheduled-engine ratio fell "
+                f"{br:.2f}x -> {cur_arch[name]:.2f}x "
+                f"(drift {drift:.2f} > tolerance {tolerance_arch})")
+    return failures
+
+
+def main(quick: bool = False, check: bool = True, out: str = "",
+         tolerance_cell: float = 1.5, tolerance_arch: float = 1.25) -> dict:
+    cells = run_matrix(quick=quick)
+    result = {"backend": jax.default_backend(), "quick": bool(quick),
+              "cells": cells, "arch_ratios": arch_ratios(cells),
+              "fused_arch_ratios": arch_ratios(cells, "fused_vs_scheduled")}
+    if out:
+        os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+        with open(out, "w") as f:
+            json.dump(result, f, indent=1, default=float)
+        print(f"engine matrix -> {out}")
+    if quick and check:
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        baseline = latest_baseline(root)
+        if not baseline:
+            print("perf gate: no BENCH_*.json baseline at repo root, skipped")
+        else:
+            print(f"\nperf gate vs {os.path.basename(baseline)} "
+                  f"(tolerance {tolerance_cell}x per cell / "
+                  f"{tolerance_arch}x per-arch geomean):")
+            failures = check_regression(cells, baseline, tolerance_cell,
+                                        tolerance_arch, quick=True)
+            if failures:
+                for msg in failures:
+                    print(f"PERF REGRESSION: {msg}", file=sys.stderr)
+                sys.exit(1)
+            print("perf gate: pass")
+    return result
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--no-check", action="store_true",
+                    help="skip the --quick perf-regression gate")
+    ap.add_argument("--out", default="",
+                    help="also write the matrix JSON here (CI artifact)")
+    ap.add_argument("--tolerance-cell", type=float, default=1.5,
+                    help="allowed baseline/current paired-ratio drift per "
+                         "arch x case cell")
+    ap.add_argument("--tolerance-arch", type=float, default=1.25,
+                    help="allowed drift of the per-arch geomean over cases")
     args = ap.parse_args()
-    main(quick=args.quick)
+    main(quick=args.quick, check=not args.no_check, out=args.out,
+         tolerance_cell=args.tolerance_cell,
+         tolerance_arch=args.tolerance_arch)

@@ -9,7 +9,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks import common
 from benchmarks.table1_ptb import _cfg
 from repro import optim
 from repro.data import synthetic

@@ -12,7 +12,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import masks
 from repro.kernels import ops, ref

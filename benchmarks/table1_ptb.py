@@ -7,7 +7,6 @@ isolation at the real Zaremba-medium gate-matmul shape.
 """
 from __future__ import annotations
 
-import functools
 import time
 
 import jax

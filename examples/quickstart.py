@@ -32,9 +32,17 @@ Since PR 2 the LSTM stack runs on a *scheduled* engine by default
       the pointwise cell update; gate slices and mask rows ride in as
       scan xs. No PRNG and no NR matmul inside the recurrence.
 
-``engine="stepwise"`` keeps the reference in-scan path; the two compute
-the same function (tests/test_engine.py), and every trainer accepts an
-``--engine`` override next to ``--dropout``.
+Since PR 3 there is also ``engine="fused"``: same Phase A, but Phase B runs
+as ONE ``kernels/lstm_scan`` call per layer — the recurrent weight stays
+resident across all T steps, each step gathers its kept blocks straight
+from the scalar-prefetched schedule ids table, and the pointwise update
+plus the reverse-time backward are fused into the same pass. Pick fused
+for recurrent-dominated LSTM training (its Pallas kernel is the TPU path;
+off-TPU it runs an equivalent xla two-pass form — the Pallas impl in
+interpret mode on CPU is correctness-only, not fast). ``engine="stepwise"``
+keeps the reference in-scan path; all three compute the same function
+(tests/test_engine.py), and every trainer accepts an ``--engine`` override
+next to ``--dropout``.
 
 This script trains a small LSTM LM on a synthetic PTB-like stream under
 case1 and case3 and reports both the task metric (perplexity) and measured
@@ -112,4 +120,5 @@ if __name__ == "__main__":
     print("\nthe same pattern on any arch: python -m repro.launch.train "
           "--arch xlstm-1.3b --smoke --dropout case3:0.65:bs8")
     print("engine A/B on any recurrent arch: add --engine stepwise "
-          "(reference) or --engine scheduled (two-phase, default)")
+          "(reference), --engine scheduled (two-phase, default) or "
+          "--engine fused (one persistent-scan kernel per layer)")

@@ -9,12 +9,19 @@ at rates {0.5, 0.65}, reporting per-phase times (FP = fwd, BP+WG = grad)
 and the structured-vs-random speedup.
 
 Part 2 (what actually ships) — times the full 2-layer ``lstm_stack``
-(fwd + bwd) under dense / case1 / case3 plans on BOTH recurrent engines:
+(fwd + bwd) under dense / case1 / case3 plans on ALL THREE recurrent
+engines:
   stepwise  : reference — masks sampled and NR matmuls run inside the scan
   scheduled : two-phase — masks pre-sampled, NR matmuls time-batched
               outside the scan, scan body = RH matmul + pointwise
-The scheduled/stepwise ratio is the wall-clock value of the engine
-refactor; the case3-vs-case1 ratio is the paper's structured-sparsity win.
+  fused     : same Phase A; Phase B = one kernels/lstm_scan call per layer
+              (persistent U, compact RH gathers, fused pointwise + fused
+              reverse-time backward). On CPU this runs the kernel's xla
+              impl; the Pallas impl needs a TPU to be fast (interpret mode
+              elsewhere is correctness-only).
+The scheduled/stepwise and fused/scheduled ratios are the wall-clock value
+of the two engine refactors; the case3-vs-case1 ratio is the paper's
+structured-sparsity win.
 
     PYTHONPATH=src python examples/sdrop_speedup.py [--quick]
 """
@@ -22,7 +29,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import lstm as lstm_mod
 from repro.core import masks, sparse_matmul as sm
@@ -112,14 +118,16 @@ def full_stack(quick=False):
     print(f"\nfull 2-layer lstm_stack fwd+bwd (T={T}, B={Bs}, H={Hs}):")
     times = {}
     for name, plan in plans.items():
-        for engine in ("stepwise", "scheduled"):
+        for engine in ("stepwise", "scheduled", "fused"):
             times[(name, engine)] = stack_time(plan, engine, T, Bs, D, Hs,
                                                n=n)
             print(f"  {name:6s} {engine:9s}: "
                   f"{times[(name, engine)]:8.1f} ms/step")
     for name in plans:
         r = times[(name, "stepwise")] / times[(name, "scheduled")]
-        print(f"  {name:6s} scheduled-engine speedup: {r:.2f}x")
+        rf = times[(name, "scheduled")] / times[(name, "fused")]
+        print(f"  {name:6s} scheduled-engine speedup: {r:.2f}x   "
+              f"fused vs scheduled: {rf:.2f}x")
     r13 = times[("case1", "scheduled")] / times[("case3", "scheduled")]
     print(f"  case3 vs case1 (scheduled engine):    {r13:.2f}x "
           f"(structured-sparsity reclaim; needs paper-scale H to pay for "

@@ -7,7 +7,6 @@ recurrent-state arch (xlstm smoke — the long_500k serving path).
 """
 import time
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -10,13 +10,11 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
-
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchSpec
-from repro.configs.shapes import SHAPES, ShapeSpec
+from repro.configs.shapes import ShapeSpec
 from repro.core.dropout_plan import DropoutPlan
 from repro.core.lstm import ENGINES
 from repro.models import lstm_lm, seq2seq, ssm, tagger, transformer, xlstm

@@ -9,7 +9,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Optional
 
-from repro.configs.shapes import SHAPES, ShapeSpec
 
 
 @dataclasses.dataclass(frozen=True)

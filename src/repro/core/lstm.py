@@ -11,7 +11,7 @@ time step):
 The cell state c is never dropped (paper §3.2). Both matmuls are
 ``sdrop_matmul`` calls, so FP/BP/WG all run compacted.
 
-Two execution engines share the same numerics (tests assert equivalence):
+Three execution engines share the same numerics (tests assert equivalence):
 
   * ``engine="scheduled"`` (default) — the two-phase engine. Phase A
     (pre-scan): every site's masks for all T steps are sampled at once into
@@ -23,10 +23,19 @@ Two execution engines share the same numerics (tests assert equivalence):
     and no NR matmul inside the scan. Layers run as successive scans
     (cuDNN-style), which is exactly the same recurrence unrolled in a
     different order.
+  * ``engine="fused"`` — same Phase A, but Phase B runs as ONE fused pass
+    per layer (``kernels/lstm_scan.py``): the whole T-step recurrence in a
+    single kernel with U resident across steps, per-step RH keep-block
+    gathers driven by the scalar-prefetched schedule ids table, and the
+    pointwise cell update fused in; a custom_vjp reverse-time kernel makes
+    the backward equally fused. The Pallas kernel is the TPU path; off-TPU
+    the same two-pass structure runs as an XLA masked-dense scan (the
+    Pallas path still validates via interpret mode, just not fast).
   * ``engine="stepwise"`` — the reference path: one scan over time with a
     Python layer loop inside, masks drawn per step via ``ctx.state``.
 
-Time iteration is ``jax.lax.scan`` (compact HLO, O(1) program size in T).
+Time iteration is ``jax.lax.scan`` (compact HLO, O(1) program size in T);
+the fused engine replaces the Phase-B scan with the persistent kernel.
 """
 from __future__ import annotations
 
@@ -38,7 +47,7 @@ import jax.numpy as jnp
 from repro.core import layers as L
 from repro.core.dropout_plan import NULL_CTX, DropoutCtx
 
-ENGINES = ("scheduled", "stepwise")
+ENGINES = ("scheduled", "stepwise", "fused")
 
 
 class LSTMState(NamedTuple):
@@ -162,6 +171,54 @@ def _lstm_stack_scheduled(params, x_seq, state, *, ctx, site, forget_bias,
     return inp, LSTMState(h=jnp.stack(h_fin), c=jnp.stack(c_fin))
 
 
+def _lstm_stack_fused(params, x_seq, state, *, ctx, site, forget_bias,
+                      pointwise_impl):
+    """Fused engine: Phase A as in "scheduled", Phase B as ONE kernel/layer.
+
+    Each layer's whole T-step recurrence — RH matmul (compact via the
+    schedule's keep-block ids) + pointwise update — runs inside a single
+    ``kernels.lstm_scan`` call with U resident across steps and a fused
+    reverse-time backward (custom_vjp). The gate bias is folded into the
+    time-batched Phase-A matmul, so the in-pass step is exactly
+    ``gx_t + rh_t`` + pointwise. The kernel impl follows the RH site's
+    ``spec.impl`` ("pallas" = persistent-scan Pallas kernel, interpret mode
+    off TPU; "xla" = the same fused two-pass structure as lax.scans); when
+    the RH site is inactive, ``pointwise_impl`` selects it instead.
+    """
+    from repro.kernels import ops as _kops
+
+    num_layers = len(params)
+    T, batch, _ = x_seq.shape
+    hidden = state.h.shape[-1]
+
+    inp = x_seq
+    h_fin, c_fin = [], []
+    for l in range(num_layers):
+        nr_sched = ctx.schedule(f"{site}/layer{l}/nr", T, batch,
+                                inp.shape[-1])
+        rh_sched = ctx.schedule(f"{site}/layer{l}/rh", T, batch, hidden)
+        # Phase A: time-batched NR gate matmul, bias folded in.
+        gx = L.dense_sdrop_scheduled(
+            {"w": params[l]["W"], "b": params[l]["b"]}, inp, nr_sched)
+        kw, impl = {}, pointwise_impl
+        if not rh_sched.inactive:
+            impl = rh_sched.spec.impl
+            if rh_sched.structured:
+                kw = dict(keep_blocks=rh_sched.keep_blocks,
+                          block_size=rh_sched.spec.block_size,
+                          scale=rh_sched.scale)
+            else:
+                kw = dict(dense_mask=rh_sched.dense_mask,
+                          scale=rh_sched.scale)
+        ys, (h_l, c_l) = _kops.lstm_scan(
+            gx, params[l]["U"], state.h[l], state.c[l],
+            forget_bias=forget_bias, impl=impl, **kw)
+        h_fin.append(h_l)
+        c_fin.append(c_l)
+        inp = ys
+    return inp, LSTMState(h=jnp.stack(h_fin), c=jnp.stack(c_fin))
+
+
 def lstm_stack(params, x_seq: jax.Array, state: LSTMState, *,
                ctx: Optional[DropoutCtx] = None,
                site: str = "lstm",
@@ -178,12 +235,14 @@ def lstm_stack(params, x_seq: jax.Array, state: LSTMState, *,
 
     ``engine`` selects the execution path (same numerics): "scheduled" =
     the two-phase engine (masks + NR matmuls hoisted out of the scan),
-    "stepwise" = the in-scan reference.
+    "fused" = Phase B as one persistent-scan kernel per layer
+    (kernels/lstm_scan.py), "stepwise" = the in-scan reference.
     """
     ctx = NULL_CTX if ctx is None else ctx
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; expected one of {ENGINES}")
-    run = (_lstm_stack_scheduled if engine == "scheduled"
-           else _lstm_stack_stepwise)
+    run = {"scheduled": _lstm_stack_scheduled,
+           "stepwise": _lstm_stack_stepwise,
+           "fused": _lstm_stack_fused}[engine]
     return run(params, x_seq, state, ctx=ctx, site=site,
                forget_bias=forget_bias, pointwise_impl=pointwise_impl)

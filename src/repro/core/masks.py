@@ -23,8 +23,6 @@ from __future__ import annotations
 
 import enum
 import functools
-from typing import Tuple
-
 import jax
 import jax.numpy as jnp
 

@@ -13,8 +13,8 @@ masks from the resulting ``DropoutCtx``. The ctx owns every PRNG stream
 (site-name hashing, FIXED vs PER_STEP time behaviour) — see
 ``dropout_plan.py`` for the full contract.
 
-Two consumption styles, two engines (core/lstm.py)
---------------------------------------------------
+Two consumption styles, three engines (core/lstm.py)
+----------------------------------------------------
 
 ``ctx.state(site, batch, dim, t=t)`` materializes ONE step's mask — the
 *stepwise* engine draws these inside the ``lax.scan`` body (the reference
@@ -29,9 +29,14 @@ a ``MaskSchedule`` — the *scheduled* engine (default) is two-phase:
       + the pointwise cell update; precomputed gate slices and schedule
       rows arrive as scan xs. No PRNG calls, no NR matmul in the body.
 
+The *fused* engine shares Phase A and replaces the Phase-B scan with one
+``kernels/lstm_scan`` call per layer: the whole T-step recurrence in a
+single fused pass (U resident across steps, compact per-step RH gathers
+off the schedule ids table, pointwise + reverse-time backward fused).
+
 Row ``t`` of a schedule is bit-identical to ``ctx.state(..., t=t)``, so the
 engines compute the same function (tests/test_engine.py asserts it for
-Case I-IV, op-by-op exactly).
+Case I-IV on all three engines, op-by-op exactly for scheduled/stepwise).
 
 Choosing a dropout case (the paper's Fig. 1 taxonomy)
 -----------------------------------------------------

@@ -12,8 +12,6 @@ import queue
 import threading
 from typing import Callable, Iterator, Optional
 
-import numpy as np
-
 
 def host_shard(global_batch: int, host_index: int, host_count: int):
     """-> (local_batch, offset). Global batch is split evenly across hosts."""

@@ -24,7 +24,6 @@ import dataclasses
 from typing import Any, Mapping, Optional, Sequence, Union
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 Axes = Union[str, Sequence[str], None]

@@ -20,8 +20,6 @@ against the pure-jnp oracle (tests/test_flash.py).
 from __future__ import annotations
 
 import functools
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl

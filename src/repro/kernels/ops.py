@@ -6,5 +6,7 @@ On TPU the kernels run compiled; elsewhere they run in interpret mode
 """
 from repro.kernels.gather_matmul import gather_matmul, gather_matmul_stepped
 from repro.kernels.lstm_pointwise import lstm_pointwise
+from repro.kernels.lstm_scan import lstm_scan
 
-__all__ = ["gather_matmul", "gather_matmul_stepped", "lstm_pointwise"]
+__all__ = ["gather_matmul", "gather_matmul_stepped", "lstm_pointwise",
+           "lstm_scan"]

@@ -51,6 +51,39 @@ def gather_matmul_stepped_ref(a, b, keep_blocks, *, block_size,
     return jax.vmap(one)(a, keep_blocks)
 
 
+def lstm_scan_ref(gx, u, h0, c0, *, keep_blocks=None, dense_mask=None,
+                  block_size=1, scale=1.0, forget_bias=0.0):
+    """Oracle for kernels.lstm_scan: plain per-step jnp recurrence.
+
+    gx: (T, B, 4H) precomputed ``x@W + b``; u: (H, 4H); RH dropout given as
+    a (T|1, nk) kept-block ids table or a (T|1, B, H) dense mask (leading 1
+    = FIXED: the one mask reused every step). Compact semantics: the
+    structured path gathers kept columns of h and rows of u per step, like
+    the scheduled engine's in-scan ``sdrop_matmul``. Differentiable via
+    plain autodiff-of-scan (the independent ground truth for the fused
+    custom_vjp).
+    """
+    T = gx.shape[0]
+    h, c = h0, c0
+    hs = []
+    for t in range(T):
+        if keep_blocks is not None:
+            kb_t = keep_blocks[0 if keep_blocks.shape[0] == 1 else t]
+            ids = _unit_ids(kb_t, block_size)
+            r = jnp.dot(jnp.take(h, ids, axis=-1), jnp.take(u, ids, axis=0),
+                        preferred_element_type=jnp.float32) * scale
+        elif dense_mask is not None:
+            m_t = dense_mask[0 if dense_mask.shape[0] == 1 else t]
+            r = jnp.dot(h * m_t * scale, u,
+                        preferred_element_type=jnp.float32)
+        else:
+            r = jnp.dot(h, u, preferred_element_type=jnp.float32)
+        gates = gx[t].astype(jnp.float32) + r
+        h, c = lstm_pointwise_ref(gates, c, forget_bias=forget_bias)
+        hs.append(h)
+    return jnp.stack(hs), (h, c)
+
+
 def lstm_pointwise_ref(gates, c_prev, *, forget_bias=0.0):
     """Oracle for kernels.lstm_pointwise. gates: (B, 4H) order (i,f,g,o)."""
     i, f, g, o = jnp.split(gates, 4, axis=-1)

@@ -27,10 +27,7 @@ import json
 import time
 import traceback
 
-import jax
-
 from repro import configs
-from repro.configs import adapters
 from repro.configs.shapes import SHAPES
 from repro.distributed import sharding as shd
 from repro.launch import hlo_cost
@@ -121,7 +118,7 @@ def main():
                     help="dropout-plan override applied to every lowered "
                          "cell (e.g. case3:0.5:bs128)")
     ap.add_argument("--engine", default="",
-                    choices=["", "scheduled", "stepwise"],
+                    choices=["", "scheduled", "stepwise", "fused"],
                     help="recurrent-engine override applied to every "
                          "lowered cell")
     ap.add_argument("--out", default="results/dryrun.json")

@@ -14,12 +14,9 @@ import dataclasses
 import json
 import time
 
-import jax
-
 from repro import configs
 from repro.configs.shapes import SHAPES
 from repro.distributed import sharding as shd
-from repro.launch import dryrun as dr
 from repro.launch import mesh as mesh_mod
 
 

@@ -7,7 +7,7 @@ from __future__ import annotations
 import json
 import sys
 
-from repro.launch.roofline import HBM_BW, LINK_BW, PEAK_FLOPS
+from repro.launch.roofline import PEAK_FLOPS
 
 ARCH_ORDER = ["xlstm-1.3b", "mixtral-8x22b", "arctic-480b", "qwen3-8b",
               "minitron-8b", "gemma-2b", "qwen1.5-32b", "pixtral-12b",

@@ -9,8 +9,7 @@ decode state.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Optional
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -163,7 +162,7 @@ def build_cell(spec: ArchSpec, cfg, shape: ShapeSpec, mesh: Mesh,
     ``dropout`` is an optional CLI-style plan override ("case3:0.5:bs128")
     applied to the config before lowering, so dry-runs/perf sweeps lower the
     exact plan the trainer would run. ``engine`` likewise overrides the
-    recurrent execution engine ("scheduled" | "stepwise") on the kinds that
+    recurrent execution engine ("scheduled" | "stepwise" | "fused") on the kinds that
     have one.
     """
     if dropout:

@@ -25,7 +25,6 @@ from repro import checkpoint as ckpt_mod
 from repro import configs, optim
 from repro.configs import adapters
 from repro.core.dropout_plan import DropoutPlan
-from repro.configs.shapes import ShapeSpec
 from repro.data import synthetic
 from repro.distributed import sharding as shd
 from repro.launch import mesh as mesh_mod
@@ -89,11 +88,12 @@ def main(argv=None):
                          "[:pallas]' (e.g. case3:0.5:bs128) or 'off'; applies "
                          "the case at the arch's canonical sites")
     ap.add_argument("--engine", default="",
-                    choices=["", "scheduled", "stepwise"],
+                    choices=["", "scheduled", "stepwise", "fused"],
                     help="recurrent-engine override: 'scheduled' (two-phase: "
-                         "masks + NR matmuls hoisted out of the scan) or "
-                         "'stepwise' (in-scan reference); applies to the "
-                         "recurrent archs, no-op elsewhere")
+                         "masks + NR matmuls hoisted out of the scan), "
+                         "'fused' (Phase B as one persistent-scan kernel "
+                         "per layer) or 'stepwise' (in-scan reference); "
+                         "applies to the recurrent archs, no-op elsewhere")
     ap.add_argument("--straggler-factor", type=float, default=3.0)
     args = ap.parse_args(argv)
 

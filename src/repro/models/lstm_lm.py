@@ -37,7 +37,8 @@ class LSTMLMConfig:
     init_scale: float = 0.05
     plan: DropoutPlan = DropoutPlan()
     # recurrent execution engine: "scheduled" (two-phase: masks + NR matmuls
-    # hoisted out of the scan) or "stepwise" (in-scan reference)
+    # hoisted out of the scan), "fused" (Phase B as one persistent-scan
+    # kernel per layer) or "stepwise" (in-scan reference)
     engine: str = "scheduled"
     param_dtype: Any = jnp.float32
     loss_chunks: int = 4

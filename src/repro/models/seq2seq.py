@@ -7,12 +7,14 @@ the PRNG streams independent), and "out" covers the encoder/decoder output
 dropout of the paper's §4.2 modification.
 
 ``cfg.engine`` selects the recurrent execution path. The encoder runs the
-full two-phase engine (lstm_stack ``engine="scheduled"``: NR matmuls and
-mask sampling hoisted out of the scan). The decoder's NR input is
-``[embed_t ; h~_{t-1}]`` — *input feeding* makes it sequentially dependent,
-so its NR matmul cannot leave the scan; the scheduled engine still hoists
-all mask sampling (Phase A schedules threaded through as scan xs — no PRNG
-calls in the decode scan body).
+full engine (lstm_stack ``engine="scheduled"`` two-phase, or ``"fused"`` —
+the whole Phase-B recurrence in one persistent-scan kernel per layer). The
+decoder's NR input is ``[embed_t ; h~_{t-1}]`` — *input feeding* makes it
+sequentially dependent, so its NR matmul cannot leave the scan (and the
+attention inside the step keeps the decode loop out of the fused kernel);
+the scheduled and fused engines still hoist all mask sampling (Phase A
+schedules threaded through as scan xs — no PRNG calls in the decode scan
+body).
 """
 from __future__ import annotations
 
@@ -91,7 +93,9 @@ def decode_train(params, tgt_in, enc_out, enc_state, cfg: NMTConfig, *,
     nl = cfg.num_layers
     in_dims = [cfg.embed + H] + [H] * (nl - 1)
 
-    scheduled = cfg.engine == "scheduled"
+    # fused hoists mask sampling exactly like scheduled here — the decode
+    # loop itself stays a lax.scan (input feeding + attention in the body).
+    scheduled = cfg.engine != "stepwise"
     if scheduled:
         # Phase A: all T steps' masks for every decoder site, sampled
         # pre-scan. PER_STEP rows ride through the scan as xs, FIXED masks

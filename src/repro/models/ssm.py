@@ -18,7 +18,7 @@ global-attention design (arXiv:2411.15242).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -23,7 +23,6 @@ Params are ``distributed.sharding.Param``-tagged with logical axes; use
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
 from typing import Any, Optional
 

@@ -20,8 +20,7 @@ stacked-weight scans per group for O(1) HLO in depth.
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -55,7 +54,11 @@ class XLSTMConfig:
     # recurrent engine for the sLSTM time scan: "scheduled" samples the RH
     # mask schedule pre-scan (rows threaded as scan xs — no in-scan PRNG);
     # "stepwise" draws ctx.state per step. The NR projections are already
-    # time-batched outside the scan in both engines.
+    # time-batched outside the scan in every engine. "fused" is accepted
+    # for CLI/benchmark parity but runs the scheduled path: the sLSTM cell
+    # (exponential gating, normalizer/stabilizer state, per-head
+    # block-diagonal R) is not the kernels/lstm_scan.py recurrence — a
+    # fused sLSTM kernel would be its own kernel.
     engine: str = "scheduled"
     # §Perf (EXPERIMENTS.md xlstm iter 3): keep the sLSTM h carry replicated
     # so the per-step RH compaction gather stays local. Off by default =
@@ -395,7 +398,7 @@ def slstm_block_apply(pl, x, cfg: XLSTMConfig, nr_state=None, ctx=None,
     rh_active = (ctx is not None and not ctx.deterministic
                  and ctx.spec(rh_site).active)
     rh_sched, rh_xs, rh_const = None, None, None
-    if rh_active and cfg.engine == "scheduled":
+    if rh_active and cfg.engine != "stepwise":
         # Phase A: the whole RH mask schedule, sampled pre-scan; the mask
         # is shared across heads ((B, 1, dh) broadcasts in slstm_step).
         # PER_STEP rows thread as scan xs; FIXED masks are a scan constant.

@@ -13,8 +13,6 @@ axis is >2. For the 2-pod production mesh, quantize -> ppermute(exchange)
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

@@ -7,8 +7,7 @@ mechanical. Moments are kept in fp32 regardless of param dtype (bf16 params
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp

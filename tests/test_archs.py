@@ -7,9 +7,7 @@ import pytest
 
 from repro import configs, optim
 from repro.configs import adapters
-from repro.configs.shapes import ShapeSpec
 from repro.distributed import sharding as shd
-from repro.launch import steps as steps_mod
 
 KEY = jax.random.PRNGKey(0)
 B, S = 2, 16

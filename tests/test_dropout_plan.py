@@ -10,7 +10,6 @@ The invariants the unified API guarantees:
     reference;
   * plans round-trip through to_dict/from_dict and the CLI parser.
 """
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -18,7 +17,7 @@ import numpy as np
 import pytest
 
 from repro.core import masks
-from repro.core.dropout_plan import DropoutCtx, DropoutPlan, fit_block
+from repro.core.dropout_plan import DropoutPlan, fit_block
 from repro.core.sdrop import DropoutSpec
 
 KEY = jax.random.PRNGKey(7)

@@ -1,21 +1,29 @@
-"""Cross-engine equivalence: scheduled == stepwise on every dropout case.
+"""Cross-engine equivalence: scheduled == fused == stepwise on every case.
 
 The scheduled engine restructures execution (masks pre-sampled, NR matmuls
-time-batched outside the scan, per-layer scans) but must compute the same
-function. Contract, asserted here:
+time-batched outside the scan, per-layer scans) and the fused engine goes
+further (the whole Phase-B recurrence as one kernels/lstm_scan call per
+layer, custom_vjp backward) — but all three must compute the same function.
+Contract, asserted here:
 
   * mask schedules are BIT-identical to the stepwise per-step derivation
-    (same site keys, same fold order) — for all four cases;
-  * op-by-op (``jax.disable_jit``) the two engines are bit-identical for
-    rate 0 AND for every active case — the graphs are mathematically
-    identical, so eager dispatch (each op compiled standalone) gives
-    exactly equal floats;
-  * jitted, outputs/grads agree to fp32 tolerance (XLA fuses the two graph
-    shapes differently, so transcendental codegen may differ in the last
-    bits — that is an XLA CPU property, not an engine property);
+    (same site keys, same fold order) — for all four cases; the fused
+    engine consumes the SAME ``ctx.schedule`` tables as scheduled, so this
+    covers both restructured engines;
+  * op-by-op (``jax.disable_jit``) scheduled and stepwise are bit-identical
+    for rate 0 AND for every active case — the graphs are mathematically
+    identical, so eager dispatch gives exactly equal floats (the fused
+    engine reassociates the gate sum — bias folded into Phase A — so it is
+    held to fp32 allclose, not bitwise);
+  * jitted, outputs/grads agree across all three engines to fp32 tolerance
+    (XLA fuses the graph shapes differently, so transcendental codegen may
+    differ in the last bits — that is an XLA CPU property, not an engine
+    property); fused grads flow through the hand-written custom_vjp;
   * FIXED time-patterns materialize ONE mask row, broadcast over steps;
   * the pallas ``impl`` (interpret mode on CPU) agrees across engines;
-  * all four model families produce identical losses under either engine.
+  * all four model families produce identical losses under every engine,
+    and a jitted full train step (value_and_grad) runs finite on each arch
+    under the fused engine.
 """
 import jax
 import jax.numpy as jnp
@@ -140,6 +148,25 @@ class TestStackEquivalence:
                                    err_msg=case)
         np.testing.assert_allclose(s1.c, s2.c, rtol=2e-5, atol=2e-5)
 
+    @pytest.mark.parametrize("case", CASES)
+    def test_fused_allclose_jitted(self, case):
+        """Fused engine == stepwise/scheduled on every case (fwd + state)."""
+        plan = DropoutPlan.case(case, 0.5, block_size=_bs(case),
+                                sites=("nr", "rh"))
+        ctx = plan.bind(jax.random.PRNGKey(2), 5)
+        y1, s1 = self._run(ctx, "stepwise")
+        y3, s3 = self._run(ctx, "fused")
+        np.testing.assert_allclose(y1, y3, rtol=2e-5, atol=2e-5,
+                                   err_msg=case)
+        np.testing.assert_allclose(s1.c, s3.c, rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(s1.h, s3.h, rtol=2e-5, atol=2e-5)
+
+    def test_fused_rate0(self):
+        y1, s1 = self._run(None, "stepwise")
+        y3, s3 = self._run(None, "fused")
+        np.testing.assert_allclose(y1, y3, rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(s1.c, s3.c, rtol=2e-5, atol=2e-5)
+
     def test_grads_match(self):
         params, x, state = _stack_setup()
         plan = DropoutPlan.case("case3", 0.5, block_size=4,
@@ -157,6 +184,28 @@ class TestStackEquivalence:
                 np.testing.assert_allclose(g1[l][k], g2[l][k], rtol=2e-4,
                                            atol=2e-4, err_msg=f"{l}/{k}")
 
+    @pytest.mark.parametrize("case", CASES)
+    def test_fused_grads_match(self, case):
+        """Grads through the fused custom_vjp == stepwise autodiff, all
+        cases (W through Phase A, U/b through the reverse-time kernel, and
+        the final state so dh_T/dc_T carry-in paths are exercised)."""
+        params, x, state = _stack_setup()
+        plan = DropoutPlan.case(case, 0.5, block_size=_bs(case),
+                                sites=("nr", "rh"))
+        ctx = plan.bind(jax.random.PRNGKey(2), 5)
+
+        def loss(p, engine):
+            ys, st = lstm_mod.lstm_stack(p, x, state, ctx=ctx, engine=engine)
+            return (ys ** 2).sum() + (st.h ** 2).sum() + (st.c ** 2).sum()
+
+        g1 = jax.grad(lambda p: loss(p, "stepwise"))(params)
+        g3 = jax.grad(lambda p: loss(p, "fused"))(params)
+        for l in range(len(params)):
+            for k in ("W", "U", "b"):
+                np.testing.assert_allclose(
+                    g1[l][k], g3[l][k], rtol=2e-4, atol=2e-4,
+                    err_msg=f"{case} {l}/{k}")
+
     def test_pallas_impl_equivalent(self):
         """pallas sdrop impl (interpret=True on CPU) agrees across engines."""
         plan = DropoutPlan.case("case3", 0.5, block_size=8, impl="pallas",
@@ -165,6 +214,42 @@ class TestStackEquivalence:
         y1, _ = self._run(ctx, "stepwise")
         y2, _ = self._run(ctx, "scheduled")
         np.testing.assert_allclose(y1, y2, rtol=2e-5, atol=2e-5)
+
+    @pytest.mark.parametrize("case", ("case1", "case3"))
+    def test_fused_pallas_impl_equivalent(self, case):
+        """impl="pallas" routes fused through the persistent-scan Pallas
+        kernel (interpret mode on CPU) — fwd and grads agree with xla."""
+        params, x, state = _stack_setup()
+        bs = _bs(case) * 2
+        ctxs = {impl: DropoutPlan.case(case, 0.5, block_size=bs, impl=impl,
+                                       sites=("nr", "rh"))
+                .bind(jax.random.PRNGKey(3), 1) for impl in ("pallas", "xla")}
+        y_p, _ = self._run(ctxs["pallas"], "fused")    # persistent kernel
+        y_x, _ = self._run(ctxs["xla"], "fused")
+        np.testing.assert_allclose(y_p, y_x, rtol=2e-5, atol=2e-5)
+
+        def loss(p, c):
+            ys, _ = lstm_mod.lstm_stack(p, x, state, ctx=c, engine="fused")
+            return (ys ** 2).sum()
+
+        gp = jax.grad(lambda p: loss(p, ctxs["pallas"]))(params)
+        gx = jax.grad(lambda p: loss(p, ctxs["xla"]))(params)
+        for l in range(len(params)):
+            for k in ("W", "U", "b"):
+                np.testing.assert_allclose(gp[l][k], gx[l][k], rtol=2e-4,
+                                           atol=2e-4, err_msg=f"{l}/{k}")
+
+    def test_fused_fixed_one_row(self):
+        """FIXED (case4) schedules reach the fused kernel as ONE-row tables
+        and still match a stepwise run that re-derives the mask per step."""
+        plan = DropoutPlan.case("case4", 0.5, block_size=4,
+                                sites=("nr", "rh"))
+        ctx = plan.bind(jax.random.PRNGKey(7), 3)
+        sched = ctx.schedule("lstm/layer0/rh", 9, 4, 32)
+        assert sched.keep_blocks.shape[0] == 1
+        y1, _ = self._run(ctx, "stepwise")
+        y3, _ = self._run(ctx, "fused")
+        np.testing.assert_allclose(y1, y3, rtol=2e-5, atol=2e-5)
 
     def test_unknown_engine_raises(self):
         params, x, state = _stack_setup()
@@ -225,7 +310,7 @@ class TestScheduledMatmul:
 
 
 class TestModelEquivalence:
-    """Same loss from both engines on every recurrent model family."""
+    """Same loss from all three engines on every recurrent model family."""
 
     def test_lstm_lm(self):
         plan = DropoutPlan.case("case3", 0.5, block_size=4,
@@ -233,13 +318,14 @@ class TestModelEquivalence:
         batch = {"tokens": jax.random.randint(KEY, (4, 12), 0, 100),
                  "labels": jax.random.randint(KEY, (4, 12), 0, 100)}
         losses = []
-        for e in ("stepwise", "scheduled"):
+        for e in ("stepwise", "scheduled", "fused"):
             cfg = lstm_lm.LSTMLMConfig(vocab=100, embed=32, hidden=32,
                                        num_layers=2, plan=plan, engine=e)
             p = lstm_lm.init_params(KEY, cfg)
             losses.append(float(lstm_lm.loss_fn(
                 p, batch, cfg, drop_key=jax.random.PRNGKey(1), step=2)))
-        np.testing.assert_allclose(*losses, rtol=1e-5)
+        np.testing.assert_allclose(losses[1:], [losses[0]] * 2,
+                                   rtol=1e-5)
 
     def test_nmt(self):
         plan = DropoutPlan.case("case3", 0.3, block_size=4,
@@ -247,14 +333,15 @@ class TestModelEquivalence:
         b = jax.tree.map(jnp.asarray,
                          synthetic.nmt_pairs(4, 60, 60, max_len=10, seed=3))
         losses = []
-        for e in ("stepwise", "scheduled"):
+        for e in ("stepwise", "scheduled", "fused"):
             cfg = seq2seq.NMTConfig(src_vocab=60, tgt_vocab=60, embed=24,
                                     hidden=24, num_layers=2, plan=plan,
                                     engine=e)
             p = seq2seq.init_params(KEY, cfg)
             losses.append(float(seq2seq.loss_fn(
                 p, b, cfg, drop_key=jax.random.PRNGKey(4), step=1)))
-        np.testing.assert_allclose(*losses, rtol=1e-5)
+        np.testing.assert_allclose(losses[1:], [losses[0]] * 2,
+                                   rtol=1e-5)
 
     def test_tagger(self):
         plan = DropoutPlan.case("case3", 0.5, block_size=4,
@@ -262,21 +349,22 @@ class TestModelEquivalence:
         b = jax.tree.map(jnp.asarray, synthetic.ner_examples(
             4, 80, 30, 5, seq=10, seed=5))
         losses = []
-        for e in ("stepwise", "scheduled"):
+        for e in ("stepwise", "scheduled", "fused"):
             cfg = tagger.TaggerConfig(vocab=80, char_vocab=30, hidden=32,
                                       num_tags=5, word_embed=20,
                                       char_filters=12, plan=plan, engine=e)
             p = tagger.init_params(KEY, cfg)
             losses.append(float(tagger.loss_fn(
                 p, b, cfg, drop_key=jax.random.PRNGKey(6), step=1)))
-        np.testing.assert_allclose(*losses, rtol=1e-5)
+        np.testing.assert_allclose(losses[1:], [losses[0]] * 2,
+                                   rtol=1e-5)
 
     def test_xlstm(self):
         plan = DropoutPlan.case("case3", 0.5, block_size=4,
                                 sites=("nr", "rh"))
         tok = jax.random.randint(KEY, (2, 16), 0, 50)
         losses = []
-        for e in ("stepwise", "scheduled"):
+        for e in ("stepwise", "scheduled", "fused"):
             cfg = xlstm.XLSTMConfig(num_layers=4, d_model=32, n_heads=4,
                                     vocab=50, chunk=4, slstm_every=4,
                                     plan=plan, engine=e)
@@ -284,7 +372,68 @@ class TestModelEquivalence:
             losses.append(float(xlstm.loss_fn(
                 p, {"tokens": tok, "labels": tok}, cfg,
                 drop_key=jax.random.PRNGKey(8), step=0)))
-        np.testing.assert_allclose(*losses, rtol=1e-5)
+        np.testing.assert_allclose(losses[1:], [losses[0]] * 2,
+                                   rtol=1e-5)
+
+
+class TestFusedTrainStep:
+    """Jitted full train step (value_and_grad through the fused custom_vjp)
+    runs and yields finite loss/grads on every recurrent arch."""
+
+    def _smoke(self, kind, cfg, batch):
+        from repro.configs import adapters
+        from repro.distributed.sharding import strip as _strip
+
+        lfn = adapters.loss_fn(kind)
+        params = _strip(adapters.init_params(kind, KEY, cfg))
+
+        @jax.jit
+        def step(p, b):
+            return jax.value_and_grad(
+                lambda q: lfn(q, b, cfg, drop_key=jax.random.PRNGKey(5),
+                              step=1))(p)
+
+        loss, grads = step(params, jax.tree.map(jnp.asarray, batch))
+        assert np.isfinite(float(loss)), kind
+        leaves = jax.tree.leaves(grads)
+        assert leaves and all(np.all(np.isfinite(np.asarray(g)))
+                              for g in leaves), kind
+
+    def test_lstm_lm(self):
+        plan = DropoutPlan.case("case3", 0.5, block_size=4,
+                                sites=("embed", "nr", "rh", "out"))
+        cfg = lstm_lm.LSTMLMConfig(vocab=100, embed=32, hidden=32,
+                                   num_layers=2, plan=plan, engine="fused")
+        self._smoke("lstm_lm", cfg,
+                    {"tokens": jax.random.randint(KEY, (4, 12), 0, 100),
+                     "labels": jax.random.randint(KEY, (4, 12), 0, 100)})
+
+    def test_nmt(self):
+        plan = DropoutPlan.case("case3", 0.3, block_size=4,
+                                sites=("nr", "rh", "out"))
+        cfg = seq2seq.NMTConfig(src_vocab=60, tgt_vocab=60, embed=24,
+                                hidden=24, num_layers=2, plan=plan,
+                                engine="fused")
+        self._smoke("nmt", cfg, synthetic.nmt_pairs(4, 60, 60, max_len=10,
+                                                    seed=3))
+
+    def test_tagger(self):
+        plan = DropoutPlan.case("case3", 0.5, block_size=4,
+                                sites=("inp", "rh"))
+        cfg = tagger.TaggerConfig(vocab=80, char_vocab=30, hidden=32,
+                                  num_tags=5, word_embed=20,
+                                  char_filters=12, plan=plan, engine="fused")
+        self._smoke("tagger", cfg, synthetic.ner_examples(4, 80, 30, 5,
+                                                          seq=10, seed=5))
+
+    def test_xlstm(self):
+        plan = DropoutPlan.case("case3", 0.5, block_size=4,
+                                sites=("nr", "rh"))
+        cfg = xlstm.XLSTMConfig(num_layers=4, d_model=32, n_heads=4,
+                                vocab=50, chunk=4, slstm_every=4, plan=plan,
+                                engine="fused")
+        tok = jax.random.randint(KEY, (2, 16), 0, 50)
+        self._smoke("xlstm", cfg, {"tokens": tok, "labels": tok})
 
 
 @pytest.mark.parametrize("hyp", [None])

@@ -149,6 +149,128 @@ class TestGatherMatmulStepped:
         assert not np.allclose(np.asarray(y), np.asarray(y0))
 
 
+class TestLSTMScan:
+    """Fused persistent-scan recurrence vs the per-step jnp oracle.
+
+    Sweeps RH mode (structured / random-dense / off) x time pattern
+    (per-step / FIXED one-row) x impl (pallas interpret / xla), forward and
+    gradients through the custom_vjp (d gx/U/h0/c0 vs autodiff-of-oracle).
+    """
+
+    def _setup(self, T, B, H, dtype=jnp.float32):
+        gx = mk((T, B, 4 * H), dtype, 21) * 0.3
+        u = mk((H, 4 * H), dtype, 22) * 0.1
+        h0 = mk((B, H), dtype, 23) * 0.5
+        c0 = mk((B, H), dtype, 24) * 0.5
+        return gx, u, h0, c0
+
+    def _kb(self, T, H, bs, rate, seed=0):
+        return jnp.stack([masks.sample_keep_blocks(
+            jax.random.fold_in(KEY, seed + t), H, rate, bs)
+            for t in range(T)])
+
+    def _check(self, kw, T=5, B=3, H=16, fb=0.0, dtype=jnp.float32,
+               grads=True):
+        gx, u, h0, c0 = self._setup(T, B, H, dtype)
+        ys_ref, (hf_ref, cf_ref) = ref.lstm_scan_ref(
+            gx, u, h0, c0, forget_bias=fb, **kw)
+        for impl in ("xla", "pallas"):
+            ys, (hf, cf) = ops.lstm_scan(gx, u, h0, c0, forget_bias=fb,
+                                         impl=impl, **kw)
+            np.testing.assert_allclose(
+                np.asarray(ys, np.float32), np.asarray(ys_ref, np.float32),
+                err_msg=f"{impl} ys", **TOL[dtype])
+            np.testing.assert_allclose(
+                np.asarray(cf, np.float32), np.asarray(cf_ref, np.float32),
+                err_msg=f"{impl} c_fin", **TOL[dtype])
+            if not grads:
+                continue
+
+            def loss(gx, u, h0, c0, impl=impl):
+                ys, (hf, cf) = ops.lstm_scan(gx, u, h0, c0, forget_bias=fb,
+                                             impl=impl, **kw)
+                return (ys ** 2).sum() + (hf * cf).sum()
+
+            def loss_ref(gx, u, h0, c0):
+                ys, (hf, cf) = ref.lstm_scan_ref(gx, u, h0, c0,
+                                                 forget_bias=fb, **kw)
+                return (ys ** 2).sum() + (hf * cf).sum()
+
+            g = jax.grad(loss, argnums=(0, 1, 2, 3))(gx, u, h0, c0)
+            gr = jax.grad(loss_ref, argnums=(0, 1, 2, 3))(gx, u, h0, c0)
+            for a, b, nm in zip(g, gr, ("gx", "u", "h0", "c0")):
+                np.testing.assert_allclose(
+                    np.asarray(a, np.float32), np.asarray(b, np.float32),
+                    rtol=2e-4, atol=2e-4, err_msg=f"{impl} d{nm}")
+
+    @pytest.mark.parametrize("T,B,H,bs,rate", [
+        (5, 3, 16, 4, 0.5),
+        (7, 2, 32, 8, 0.25),
+        (3, 4, 24, 1, 0.5),            # paper-faithful unit columns
+        (4, 1, 16, 4, 0.65),           # B=1 decode-like
+    ])
+    def test_structured(self, T, B, H, bs, rate):
+        kb = self._kb(T, H, bs, rate)
+        self._check(dict(keep_blocks=kb, block_size=bs,
+                         scale=masks.inverted_scale(rate, H, bs)),
+                    T=T, B=B, H=H)
+
+    def test_structured_fixed_one_row(self):
+        """A (1, nk) FIXED table == the same row broadcast to all T steps."""
+        T, B, H, bs = 6, 3, 16, 4
+        kb = self._kb(T, H, bs, 0.5)
+        kw = dict(block_size=bs, scale=2.0)
+        for impl in ("xla", "pallas"):
+            y1, _ = ops.lstm_scan(*self._setup(T, B, H), impl=impl,
+                                  keep_blocks=kb[:1], **kw)
+            y2, _ = ops.lstm_scan(*self._setup(T, B, H), impl=impl,
+                                  keep_blocks=jnp.broadcast_to(
+                                      kb[:1], (T, kb.shape[1])), **kw)
+            np.testing.assert_allclose(y1, y2, rtol=1e-6, atol=1e-6,
+                                       err_msg=impl)
+        self._check(dict(keep_blocks=kb[:1], block_size=bs, scale=2.0),
+                    T=T, B=B, H=H)
+
+    @pytest.mark.parametrize("fixed", [False, True])
+    def test_dense_mask(self, fixed):
+        T, B, H = 5, 3, 16
+        dm = (jax.random.uniform(jax.random.fold_in(KEY, 30),
+                                 (1 if fixed else T, B, H)) > 0.5
+              ).astype(jnp.float32)
+        self._check(dict(dense_mask=dm, scale=2.0), T=T, B=B, H=H)
+
+    @pytest.mark.parametrize("fb", [0.0, 1.0])
+    def test_no_dropout(self, fb):
+        self._check({}, fb=fb)
+
+    def test_bf16(self):
+        kb = self._kb(4, 16, 4, 0.5)
+        self._check(dict(keep_blocks=kb, block_size=4, scale=2.0),
+                    T=4, B=2, H=16, dtype=jnp.bfloat16, grads=False)
+
+    def test_per_step_masks_differ(self):
+        """Each step really gathers its own kept blocks (not step 0's)."""
+        T, B, H, bs = 4, 3, 32, 8
+        gx, u, h0, c0 = self._setup(T, B, H)
+        kb = self._kb(T, H, bs, 0.5, seed=100)
+        kw = dict(block_size=bs, scale=2.0)
+        for impl in ("xla", "pallas"):
+            y, _ = ops.lstm_scan(gx, u, h0, c0, impl=impl,
+                                 keep_blocks=kb, **kw)
+            y0, _ = ops.lstm_scan(gx, u, h0, c0, impl=impl,
+                                  keep_blocks=jnp.broadcast_to(
+                                      kb[:1], kb.shape), **kw)
+            assert not np.allclose(np.asarray(y), np.asarray(y0)), impl
+
+    def test_both_masks_raises(self):
+        gx, u, h0, c0 = self._setup(3, 2, 16)
+        kb = self._kb(3, 16, 4, 0.5)
+        dm = jnp.ones((3, 2, 16))
+        with pytest.raises(ValueError):
+            ops.lstm_scan(gx, u, h0, c0, keep_blocks=kb, dense_mask=dm,
+                          block_size=4)
+
+
 class TestLSTMPointwise:
     @pytest.mark.parametrize("B,H", [(4, 32), (8, 650), (128, 512), (3, 17)])
     @pytest.mark.parametrize("fb", [0.0, 1.0])

@@ -4,7 +4,6 @@ that make the serving path trustworthy)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.distributed.sharding import strip
 from repro.models import ssm as M

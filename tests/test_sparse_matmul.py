@@ -11,7 +11,6 @@ in the forward AND in every gradient — while internally running compacted
 import functools
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 pytest.importorskip("hypothesis")  # property tests need hypothesis
