@@ -196,8 +196,10 @@ def prefill_fn(spec: ArchSpec):
         return f
     if spec.kind == "xlstm":
         def f(params, batch, cfg, state, rules=None):
-            return xlstm.forward(params, batch["tokens"], cfg,
-                                 rules=rules), state
+            # real recurrent prefill: fills the mLSTM (C, n, m) + conv and
+            # sLSTM (h, c, n, m) serving state from the prompt, so decode
+            # continues where the prompt left off (stabilizer included).
+            return xlstm.prefill(params, batch["tokens"], cfg, rules=rules)
         return f
     if spec.kind == "ssm":
         def f(params, batch, cfg, state, rules=None):

@@ -1,0 +1,595 @@
+"""Cell-parametric fused persistent-scan recurrence (the engine="fused" core).
+
+PR 3 built the fused persistent-scan kernel for the vanilla LSTM cell: the
+entire T-step Phase-B recurrence in ONE ``pallas_call`` (time axis = kernel
+grid, carried state in VMEM scratch, recurrent weight resident via a
+constant BlockSpec index_map, per-step RH keep-block gathers unrolled off
+the scalar-prefetched ``(T, nk)`` MaskSchedule ids table) paired with a
+``custom_vjp`` reverse-time kernel, so forward AND backward recurrent
+matmuls run at (1-p) FLOPs. That machinery is cell-agnostic — only the
+per-step pointwise update (gate nonlinearities + state transition) and the
+set of carried states are LSTM-specific.
+
+This module factors the split. A ``CellSpec`` supplies the cell:
+
+  * ``num_states`` — carried cell states besides ``h`` (LSTM: 1, the cell
+    state c; sLSTM: 3, the (c, n, m) cell/normalizer/stabilizer triple);
+  * ``pointwise_fwd(gates, states) -> (h_new, states_new)`` — f32 gate
+    nonlinearities + state update from pre-activation gates;
+  * ``pointwise_bwd(gates, states_prev, states_new, dh, dstates) ->
+    (dgates, dstates_prev)`` — its hand-derived reverse, from the stored
+    residuals (the forward's pre-activation gates and state sequences).
+
+Everything else — the time-as-grid pallas forward/backward kernels, the
+f32 VMEM dU accumulation flushed once, the XLA two-pass ``lax.scan`` impl
+with the FIXED-schedule compact-dU optimization, and the ``custom_vjp``
+wiring — lives here once and is shared by every cell
+(``kernels/lstm_scan.py`` and ``kernels/slstm_scan.py`` instantiate it).
+
+Shapes are head-parametric to cover block-diagonal recurrences: the hidden
+state is ``(B, H, dh)`` (H recurrence blocks a.k.a. heads, dh units each),
+the recurrent weight ``u`` is ``(H, dh, G)`` with ``G`` the per-head gate
+width (4*dh for both cells), and the precomputed gate inputs ``gx`` are
+``(T, B, H, G)``. A dense full recurrence is the H=1 case (the LSTM);
+xLSTM's sLSTM uses its per-head block-diagonal R directly. The RH mask is
+over ``dh`` and shared across heads (the xlstm convention — compacted
+matmul shapes stay static): ``keep_blocks`` is a ``(T|1, nk)`` ids table
+of dh-blocks, ``dense_mask`` is ``(T|1, B, 1|H, dh)``. A leading 1 row is
+a FIXED time pattern (one mask reused every step).
+
+The pallas path targets TPU and auto-falls back to interpret mode off TPU
+(correct, not fast); ``impl="xla"`` is the CPU production path. VMEM
+budget and tile-alignment notes from PR 3 carry over per head: u
+(H, dh, G) must fit on-core beside the (B, H, ·) working set, and on real
+TPU the gathered ``block_size`` wants lane alignment (128) — interpret
+mode validates any size.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+@dataclasses.dataclass(frozen=True)
+class CellSpec:
+    """One recurrent cell's pointwise math (see module docstring).
+
+    Instances must be module-level constants (or lru_cached factories) so
+    jit/custom_vjp caching keys stay stable across calls.
+    """
+    name: str
+    num_states: int
+    pointwise_fwd: Callable     # (gates, states) -> (h_new, states_new)
+    pointwise_bwd: Callable     # (gates, st_prev, st_new, dh, dst)
+                                # -> (dgates, dst_prev)
+
+
+def _float0_like(x):
+    return np.zeros(x.shape, dtype=jax.dtypes.float0)
+
+
+def _rh_mode(kb, mask):
+    if kb is not None:
+        return "structured"
+    if mask is not None:
+        return "dense"
+    return "off"
+
+
+def _is_fixed(mode, kb, mask):
+    return mode != "off" and (kb if mode == "structured" else mask).shape[0] == 1
+
+
+def _dummy_ids():
+    return jnp.zeros((1, 1), jnp.int32)
+
+
+def _unit_ids_table(kb, block_size):
+    """(rows, nk) kept-block ids -> (rows, nk*bs) unit ids."""
+    if block_size == 1:
+        return kb
+    offs = jnp.arange(block_size, dtype=kb.dtype)
+    return (kb[..., None] * block_size + offs).reshape(kb.shape[0], -1)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernels. Grid = (T,): one grid step per time step, carry in scratch.
+# Variadic refs (the cell's state count is a parameter) are unpacked by
+# position: [scalar ids | inputs | outputs | scratch].
+# ---------------------------------------------------------------------------
+
+
+def _recurrent_fwd(gates, h_prev, u_ref, ids_ref, m_ref, t, *,
+                   heads, nk, block_size, scale, mode, fixed):
+    """Add the per-head recurrent matmul h_{t-1} @ U into ``gates``."""
+    bs = block_size
+    out = []
+    if mode == "structured":
+        for hd in range(heads):
+            hh = h_prev[:, hd]
+            acc = jnp.zeros_like(gates[:, hd])
+            for k in range(nk):                 # static unroll: exact-k masks
+                bid = ids_ref[0 if fixed else t, k]
+                hb = jax.lax.dynamic_slice(hh, (0, bid * bs),
+                                           (hh.shape[0], bs))
+                ub = u_ref[hd, pl.ds(bid * bs, bs), :].astype(jnp.float32)
+                acc += jnp.dot(hb, ub, preferred_element_type=jnp.float32)
+            out.append(gates[:, hd] + acc * scale)
+    elif mode == "dense":
+        hm = h_prev * m_ref[0].astype(jnp.float32) * scale
+        for hd in range(heads):
+            out.append(gates[:, hd] + jnp.dot(
+                hm[:, hd], u_ref[hd].astype(jnp.float32),
+                preferred_element_type=jnp.float32))
+    else:
+        for hd in range(heads):
+            out.append(gates[:, hd] + jnp.dot(
+                h_prev[:, hd], u_ref[hd].astype(jnp.float32),
+                preferred_element_type=jnp.float32))
+    return jnp.stack(out, axis=1)
+
+
+def _fwd_kernel(*args, cell: CellSpec, heads: int, nk: int, block_size: int,
+                scale: float, mode: str, fixed: bool):
+    ns = cell.num_states
+    ids_ref = args[0]
+    gx_ref, u_ref, h0_ref = args[1:4]
+    st0_refs = args[4:4 + ns]
+    m_ref = args[4 + ns]
+    hs_ref = args[5 + ns]
+    gates_ref = args[6 + ns]
+    stseq_refs = args[7 + ns:7 + 2 * ns]
+    h_s = args[7 + 2 * ns]
+    st_s = args[8 + 2 * ns:8 + 3 * ns]
+
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        h_s[...] = h0_ref[...].astype(jnp.float32)
+        for s, s0 in zip(st_s, st0_refs):
+            s[...] = s0[...].astype(jnp.float32)
+
+    h_prev = h_s[...]
+    gates = _recurrent_fwd(gx_ref[0].astype(jnp.float32), h_prev, u_ref,
+                           ids_ref, m_ref, t, heads=heads, nk=nk,
+                           block_size=block_size, scale=scale, mode=mode,
+                           fixed=fixed)
+    st_prev = tuple(s[...] for s in st_s)
+    h_new, st_new = cell.pointwise_fwd(gates, st_prev)
+    h_s[...] = h_new
+    for s, v in zip(st_s, st_new):
+        s[...] = v
+    hs_ref[0] = h_new.astype(hs_ref.dtype)
+    gates_ref[0] = gates.astype(gates_ref.dtype)
+    for r, v in zip(stseq_refs, st_new):
+        r[0] = v.astype(r.dtype)
+
+
+def _bwd_kernel(*args, cell: CellSpec, heads: int, n_steps: int, nk: int,
+                block_size: int, scale: float, mode: str, fixed: bool):
+    """Reverse-time step: grid step t processes time step r = T-1-t.
+
+    All time-indexed refs arrive through r-indexed BlockSpecs; dU accumulates
+    in f32 scratch across the whole grid and flushes on the last step.
+    """
+    ns = cell.num_states
+    ids_ref = args[0]
+    dy_ref, gates_ref = args[1:3]
+    stn_refs = args[3:3 + ns]                  # states at t   (rev-indexed)
+    stp_refs = args[3 + ns:3 + 2 * ns]         # states at t-1 (rev-indexed)
+    hp_ref = args[3 + 2 * ns]
+    u_ref = args[4 + 2 * ns]
+    m_ref = args[5 + 2 * ns]
+    dstT_refs = args[6 + 2 * ns:6 + 3 * ns]
+    dgx_ref = args[6 + 3 * ns]
+    du_ref = args[7 + 3 * ns]
+    dh0_ref = args[8 + 3 * ns]
+    dst0_refs = args[9 + 3 * ns:9 + 4 * ns]
+    dh_s = args[9 + 4 * ns]
+    dst_s = args[10 + 4 * ns:10 + 5 * ns]
+    du_s = args[10 + 5 * ns]
+
+    t = pl.program_id(0)
+    r = n_steps - 1 - t                      # the time step being processed
+
+    @pl.when(t == 0)
+    def _init():
+        dh_s[...] = jnp.zeros_like(dh_s)
+        for s, d in zip(dst_s, dstT_refs):
+            s[...] = d[...].astype(jnp.float32)
+        du_s[...] = jnp.zeros_like(du_s)
+
+    dh = dy_ref[0].astype(jnp.float32) + dh_s[...]
+    gates = gates_ref[0].astype(jnp.float32)
+    st_new = tuple(s[0].astype(jnp.float32) for s in stn_refs)
+    st_prev = tuple(s[0].astype(jnp.float32) for s in stp_refs)
+    h_prev = hp_ref[0].astype(jnp.float32)
+    dgates, dst_prev = cell.pointwise_bwd(gates, st_prev, st_new, dh,
+                                          tuple(s[...] for s in dst_s))
+    dgx_ref[0] = dgates.astype(dgx_ref.dtype)
+
+    B = dh.shape[0]
+    bs = block_size
+    dhp = []
+    if mode == "structured":
+        for hd in range(heads):
+            dgh = dgates[:, hd]
+            hh = h_prev[:, hd]
+            dh_h = jnp.zeros_like(dh[:, hd])
+            for k in range(nk):                 # static unroll
+                bid = ids_ref[0 if fixed else r, k]
+                ub = u_ref[hd, pl.ds(bid * bs, bs), :].astype(jnp.float32)
+                # BP: only the kept columns of dh_{t-1} get a contribution.
+                dhb = jnp.dot(dgh, ub.T,
+                              preferred_element_type=jnp.float32) * scale
+                dh_h = jax.lax.dynamic_update_slice(dh_h, dhb, (0, bid * bs))
+                # WG: compact (bs, G) product accumulated into the kept rows.
+                hb = jax.lax.dynamic_slice(hh, (0, bid * bs), (B, bs))
+                cur = du_s[hd, pl.ds(bid * bs, bs), :]
+                du_s[hd, pl.ds(bid * bs, bs), :] = cur + jnp.dot(
+                    hb.T, dgh, preferred_element_type=jnp.float32) * scale
+            dhp.append(dh_h)
+    elif mode == "dense":
+        m = m_ref[0].astype(jnp.float32)         # (B, 1|H, dh)
+        for hd in range(heads):
+            u_h = u_ref[hd].astype(jnp.float32)
+            dgh = dgates[:, hd]
+            m_h = m[:, 0] if m.shape[1] == 1 else m[:, hd]
+            dhp.append(jnp.dot(dgh, u_h.T,
+                               preferred_element_type=jnp.float32)
+                       * m_h * scale)
+            hm = h_prev[:, hd] * m_h * scale
+            du_s[hd] = du_s[hd] + jnp.dot(hm.T, dgh,
+                                          preferred_element_type=jnp.float32)
+    else:
+        for hd in range(heads):
+            u_h = u_ref[hd].astype(jnp.float32)
+            dgh = dgates[:, hd]
+            dhp.append(jnp.dot(dgh, u_h.T,
+                               preferred_element_type=jnp.float32))
+            du_s[hd] = du_s[hd] + jnp.dot(h_prev[:, hd].T, dgh,
+                                          preferred_element_type=jnp.float32)
+    dh_prev = jnp.stack(dhp, axis=1)
+    dh_s[...] = dh_prev
+    for s, v in zip(dst_s, dst_prev):
+        s[...] = v
+
+    @pl.when(t == n_steps - 1)
+    def _flush():
+        du_ref[...] = du_s[...].astype(du_ref.dtype)
+        dh0_ref[...] = dh_prev.astype(dh0_ref.dtype)
+        for rf, v in zip(dst0_refs, dst_prev):
+            rf[...] = v.astype(rf.dtype)
+
+
+def _mask_inputs(mask, dtype, fixed, rev=None):
+    """(m_in, m_spec) for the (1, B, 1|H, dh) per-step mask ref."""
+    if mask is None:
+        m_in = jnp.zeros((1, 1, 1, 1), dtype)        # unused placeholder
+        return m_in, pl.BlockSpec((1, 1, 1, 1), lambda t, ids: (0, 0, 0, 0))
+    per_t = rev if rev is not None else (lambda t, ids: (t, 0, 0, 0))
+    spec = pl.BlockSpec((1, *mask.shape[1:]),
+                        (lambda t, ids: (0, 0, 0, 0)) if fixed else per_t)
+    return mask, spec
+
+
+def _pallas_fwd(cell, gx, u, h0, states0, kb, mask, *, block_size, scale,
+                interpret):
+    T, B, H, G = gx.shape
+    dh = u.shape[1]
+    ns = cell.num_states
+    mode = _rh_mode(kb, mask)
+    fixed = _is_fixed(mode, kb, mask)
+    nk = kb.shape[1] if mode == "structured" else 0
+    ids = kb if mode == "structured" else _dummy_ids()
+    m_in, m_spec = _mask_inputs(mask, gx.dtype, fixed)
+    const3 = pl.BlockSpec((B, H, dh), lambda t, ids: (0, 0, 0))
+    seq3 = pl.BlockSpec((1, B, H, dh), lambda t, ids: (t, 0, 0, 0))
+    odt = h0.dtype
+    kernel = functools.partial(
+        _fwd_kernel, cell=cell, heads=H, nk=nk, block_size=block_size,
+        scale=scale, mode=mode, fixed=fixed)
+    outs = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(T,),
+            in_specs=[
+                pl.BlockSpec((1, B, H, G), lambda t, ids: (t, 0, 0, 0)),
+                pl.BlockSpec((H, dh, G), lambda t, ids: (0, 0, 0)),  # U resident
+                const3,
+                *([const3] * ns),
+                m_spec,
+            ],
+            out_specs=[
+                seq3,
+                pl.BlockSpec((1, B, H, G), lambda t, ids: (t, 0, 0, 0)),
+                *([seq3] * ns),
+            ],
+            scratch_shapes=[pltpu.VMEM((B, H, dh), jnp.float32)] * (1 + ns),
+        ),
+        out_shape=[jax.ShapeDtypeStruct((T, B, H, dh), odt),
+                   jax.ShapeDtypeStruct((T, B, H, G), gx.dtype),
+                   *[jax.ShapeDtypeStruct((T, B, H, dh), s.dtype)
+                     for s in states0]],
+        interpret=interpret,
+    )(ids, gx, u, h0, *states0, m_in)
+    hs, gates = outs[0], outs[1]
+    return hs, gates, tuple(outs[2:])
+
+
+def _pallas_bwd(cell, dy, dstT, gates, st_seqs, st_prev_seqs, h_prev_seq, u,
+                kb, mask, *, block_size, scale, interpret):
+    T, B, H, G = gates.shape
+    dh = u.shape[1]
+    ns = cell.num_states
+    mode = _rh_mode(kb, mask)
+    fixed = _is_fixed(mode, kb, mask)
+    nk = kb.shape[1] if mode == "structured" else 0
+    ids = kb if mode == "structured" else _dummy_ids()
+    rev = lambda t, ids: (T - 1 - t, 0, 0, 0)        # reverse-time index map
+    m_in, m_spec = _mask_inputs(mask, gates.dtype, fixed, rev=rev)
+    const3 = pl.BlockSpec((B, H, dh), lambda t, ids: (0, 0, 0))
+    rev3 = pl.BlockSpec((1, B, H, dh), rev)
+    odt = dy.dtype
+    kernel = functools.partial(
+        _bwd_kernel, cell=cell, heads=H, n_steps=T, nk=nk,
+        block_size=block_size, scale=scale, mode=mode, fixed=fixed)
+    outs = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(T,),
+            in_specs=[
+                rev3,                                       # dy
+                pl.BlockSpec((1, B, H, G), rev),            # gates
+                *([rev3] * ns),                             # states at t
+                *([rev3] * ns),                             # states at t-1
+                rev3,                                       # h_{t-1}
+                pl.BlockSpec((H, dh, G), lambda t, ids: (0, 0, 0)),  # U
+                m_spec,
+                *([const3] * ns),                           # d(state_T)
+            ],
+            out_specs=[
+                pl.BlockSpec((1, B, H, G), rev),            # dgx
+                pl.BlockSpec((H, dh, G), lambda t, ids: (0, 0, 0)),  # dU
+                const3,                                     # dh0
+                *([const3] * ns),                           # d(state_0)
+            ],
+            scratch_shapes=[pltpu.VMEM((B, H, dh), jnp.float32)] * (1 + ns)
+            + [pltpu.VMEM((H, dh, G), jnp.float32)],
+        ),
+        out_shape=[jax.ShapeDtypeStruct((T, B, H, G), odt),
+                   jax.ShapeDtypeStruct((H, dh, G), u.dtype),
+                   jax.ShapeDtypeStruct((B, H, dh), odt),
+                   *[jax.ShapeDtypeStruct((B, H, dh), odt)] * ns],
+        interpret=interpret,
+    )(ids, dy, gates, *st_seqs, *st_prev_seqs, h_prev_seq, u, m_in, *dstT)
+    dgx, du, dh0 = outs[0], outs[1], outs[2]
+    return dgx, du, dh0, tuple(outs[3:])
+
+
+# ---------------------------------------------------------------------------
+# XLA impl: the same fused two-pass structure as lax.scans (CPU production
+# path). Structured RH runs compact — per-step gathers of h columns / U rows
+# by the schedule's unit ids — while random RH is masked-dense. The wins
+# over "scheduled" come from the hand-written reverse-time scan: dU
+# accumulates as a compact in-place scatter-add on the carry
+# (autodiff-of-scan materializes a dense (H, dh, G) zeros+scatter per step
+# and adds it into the carry), FIXED schedules hoist the U gather and keep
+# dU compact until one final scatter, and the gate bias is prefolded into
+# gx (see kernels/lstm_scan.py for the measurements behind these choices).
+# ---------------------------------------------------------------------------
+
+
+def _xla_fwd(cell, gx, u, h0, states0, kb, mask, *, block_size, scale):
+    mode = _rh_mode(kb, mask)
+    fixed = _is_fixed(mode, kb, mask)
+    sc32 = jnp.asarray(scale, jnp.float32)
+    ids = _unit_ids_table(kb, block_size) if mode == "structured" else None
+    u_c0 = jnp.take(u, ids[0], axis=1) if mode == "structured" and fixed \
+        else None
+
+    xs_extra = None
+    if not fixed:
+        xs_extra = ids if mode == "structured" else (
+            mask if mode == "dense" else None)
+
+    def step(carry, xs):
+        h, sts = carry
+        gx_t, extra = xs
+        if mode == "structured":
+            ids_t = ids[0] if fixed else extra
+            u_c = u_c0 if fixed else jnp.take(u, ids_t, axis=1)
+            h_c = jnp.take(h, ids_t, axis=-1)
+            r = jnp.einsum("bhk,hkg->bhg", h_c, u_c,
+                           preferred_element_type=jnp.float32) * sc32
+        elif mode == "dense":
+            m_t = mask[0] if fixed else extra
+            hm = h * m_t.astype(h.dtype) * jnp.asarray(scale, h.dtype)
+            r = jnp.einsum("bhd,hdg->bhg", hm, u,
+                           preferred_element_type=jnp.float32)
+        else:
+            r = jnp.einsum("bhd,hdg->bhg", h, u,
+                           preferred_element_type=jnp.float32)
+        gates = gx_t.astype(jnp.float32) + r
+        h2, st2 = cell.pointwise_fwd(
+            gates, tuple(s.astype(jnp.float32) for s in sts))
+        h2 = h2.astype(h.dtype)
+        st2 = tuple(v.astype(s.dtype) for v, s in zip(st2, sts))
+        return (h2, st2), (h2, st2, gates.astype(gx.dtype))
+
+    (_, _), (hs, st_seqs, gates) = jax.lax.scan(step, (h0, states0),
+                                                (gx, xs_extra))
+    return hs, gates, st_seqs
+
+
+def _xla_bwd(cell, dy, dstT, gates, st_seqs, st_prev_seqs, h_prev_seq, u,
+             kb, mask, *, block_size, scale):
+    T, B, H, G = gates.shape
+    dh_dim = u.shape[1]
+    mode = _rh_mode(kb, mask)
+    fixed = _is_fixed(mode, kb, mask)
+    sc32 = jnp.asarray(scale, jnp.float32)
+    ids = _unit_ids_table(kb, block_size) if mode == "structured" else None
+    u_c0 = jnp.take(u, ids[0], axis=1) if mode == "structured" and fixed \
+        else None
+    # FIXED structured: dU stays compact (H, k, G) across the scan, one
+    # scatter at the end; otherwise a full (H, dh, G) f32 accumulator.
+    du0 = jnp.zeros((H, ids.shape[1], G) if mode == "structured" and fixed
+                    else (H, dh_dim, G), jnp.float32)
+
+    xs_extra = None
+    if not fixed:
+        xs_extra = ids if mode == "structured" else (
+            mask if mode == "dense" else None)
+
+    def step(carry, xs):
+        dh_next, dst_next, du = carry
+        dy_t, g_t, stn_t, stp_t, hp_t, extra = xs
+        dh = dy_t.astype(jnp.float32) + dh_next
+        dgates, dst_prev = cell.pointwise_bwd(
+            g_t.astype(jnp.float32),
+            tuple(s.astype(jnp.float32) for s in stp_t),
+            tuple(s.astype(jnp.float32) for s in stn_t), dh, dst_next)
+        if mode == "structured":
+            ids_t = ids[0] if fixed else extra
+            u_c = (u_c0 if fixed else jnp.take(u, ids_t, axis=1)
+                   ).astype(jnp.float32)
+            # BP: only the kept columns of dh_{t-1} get a contribution.
+            dh_c = jnp.einsum("bhg,hkg->bhk", dgates, u_c,
+                              preferred_element_type=jnp.float32) * sc32
+            dh_prev = jnp.zeros((B, H, dh_dim), jnp.float32
+                                ).at[:, :, ids_t].set(dh_c)
+            # WG: compact (H, k, G) product scatter-added into the kept rows.
+            h_c = jnp.take(hp_t, ids_t, axis=-1).astype(jnp.float32)
+            contrib = jnp.einsum("bhk,bhg->hkg", h_c, dgates,
+                                 preferred_element_type=jnp.float32) * sc32
+            du = du + contrib if fixed else du.at[:, ids_t].add(contrib)
+        elif mode == "dense":
+            m_t = (mask[0] if fixed else extra).astype(jnp.float32)
+            dh_prev = jnp.einsum("bhg,hdg->bhd", dgates,
+                                 u.astype(jnp.float32),
+                                 preferred_element_type=jnp.float32
+                                 ) * m_t * sc32
+            hm = hp_t.astype(jnp.float32) * m_t * sc32
+            du = du + jnp.einsum("bhd,bhg->hdg", hm, dgates,
+                                 preferred_element_type=jnp.float32)
+        else:
+            dh_prev = jnp.einsum("bhg,hdg->bhd", dgates,
+                                 u.astype(jnp.float32),
+                                 preferred_element_type=jnp.float32)
+            du = du + jnp.einsum("bhd,bhg->hdg", hp_t.astype(jnp.float32),
+                                 dgates, preferred_element_type=jnp.float32)
+        return (dh_prev, dst_prev, du), dgates.astype(dy.dtype)
+
+    (dh0, dst0, du), dgx = jax.lax.scan(
+        step,
+        (jnp.zeros((B, H, dh_dim), jnp.float32),
+         tuple(d.astype(jnp.float32) for d in dstT), du0),
+        (dy, gates, st_seqs, st_prev_seqs, h_prev_seq, xs_extra),
+        reverse=True)
+    if mode == "structured" and fixed:
+        du = jnp.zeros((H, dh_dim, G), jnp.float32).at[:, ids[0]].set(du)
+    return (dgx, du.astype(u.dtype), dh0.astype(dy.dtype),
+            tuple(d.astype(dy.dtype) for d in dst0))
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp wrapper
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4))
+def _cell_scan(cell, block_size, scale, impl, interpret,
+               gx, u, h0, states0, kb, mask):
+    out, _ = _cell_scan_fwd(cell, block_size, scale, impl, interpret,
+                            gx, u, h0, states0, kb, mask)
+    return out
+
+
+def _cell_scan_fwd(cell, block_size, scale, impl, interpret,
+                   gx, u, h0, states0, kb, mask):
+    if impl == "pallas":
+        hs, gates, st_seqs = _pallas_fwd(cell, gx, u, h0, states0, kb, mask,
+                                         block_size=block_size, scale=scale,
+                                         interpret=interpret)
+    else:
+        hs, gates, st_seqs = _xla_fwd(cell, gx, u, h0, states0, kb, mask,
+                                      block_size=block_size, scale=scale)
+    out = (hs, hs[-1], tuple(s[-1] for s in st_seqs))
+    return out, (gates, st_seqs, hs, u, h0, states0, kb, mask)
+
+
+def _cell_scan_bwd(cell, block_size, scale, impl, interpret, res, dout):
+    gates, st_seqs, hs, u, h0, states0, kb, mask = res
+    dhs, dh_fin, dst_fin = dout
+    # dL/dh_T arrives both through hs[-1] and the explicit final state.
+    dy = dhs.at[-1].add(dh_fin)
+    st_prev_seqs = tuple(
+        jnp.concatenate([s0[None].astype(s.dtype), s[:-1]], axis=0)
+        for s0, s in zip(states0, st_seqs))
+    h_prev_seq = jnp.concatenate([h0[None].astype(hs.dtype), hs[:-1]], axis=0)
+    if impl == "pallas":
+        dgx, du, dh0, dst0 = _pallas_bwd(
+            cell, dy, dst_fin, gates, st_seqs, st_prev_seqs, h_prev_seq, u,
+            kb, mask, block_size=block_size, scale=scale, interpret=interpret)
+    else:
+        dgx, du, dh0, dst0 = _xla_bwd(
+            cell, dy, dst_fin, gates, st_seqs, st_prev_seqs, h_prev_seq, u,
+            kb, mask, block_size=block_size, scale=scale)
+    dkb = None if kb is None else _float0_like(kb)
+    dmask = None if mask is None else jnp.zeros_like(mask)
+    # cotangents carry their primals' dtypes (gates stores gx.dtype): a
+    # bf16-gx / f32-state call must not widen dgx to f32 — that doubles
+    # grad memory and makes grad dtype engine-dependent.
+    return (dgx.astype(gates.dtype), du.astype(u.dtype),
+            dh0.astype(h0.dtype),
+            tuple(d.astype(s.dtype) for d, s in zip(dst0, states0)),
+            dkb, dmask)
+
+
+_cell_scan.defvjp(_cell_scan_fwd, _cell_scan_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "cell", "block_size", "scale", "impl", "interpret"))
+def cell_scan(gx: jax.Array, u: jax.Array, h0: jax.Array,
+              states0: Tuple[jax.Array, ...], *,
+              cell: CellSpec,
+              keep_blocks: Optional[jax.Array] = None,
+              dense_mask: Optional[jax.Array] = None,
+              block_size: int = 1,
+              scale: float = 1.0,
+              impl: str = "pallas",
+              interpret: Optional[bool] = None):
+    """Run one cell's full Phase-B recurrence in one fused pass.
+
+    gx: (T, B, H, G) precomputed non-recurrent gate inputs (Phase A, bias
+    folded in); u: (H, dh, G) per-head recurrent weights (H=1 = dense
+    recurrence); h0: (B, H, dh); states0: tuple of ``cell.num_states``
+    carried states, each (B, H, dh). RH dropout over the dh axis, shared
+    across heads: ``keep_blocks`` (T|1, nk) structured ids table OR
+    ``dense_mask`` (T|1, B, 1|H, dh) random mask, with inverted-dropout
+    ``scale``; a leading 1 means FIXED (one mask for all steps). Returns
+    ``(hs (T, B, H, dh), (h_fin, states_fin))`` and is differentiable
+    w.r.t. (gx, u, h0, states0) through the fused reverse-time backward.
+    """
+    if keep_blocks is not None and dense_mask is not None:
+        raise ValueError("give at most one of keep_blocks / dense_mask")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    hs, h_fin, st_fin = _cell_scan(cell, int(block_size), float(scale),
+                                   impl, bool(interpret),
+                                   gx, u, h0, tuple(states0),
+                                   keep_blocks, dense_mask)
+    return hs, (h_fin, st_fin)

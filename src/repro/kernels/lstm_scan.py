@@ -1,60 +1,45 @@
-"""Fused persistent-scan LSTM Pallas kernel — the whole recurrence in one call.
+"""Fused persistent-scan LSTM — the vanilla-cell instance of cell_scan.
 
-The scheduled engine (core/lstm.py) already hoists mask sampling and the
-non-recurrent gate matmuls out of the ``lax.scan``, but its Phase-B scan body
-is still 2+ separately dispatched XLA ops per time step, and the recurrent
-weight U is re-fetched from HBM every step. This kernel runs the *entire*
-T-step Phase-B recurrence in a single ``pallas_call``:
+The whole T-step Phase-B LSTM recurrence runs in one ``pallas_call``
+(``kernels/cell_scan.py`` holds the shared machinery):
 
-  * U and the precomputed gate inputs' layout are set up so U is loaded into
-    VMEM **once** and stays resident across all T steps (its BlockSpec
-    index_map is constant; the time axis is the grid, and TPU grid steps on
-    one core run sequentially, so the pipeline never evicts the block);
-  * the time loop is the kernel grid — the carried (h, c) state lives in
-    VMEM scratch, never round-tripping to HBM between steps;
-  * the paper's RH structured dropout is applied by gathering each step's
-    kept hidden-unit blocks straight out of the resident U via the
-    scalar-prefetched ``(T, nk)`` MaskSchedule ids table (the same mechanism
-    as ``gather_matmul_stepped``): the recurrent matmul runs at (1-p) FLOPs
-    with zero-cost gathers — ``nk`` is static (exact-k masks), so the
-    per-step gather unrolls into ``nk`` dynamic-slice + (B,bs)@(bs,4H)
-    partial matmuls;
-  * the LSTM pointwise update (kernels/lstm_pointwise.py math) is fused into
-    the same pass — gates never land in HBM before the nonlinearity.
+  * U is loaded into VMEM **once** and stays resident across all T steps
+    (constant BlockSpec index_map; the time axis is the grid, and TPU grid
+    steps on one core run sequentially, so the pipeline never evicts it);
+  * the carried (h, c) state lives in VMEM scratch, never round-tripping
+    to HBM between steps;
+  * the paper's RH structured dropout gathers each step's kept hidden-unit
+    blocks straight out of the resident U via the scalar-prefetched
+    ``(T, nk)`` MaskSchedule ids table — the recurrent matmul runs at
+    (1-p) FLOPs with zero-cost gathers (``nk`` static, exact-k masks);
+  * the LSTM pointwise update (this module: sigmoid/tanh gate math on
+    pre-activation gates in order i,f,g,o) is fused into the same pass;
+  * a ``custom_vjp`` reverse-time kernel makes the backward equally fused:
+    dgates elementwise from the stored pre-activation gates + c sequence,
+    BP/WG gathered compact, dU accumulated in f32 VMEM scratch and flushed
+    once. Forward *and* backward recurrent matmuls run at (1-p) FLOPs.
 
-A ``custom_vjp`` pairs it with a reverse-time fused kernel: the backward
-consumes the forward's residuals (pre-activation gates, the c sequence) and
-runs the same per-step structure in reverse — dgates elementwise, the BP
-matmul ``dgates @ U[kept].T`` and the WG accumulation ``h_c.T @ dgates`` both
-gathered compact, dU accumulated in a VMEM f32 scratch across all T steps and
-flushed once. Forward *and* backward recurrent matmuls run at (1-p) FLOPs.
+Three RH modes (selected by which mask argument is given): ``keep_blocks``
+(T|1, nk) structured ids table (compact gathers); ``dense_mask``
+(T|1, B, H) random mask (mask-multiply then dense matmul — regularization
+only, no reclaim); neither = dense recurrence. A leading 1 row is a FIXED
+time pattern (one mask reused every step).
 
-Three RH modes (selected by which mask argument is given):
-  structured  — ``keep_blocks`` (T|1, nk) ids table, compact gathers;
-  random      — ``dense_mask`` (T|1, B, H), mask-multiply then dense matmul
-                (baseline: regularization only, no reclaim);
-  off         — dense recurrent matmul.
-A (1, ...) leading axis is a FIXED time pattern: one mask reused every step.
-
-``impl="xla"`` is the production CPU path: the same fused two-pass structure
-(forward scan emitting residuals, hand-written reverse-time scan consuming
-them) expressed as ``lax.scan``s, with the structured RH matmuls compact
-(per-step h-column / U-row gathers by the schedule's unit ids — the
-scheduled engine's in-scan math). Its edge over "scheduled" is the
-hand-written backward: dU accumulates as a compact in-place scatter-add on
-the scan carry where autodiff-of-scan materializes a dense (H, 4H)
-zeros+scatter every step, FIXED schedules hoist the U gather out of the
-scan entirely and keep dU compact until one final scatter, and the gate
-bias rides in gx (masked-dense was tried first and measured ~0.7x of
-scheduled at Zaremba-large geometry on CPU — the 1/(1-p) extra FLOPs beat
-the saved gathers). The pallas path auto-falls back to interpret mode off
-TPU, which validates the kernels but is not fast — benchmarks on CPU should
-use ``impl="xla"``.
+``impl="xla"`` is the production CPU path: the same fused two-pass
+structure expressed as ``lax.scan``s with compact structured gathers. Its
+edge over "scheduled" is the hand-written backward: dU accumulates as a
+compact in-place scatter-add on the scan carry where autodiff-of-scan
+materializes a dense (H, 4H) zeros+scatter every step, FIXED schedules
+hoist the U gather out of the scan entirely and keep dU compact until one
+final scatter, and the gate bias rides in gx (masked-dense was tried first
+and measured ~0.7x of scheduled at Zaremba-large geometry on CPU — the
+1/(1-p) extra FLOPs beat the saved gathers). The pallas path auto-falls
+back to interpret mode off TPU — correct but not fast.
 
 VMEM budget: U (H, 4H) must fit on-core alongside the (B, ·) working set —
 ~f32 H<=700 / bf16 H<=1000 on a 16 MB core. Beyond that the natural
-extension is sharding H across cores (persistent-RNN style); not done here.
-Tile alignment: on real TPU the dynamic slices want ``block_size`` a
+extension is sharding H across cores (persistent-RNN style); not done
+here. Tile alignment: on real TPU the dynamic slices want ``block_size`` a
 multiple of the lane width (128) and B a multiple of 8; interpret mode
 (CPU) validates any size.
 """
@@ -63,32 +48,29 @@ from __future__ import annotations
 import functools
 from typing import Optional
 
-import numpy as np
-
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.cell_scan import CellSpec, cell_scan
 
 
-def _float0_like(x):
-    return np.zeros(x.shape, dtype=jax.dtypes.float0)
-
-
-def _pointwise_fwd(gates, c_prev, forget_bias):
-    """f32 gate nonlinearities + state update. gates: (B, 4H) order i,f,g,o."""
+def _pointwise_fwd(gates, states, *, forget_bias):
+    """f32 gate nonlinearities + state update. gates order i,f,g,o."""
+    (c_prev,) = states
     i, f, g, o = jnp.split(gates, 4, axis=-1)
     c = jax.nn.sigmoid(f + forget_bias) * c_prev + jax.nn.sigmoid(i) * jnp.tanh(g)
     h = jax.nn.sigmoid(o) * jnp.tanh(c)
-    return h, c
+    return h, (c,)
 
 
-def _pointwise_bwd(gates, c, c_prev, dh, dc_in, forget_bias):
+def _pointwise_bwd(gates, states_prev, states_new, dh, dstates, *,
+                   forget_bias):
     """Reverse of _pointwise_fwd from pre-activation gates.
 
-    Returns (dgates (B, 4H), dc_prev (B, H)); dc_in is the carry from step
-    t+1 (dL/dc_t through c_{t+1}), dh the total dL/dh_t.
+    dstates carries (dL/dc_t through c_{t+1},); dh is the total dL/dh_t.
     """
+    (c_prev,), (c,) = states_prev, states_new
+    (dc_in,) = dstates
     gi, gf, gg, go = jnp.split(gates, 4, axis=-1)
     i = jax.nn.sigmoid(gi)
     f = jax.nn.sigmoid(gf + forget_bias)
@@ -103,412 +85,20 @@ def _pointwise_bwd(gates, c, c_prev, dh, dc_in, forget_bias):
         (dc * i) * (1.0 - g * g),
         do * o * (1.0 - o),
     ], axis=-1)
-    return dgates, dc * f
+    return dgates, (dc * f,)
 
 
-# ---------------------------------------------------------------------------
-# Pallas kernels. Grid = (T,): one grid step per time step, carry in scratch.
-# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=None)
+def lstm_cell_spec(forget_bias: float = 0.0) -> CellSpec:
+    """The vanilla LSTM as a cell_scan CellSpec (cached: stable jit keys)."""
+    return CellSpec(
+        name="lstm", num_states=1,
+        pointwise_fwd=functools.partial(_pointwise_fwd,
+                                        forget_bias=forget_bias),
+        pointwise_bwd=functools.partial(_pointwise_bwd,
+                                        forget_bias=forget_bias))
 
 
-def _fwd_kernel(ids_ref, gx_ref, u_ref, h0_ref, c0_ref, m_ref,
-                hs_ref, cs_ref, gates_ref, h_s, c_s, *,
-                nk: int, block_size: int, scale: float, forget_bias: float,
-                mode: str, fixed: bool):
-    """One time step. mode: "structured" | "dense" | "off"."""
-    t = pl.program_id(0)
-
-    @pl.when(t == 0)
-    def _init():
-        h_s[...] = h0_ref[...].astype(jnp.float32)
-        c_s[...] = c0_ref[...].astype(jnp.float32)
-
-    h_prev = h_s[...]
-    gates = gx_ref[0].astype(jnp.float32)
-    if mode == "structured":
-        bs = block_size
-        acc = jnp.zeros_like(gates)
-        for k in range(nk):                     # static unroll: exact-k masks
-            bid = ids_ref[0 if fixed else t, k]
-            hb = jax.lax.dynamic_slice(h_prev, (0, bid * bs),
-                                       (h_prev.shape[0], bs))
-            ub = u_ref[pl.ds(bid * bs, bs), :].astype(jnp.float32)
-            acc += jnp.dot(hb, ub, preferred_element_type=jnp.float32)
-        gates += acc * scale
-    elif mode == "dense":
-        hm = h_prev * m_ref[0].astype(jnp.float32) * scale
-        gates += jnp.dot(hm, u_ref[...].astype(jnp.float32),
-                         preferred_element_type=jnp.float32)
-    else:
-        gates += jnp.dot(h_prev, u_ref[...].astype(jnp.float32),
-                         preferred_element_type=jnp.float32)
-    h_new, c_new = _pointwise_fwd(gates, c_s[...], forget_bias)
-    h_s[...] = h_new
-    c_s[...] = c_new
-    hs_ref[0] = h_new.astype(hs_ref.dtype)
-    cs_ref[0] = c_new.astype(cs_ref.dtype)
-    gates_ref[0] = gates.astype(gates_ref.dtype)
-
-
-def _bwd_kernel(ids_ref, dy_ref, gates_ref, cs_ref, cp_ref, hp_ref, u_ref,
-                m_ref, dcT_ref, dgx_ref, du_ref, dh0_ref, dc0_ref,
-                dh_s, dc_s, du_s, *,
-                n_steps: int, nk: int, block_size: int, scale: float,
-                forget_bias: float, mode: str, fixed: bool):
-    """Reverse-time step: grid step t processes time step r = T-1-t.
-
-    All time-indexed refs arrive through r-indexed BlockSpecs; dU accumulates
-    in f32 scratch across the whole grid and flushes on the last step.
-    """
-    t = pl.program_id(0)
-    r = n_steps - 1 - t                      # the time step being processed
-
-    @pl.when(t == 0)
-    def _init():
-        dh_s[...] = jnp.zeros_like(dh_s)
-        dc_s[...] = dcT_ref[...].astype(jnp.float32)
-        du_s[...] = jnp.zeros_like(du_s)
-
-    dh = dy_ref[0].astype(jnp.float32) + dh_s[...]
-    gates = gates_ref[0].astype(jnp.float32)
-    c_t = cs_ref[0].astype(jnp.float32)
-    c_prev = cp_ref[0].astype(jnp.float32)
-    h_prev = hp_ref[0].astype(jnp.float32)
-    dgates, dc_prev = _pointwise_bwd(gates, c_t, c_prev, dh, dc_s[...],
-                                     forget_bias)
-    dgx_ref[0] = dgates.astype(dgx_ref.dtype)
-
-    B = dh.shape[0]
-    if mode == "structured":
-        bs = block_size
-        dh_prev = jnp.zeros_like(dh)
-        for k in range(nk):                     # static unroll
-            bid = ids_ref[0 if fixed else r, k]
-            ub = u_ref[pl.ds(bid * bs, bs), :].astype(jnp.float32)
-            # BP: only the kept columns of dh_{t-1} get a contribution.
-            dhb = jnp.dot(dgates, ub.T,
-                          preferred_element_type=jnp.float32) * scale
-            dh_prev = jax.lax.dynamic_update_slice(dh_prev, dhb, (0, bid * bs))
-            # WG: compact (bs, 4H) product accumulated into the kept rows.
-            hb = jax.lax.dynamic_slice(h_prev, (0, bid * bs), (B, bs))
-            cur = du_s[pl.ds(bid * bs, bs), :]
-            du_s[pl.ds(bid * bs, bs), :] = cur + jnp.dot(
-                hb.T, dgates, preferred_element_type=jnp.float32) * scale
-    elif mode == "dense":
-        m = m_ref[0].astype(jnp.float32)
-        dh_prev = jnp.dot(dgates, u_ref[...].astype(jnp.float32).T,
-                          preferred_element_type=jnp.float32) * m * scale
-        hm = h_prev * m * scale
-        du_s[...] += jnp.dot(hm.T, dgates, preferred_element_type=jnp.float32)
-    else:
-        dh_prev = jnp.dot(dgates, u_ref[...].astype(jnp.float32).T,
-                          preferred_element_type=jnp.float32)
-        du_s[...] += jnp.dot(h_prev.T, dgates,
-                             preferred_element_type=jnp.float32)
-    dh_s[...] = dh_prev
-    dc_s[...] = dc_prev
-
-    @pl.when(t == n_steps - 1)
-    def _flush():
-        du_ref[...] = du_s[...].astype(du_ref.dtype)
-        dh0_ref[...] = dh_prev.astype(dh0_ref.dtype)
-        dc0_ref[...] = dc_prev.astype(dc0_ref.dtype)
-
-
-def _rh_mode(kb, mask):
-    if kb is not None:
-        return "structured"
-    if mask is not None:
-        return "dense"
-    return "off"
-
-
-def _dummy_ids():
-    return jnp.zeros((1, 1), jnp.int32)
-
-
-def _pallas_fwd(gx, u, h0, c0, kb, mask, *, block_size, scale, forget_bias,
-                interpret):
-    T, B, H4 = gx.shape
-    H = H4 // 4
-    mode = _rh_mode(kb, mask)
-    fixed = ((kb if mode == "structured" else mask) is not None
-             and (kb if mode == "structured" else mask).shape[0] == 1)
-    nk = kb.shape[1] if mode == "structured" else 0
-    ids = kb if mode == "structured" else _dummy_ids()
-    if mask is None:
-        m_in = jnp.zeros((1, 1, 1), gx.dtype)       # unused placeholder
-        m_spec = pl.BlockSpec((1, 1, 1), lambda t, ids: (0, 0, 0))
-    else:
-        m_in = mask
-        m_spec = pl.BlockSpec((1, *mask.shape[1:]),
-                              (lambda t, ids: (0, 0, 0)) if fixed
-                              else (lambda t, ids: (t, 0, 0)))
-    kernel = functools.partial(
-        _fwd_kernel, nk=nk, block_size=block_size, scale=scale,
-        forget_bias=forget_bias, mode=mode, fixed=fixed)
-    hs, cs, gates = pl.pallas_call(
-        kernel,
-        grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
-            grid=(T,),
-            in_specs=[
-                pl.BlockSpec((1, B, H4), lambda t, ids: (t, 0, 0)),
-                pl.BlockSpec((H, H4), lambda t, ids: (0, 0)),   # U resident
-                pl.BlockSpec((B, H), lambda t, ids: (0, 0)),
-                pl.BlockSpec((B, H), lambda t, ids: (0, 0)),
-                m_spec,
-            ],
-            out_specs=[
-                pl.BlockSpec((1, B, H), lambda t, ids: (t, 0, 0)),
-                pl.BlockSpec((1, B, H), lambda t, ids: (t, 0, 0)),
-                pl.BlockSpec((1, B, H4), lambda t, ids: (t, 0, 0)),
-            ],
-            scratch_shapes=[pltpu.VMEM((B, H), jnp.float32),
-                            pltpu.VMEM((B, H), jnp.float32)],
-        ),
-        out_shape=[jax.ShapeDtypeStruct((T, B, H), gx.dtype),
-                   jax.ShapeDtypeStruct((T, B, H), gx.dtype),
-                   jax.ShapeDtypeStruct((T, B, H4), gx.dtype)],
-        interpret=interpret,
-    )(ids, gx, u, h0, c0, m_in)
-    return hs, cs, gates
-
-
-def _pallas_bwd(dy, dcT, gates, cs, c_prev_seq, h_prev_seq, u, kb, mask, *,
-                block_size, scale, forget_bias, interpret):
-    T, B, H4 = gates.shape
-    H = H4 // 4
-    mode = _rh_mode(kb, mask)
-    fixed = ((kb if mode == "structured" else mask) is not None
-             and (kb if mode == "structured" else mask).shape[0] == 1)
-    nk = kb.shape[1] if mode == "structured" else 0
-    ids = kb if mode == "structured" else _dummy_ids()
-    rev = lambda t, ids: (T - 1 - t, 0, 0)          # reverse-time index map
-    if mask is None:
-        m_in = jnp.zeros((1, 1, 1), gates.dtype)
-        m_spec = pl.BlockSpec((1, 1, 1), lambda t, ids: (0, 0, 0))
-    else:
-        m_in = mask
-        m_spec = pl.BlockSpec((1, *mask.shape[1:]),
-                              (lambda t, ids: (0, 0, 0)) if fixed else rev)
-    kernel = functools.partial(
-        _bwd_kernel, n_steps=T, nk=nk, block_size=block_size, scale=scale,
-        forget_bias=forget_bias, mode=mode, fixed=fixed)
-    dgx, du, dh0, dc0 = pl.pallas_call(
-        kernel,
-        grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
-            grid=(T,),
-            in_specs=[
-                pl.BlockSpec((1, B, H), rev),               # dy
-                pl.BlockSpec((1, B, H4), rev),              # gates
-                pl.BlockSpec((1, B, H), rev),               # c_t
-                pl.BlockSpec((1, B, H), rev),               # c_{t-1}
-                pl.BlockSpec((1, B, H), rev),               # h_{t-1}
-                pl.BlockSpec((H, H4), lambda t, ids: (0, 0)),   # U resident
-                m_spec,
-                pl.BlockSpec((B, H), lambda t, ids: (0, 0)),    # dc_T
-            ],
-            out_specs=[
-                pl.BlockSpec((1, B, H4), rev),
-                pl.BlockSpec((H, H4), lambda t, ids: (0, 0)),
-                pl.BlockSpec((B, H), lambda t, ids: (0, 0)),
-                pl.BlockSpec((B, H), lambda t, ids: (0, 0)),
-            ],
-            scratch_shapes=[pltpu.VMEM((B, H), jnp.float32),
-                            pltpu.VMEM((B, H), jnp.float32),
-                            pltpu.VMEM((H, H4), jnp.float32)],
-        ),
-        out_shape=[jax.ShapeDtypeStruct((T, B, H4), gates.dtype),
-                   jax.ShapeDtypeStruct((H, H4), u.dtype),
-                   jax.ShapeDtypeStruct((B, H), gates.dtype),
-                   jax.ShapeDtypeStruct((B, H), gates.dtype)],
-        interpret=interpret,
-    )(ids, dy, gates, cs, c_prev_seq, h_prev_seq, u, m_in, dcT)
-    return dgx, du, dh0, dc0
-
-
-# ---------------------------------------------------------------------------
-# XLA impl: the same fused two-pass structure as lax.scans (CPU production
-# path). Structured RH runs compact — per-step gathers of h columns / U rows
-# by the schedule's unit ids, exactly the scheduled engine's in-scan math —
-# while random RH is masked-dense (no structure to reclaim). The wins over
-# "scheduled" come from the hand-written reverse-time scan: dU accumulates
-# as a compact in-place scatter-add on the carry (autodiff-of-scan
-# materializes a dense (H, 4H) zeros+scatter per step and adds it into the
-# carry), FIXED schedules hoist the U gather and keep dU compact until one
-# final scatter, and the gate bias is prefolded into gx.
-# ---------------------------------------------------------------------------
-
-
-def _unit_ids_table(kb, block_size):
-    """(rows, nk) kept-block ids -> (rows, nk*bs) unit ids."""
-    if block_size == 1:
-        return kb
-    offs = jnp.arange(block_size, dtype=kb.dtype)
-    return (kb[..., None] * block_size + offs).reshape(kb.shape[0], -1)
-
-
-def _xla_fwd(gx, u, h0, c0, kb, mask, *, block_size, scale, forget_bias):
-    mode = _rh_mode(kb, mask)
-    fixed = (mode != "off"
-             and (kb if mode == "structured" else mask).shape[0] == 1)
-    sc32 = jnp.asarray(scale, jnp.float32)
-    sc = jnp.asarray(scale, gx.dtype)
-    ids = _unit_ids_table(kb, block_size) if mode == "structured" else None
-    u_c0 = jnp.take(u, ids[0], axis=0) if mode == "structured" and fixed \
-        else None
-
-    xs_extra = None
-    if not fixed:
-        xs_extra = ids if mode == "structured" else (
-            mask if mode == "dense" else None)
-
-    def step(carry, xs):
-        h, c = carry
-        gx_t, extra = xs
-        if mode == "structured":
-            ids_t = ids[0] if fixed else extra
-            u_c = u_c0 if fixed else jnp.take(u, ids_t, axis=0)
-            h_c = jnp.take(h, ids_t, axis=-1)
-            r = jnp.dot(h_c, u_c, preferred_element_type=jnp.float32) * sc32
-        elif mode == "dense":
-            m_t = mask[0] if fixed else extra
-            r = jnp.dot(h * m_t.astype(h.dtype) * sc, u,
-                        preferred_element_type=jnp.float32)
-        else:
-            r = jnp.dot(h, u, preferred_element_type=jnp.float32)
-        gates = gx_t.astype(jnp.float32) + r
-        h2, c2 = _pointwise_fwd(gates, c.astype(jnp.float32), forget_bias)
-        h2 = h2.astype(h.dtype)
-        c2 = c2.astype(c.dtype)
-        return (h2, c2), (h2, c2, gates.astype(gx.dtype))
-
-    (hT, cT), (hs, cs, gates) = jax.lax.scan(step, (h0, c0), (gx, xs_extra))
-    return hs, cs, gates
-
-
-def _xla_bwd(dy, dcT, gates, cs, c_prev_seq, h_prev_seq, u, kb, mask, *,
-             block_size, scale, forget_bias):
-    T, B, H4 = gates.shape
-    H = H4 // 4
-    mode = _rh_mode(kb, mask)
-    fixed = (mode != "off"
-             and (kb if mode == "structured" else mask).shape[0] == 1)
-    sc32 = jnp.asarray(scale, jnp.float32)
-    ids = _unit_ids_table(kb, block_size) if mode == "structured" else None
-    u_c0 = jnp.take(u, ids[0], axis=0) if mode == "structured" and fixed \
-        else None
-    # FIXED structured: dU stays compact (k, 4H) across the scan, one
-    # scatter at the end; otherwise a full (H, 4H) f32 accumulator.
-    du0 = jnp.zeros((ids.shape[1], H4) if mode == "structured" and fixed
-                    else (H, H4), jnp.float32)
-
-    xs_extra = None
-    if not fixed:
-        xs_extra = ids if mode == "structured" else (
-            mask if mode == "dense" else None)
-
-    def step(carry, xs):
-        dh_next, dc_next, du = carry
-        dy_t, g_t, c_t, cp_t, hp_t, extra = xs
-        dh = dy_t.astype(jnp.float32) + dh_next
-        dgates, dc_prev = _pointwise_bwd(
-            g_t.astype(jnp.float32), c_t.astype(jnp.float32),
-            cp_t.astype(jnp.float32), dh, dc_next, forget_bias)
-        if mode == "structured":
-            ids_t = ids[0] if fixed else extra
-            u_c = u_c0 if fixed else jnp.take(u, ids_t, axis=0)
-            # BP: only the kept columns of dh_{t-1} get a contribution.
-            dh_c = jnp.dot(dgates, u_c.astype(jnp.float32).T,
-                           preferred_element_type=jnp.float32) * sc32
-            dh_prev = jnp.zeros((dh.shape[0], H), jnp.float32
-                                ).at[:, ids_t].set(dh_c)
-            # WG: compact (k, 4H) product scatter-added into the kept rows.
-            h_c = jnp.take(hp_t, ids_t, axis=-1).astype(jnp.float32)
-            contrib = jnp.dot(h_c.T, dgates,
-                              preferred_element_type=jnp.float32) * sc32
-            du = du + contrib if fixed else du.at[ids_t].add(contrib)
-        elif mode == "dense":
-            m_t = (mask[0] if fixed else extra).astype(jnp.float32)
-            dh_prev = jnp.dot(dgates, u.astype(jnp.float32).T,
-                              preferred_element_type=jnp.float32) * m_t * sc32
-            hm = hp_t.astype(jnp.float32) * m_t * sc32
-            du = du + jnp.dot(hm.T, dgates,
-                              preferred_element_type=jnp.float32)
-        else:
-            dh_prev = jnp.dot(dgates, u.astype(jnp.float32).T,
-                              preferred_element_type=jnp.float32)
-            du = du + jnp.dot(hp_t.astype(jnp.float32).T, dgates,
-                              preferred_element_type=jnp.float32)
-        return (dh_prev, dc_prev, du), dgates.astype(dy.dtype)
-
-    (dh0, dc0, du), dgx = jax.lax.scan(
-        step, (jnp.zeros((dy.shape[1], H), jnp.float32),
-               dcT.astype(jnp.float32), du0),
-        (dy, gates, cs, c_prev_seq, h_prev_seq, xs_extra),
-        reverse=True)
-    if mode == "structured" and fixed:
-        du = jnp.zeros((H, H4), jnp.float32).at[ids[0]].set(du)
-    return (dgx, du.astype(u.dtype), dh0.astype(dy.dtype),
-            dc0.astype(dy.dtype))
-
-
-# ---------------------------------------------------------------------------
-# custom_vjp wrapper
-# ---------------------------------------------------------------------------
-
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4))
-def _lstm_scan(block_size, scale, forget_bias, impl, interpret,
-               gx, u, h0, c0, kb, mask):
-    out, _ = _lstm_scan_fwd(block_size, scale, forget_bias, impl, interpret,
-                            gx, u, h0, c0, kb, mask)
-    return out
-
-
-def _lstm_scan_fwd(block_size, scale, forget_bias, impl, interpret,
-                   gx, u, h0, c0, kb, mask):
-    if impl == "pallas":
-        hs, cs, gates = _pallas_fwd(gx, u, h0, c0, kb, mask,
-                                    block_size=block_size, scale=scale,
-                                    forget_bias=forget_bias,
-                                    interpret=interpret)
-    else:
-        hs, cs, gates = _xla_fwd(gx, u, h0, c0, kb, mask,
-                                 block_size=block_size, scale=scale,
-                                 forget_bias=forget_bias)
-    out = (hs, hs[-1], cs[-1])
-    return out, (gates, cs, hs, u, h0, c0, kb, mask)
-
-
-def _lstm_scan_bwd(block_size, scale, forget_bias, impl, interpret, res, dout):
-    gates, cs, hs, u, h0, c0, kb, mask = res
-    dhs, dh_fin, dc_fin = dout
-    # dL/dh_T arrives both through hs[-1] and the explicit final state.
-    dy = dhs.at[-1].add(dh_fin)
-    c_prev_seq = jnp.concatenate([c0[None], cs[:-1]], axis=0)
-    h_prev_seq = jnp.concatenate([h0[None], hs[:-1]], axis=0)
-    if impl == "pallas":
-        dgx, du, dh0, dc0 = _pallas_bwd(
-            dy, dc_fin, gates, cs, c_prev_seq, h_prev_seq, u, kb, mask,
-            block_size=block_size, scale=scale, forget_bias=forget_bias,
-            interpret=interpret)
-    else:
-        dgx, du, dh0, dc0 = _xla_bwd(
-            dy, dc_fin, gates, cs, c_prev_seq, h_prev_seq, u, kb, mask,
-            block_size=block_size, scale=scale, forget_bias=forget_bias)
-    dkb = None if kb is None else _float0_like(kb)
-    dmask = None if mask is None else jnp.zeros_like(mask)
-    return dgx, du, dh0, dc0, dkb, dmask
-
-
-_lstm_scan.defvjp(_lstm_scan_fwd, _lstm_scan_bwd)
-
-
-@functools.partial(jax.jit, static_argnames=(
-    "block_size", "scale", "forget_bias", "impl", "interpret"))
 def lstm_scan(gx: jax.Array, u: jax.Array, h0: jax.Array, c0: jax.Array, *,
               keep_blocks: Optional[jax.Array] = None,
               dense_mask: Optional[jax.Array] = None,
@@ -522,16 +112,18 @@ def lstm_scan(gx: jax.Array, u: jax.Array, h0: jax.Array, c0: jax.Array, *,
     gx: (T, B, 4H) precomputed non-recurrent gate inputs ``x_t @ W + b``
     (Phase A of the scheduled engine, bias folded in); u: (H, 4H); h0/c0:
     (B, H). RH dropout: ``keep_blocks`` (T|1, nk) structured ids table OR
-    ``dense_mask`` (T|1, B, H) random mask, with inverted-dropout ``scale``;
-    a leading 1 means FIXED (one mask for all steps). Returns
+    ``dense_mask`` (T|1, B, H) random mask, with inverted-dropout
+    ``scale``; a leading 1 means FIXED (one mask for all steps). Returns
     ``(hs (T, B, H), (h_fin, c_fin))`` and is differentiable w.r.t.
     (gx, u, h0, c0) through the fused reverse-time backward.
+
+    This is the dense-recurrence (heads=1) instance of
+    ``cell_scan.cell_scan``; the head axis is added/stripped here.
     """
-    if keep_blocks is not None and dense_mask is not None:
-        raise ValueError("give at most one of keep_blocks / dense_mask")
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
-    hs, h_fin, c_fin = _lstm_scan(int(block_size), float(scale),
-                                  float(forget_bias), impl, bool(interpret),
-                                  gx, u, h0, c0, keep_blocks, dense_mask)
-    return hs, (h_fin, c_fin)
+    dm = None if dense_mask is None else dense_mask[:, :, None, :]
+    hs, (h_fin, (c_fin,)) = cell_scan(
+        gx[:, :, None, :], u[None], h0[:, None], (c0[:, None],),
+        cell=lstm_cell_spec(float(forget_bias)),
+        keep_blocks=keep_blocks, dense_mask=dm, block_size=block_size,
+        scale=scale, impl=impl, interpret=interpret)
+    return hs[:, :, 0], (h_fin[:, 0], c_fin[:, 0])

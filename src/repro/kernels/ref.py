@@ -84,6 +84,53 @@ def lstm_scan_ref(gx, u, h0, c0, *, keep_blocks=None, dense_mask=None,
     return jnp.stack(hs), (h, c)
 
 
+def slstm_scan_ref(xg, r, h0, c0, n0, m0, *, keep_blocks=None,
+                   dense_mask=None, block_size=1, scale=1.0):
+    """Oracle for kernels.slstm_scan: plain per-step jnp recurrence.
+
+    xg: (T, B, H, 4dh) precomputed gate inputs in (i, f, z, o)-per-head
+    layout; r: (H, dh, 4dh) per-head block-diagonal recurrent weights;
+    h0/c0/n0/m0: (B, H, dh). RH dropout over the dh axis, shared across
+    heads: a (T|1, nk) kept-block ids table or a (T|1, B, 1|H, dh) dense
+    mask (leading 1 = FIXED). The per-step math mirrors
+    ``models/xlstm.py slstm_step`` (exponential gating, (n, m)
+    normalizer/stabilizer, eps=1e-6 floor). Differentiable via plain
+    autodiff-of-loop (the independent ground truth for the fused
+    custom_vjp).
+    """
+    T = xg.shape[0]
+    f32 = jnp.float32
+    h, c, n, m = (a.astype(f32) for a in (h0, c0, n0, m0))
+    hs = []
+    for t in range(T):
+        if keep_blocks is not None:
+            kb_t = keep_blocks[0 if keep_blocks.shape[0] == 1 else t]
+            ids = _unit_ids(kb_t, block_size)
+            rr = jnp.einsum("bhk,hkg->bhg", jnp.take(h, ids, axis=-1),
+                            jnp.take(r, ids, axis=1),
+                            preferred_element_type=f32) * scale
+        elif dense_mask is not None:
+            m_t = dense_mask[0 if dense_mask.shape[0] == 1 else t]
+            rr = jnp.einsum("bhd,hdg->bhg", h * m_t.astype(f32) * scale, r,
+                            preferred_element_type=f32)
+        else:
+            rr = jnp.einsum("bhd,hdg->bhg", h, r, preferred_element_type=f32)
+        gates = xg[t].astype(f32) + rr
+        gi, gf, gz, go = jnp.split(gates, 4, axis=-1)
+        lf = jax.nn.log_sigmoid(gf)
+        m_new = jnp.maximum(lf + m, gi)
+        i = jnp.exp(gi - m_new)
+        f = jnp.exp(lf + m - m_new)
+        z = jnp.tanh(gz)
+        o = jax.nn.sigmoid(go)
+        c = f * c + i * z
+        n = f * n + i
+        m = m_new
+        h = o * (c / jnp.maximum(n, 1e-6))
+        hs.append(h)
+    return jnp.stack(hs), (h, (c, n, m))
+
+
 def lstm_pointwise_ref(gates, c_prev, *, forget_bias=0.0):
     """Oracle for kernels.lstm_pointwise. gates: (B, 4H) order (i,f,g,o)."""
     i, f, g, o = jnp.split(gates, 4, axis=-1)

@@ -1,0 +1,135 @@
+"""Fused persistent-scan sLSTM — the xLSTM-cell instance of cell_scan.
+
+The sLSTM (arXiv:2405.04517) is a scalar-memory cell with a true h->h
+recurrence — the paper's RH structured-dropout territory — but its
+per-step math differs from the vanilla LSTM in three ways:
+
+  * **exponential gating**: the input gate is ``exp(gi)`` and the forget
+    gate ``sigmoid`` applied in log space (``lf = log_sigmoid(gf)``), kept
+    finite by a running **stabilizer** ``m_t = max(lf_t + m_{t-1}, gi_t)``
+    — gates are rescaled by ``exp(-m_t)`` so nothing overflows;
+  * **normalizer state**: alongside the cell state ``c`` it carries
+    ``n_t = f n_{t-1} + i`` and outputs ``h = o * c / max(n, 1e-6)`` (the
+    true, unstabilized h is invariant to m — c and n carry the same
+    ``exp(-m)`` factor);
+  * **per-head block-diagonal recurrence**: R is (H, dh, 4dh), one block
+    per head, which is exactly cell_scan's head-parametric ``u``.
+
+So the carried state is (h, c, n, m) — ``num_states=3`` — and this module
+supplies the cell's pointwise forward plus the hand-derived reverse (the
+stabilizer max and the normalizer division both have simple local VJPs,
+with the max subgradient routed to the selected branch exactly as
+autodiff-of-scan does). Everything else — the persistent-scan pallas
+kernels with R resident across steps, the scalar-prefetched (T, nk)
+schedule-id gathers, the f32 VMEM dR accumulation, the XLA two-pass scan
+impl — is cell_scan's shared machinery, so forward AND backward recurrent
+matmuls run at (1-p) FLOPs here too.
+
+Gate layout: ``xg`` rows are (i, f, z, o) per head — the layout
+``models/xlstm.py`` produces from ``w_gates`` via
+``x_gates.reshape(B, H, 4*dh)``. The RH mask is over the per-head dh axis
+and shared across heads (compacted matmul shapes stay static across
+heads). Serving handoff: the returned final (h, c, n, m) is exactly the
+(s_h, s_c, s_n, s_m) layout of ``xlstm.init_state`` — fused-trained
+prefill state feeds ``slstm_step`` decode directly, stabilizer included.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.cell_scan import CellSpec, cell_scan
+
+_EPS = 1e-6      # normalizer floor, matches models/xlstm.py slstm_step
+
+
+def _pointwise_fwd(gates, states):
+    """Exponential-gating sLSTM update. gates order (i, f, z, o) per head."""
+    c, n, m = states
+    gi, gf, gz, go = jnp.split(gates, 4, axis=-1)
+    lf = jax.nn.log_sigmoid(gf)
+    m_new = jnp.maximum(lf + m, gi)                  # stabilizer
+    i = jnp.exp(gi - m_new)
+    f = jnp.exp(lf + m - m_new)
+    z = jnp.tanh(gz)
+    o = jax.nn.sigmoid(go)
+    c_new = f * c + i * z
+    n_new = f * n + i
+    h_new = o * (c_new / jnp.maximum(n_new, _EPS))
+    return h_new, (c_new, n_new, m_new)
+
+
+def _pointwise_bwd(gates, states_prev, states_new, dh, dstates):
+    """Reverse of _pointwise_fwd from pre-activation gates + state seqs.
+
+    dstates carries (dc, dn, dm) from step t+1; dh is the total dL/dh_t.
+    The stabilizer max routes its subgradient to the selected branch (the
+    forget path where lf + m_prev >= gi, else the input gate) — ties are
+    measure-zero with continuous inputs, matching autodiff of the scan.
+    """
+    c_prev, n_prev, m_prev = states_prev
+    c, n, m = states_new                             # m == m_new
+    dc_in, dn_in, dm_in = dstates
+    gi, gf, gz, go = jnp.split(gates, 4, axis=-1)
+    lf = jax.nn.log_sigmoid(gf)
+    i = jnp.exp(gi - m)
+    f = jnp.exp(lf + m_prev - m)
+    z = jnp.tanh(gz)
+    o = jax.nn.sigmoid(go)
+    inv = 1.0 / jnp.maximum(n, _EPS)
+    do = dh * c * inv
+    dc_t = dc_in + dh * o * inv
+    # d h / d n flows only where the floor is not active.
+    dn_t = dn_in - jnp.where(n > _EPS, dh * o * c * inv * inv, 0.0)
+    df = dc_t * c_prev + dn_t * n_prev
+    di = dc_t * z + dn_t
+    dz = dc_t * i
+    # i and f both divide by exp(m_new): total into the stabilizer, then
+    # routed through the max to its selected branch.
+    dm_t = dm_in - di * i - df * f
+    sel = (lf + m_prev) >= gi
+    dgi = di * i + jnp.where(sel, 0.0, dm_t)
+    dlf = df * f + jnp.where(sel, dm_t, 0.0)
+    dm_prev = df * f + jnp.where(sel, dm_t, 0.0)
+    dgates = jnp.concatenate([
+        dgi,
+        dlf * jax.nn.sigmoid(-gf),                   # d log_sigmoid
+        dz * (1.0 - z * z),
+        do * o * (1.0 - o),
+    ], axis=-1)
+    return dgates, (dc_t * f, dn_t * f, dm_prev)
+
+
+SLSTM_CELL = CellSpec(name="slstm", num_states=3,
+                      pointwise_fwd=_pointwise_fwd,
+                      pointwise_bwd=_pointwise_bwd)
+
+
+def slstm_scan(xg: jax.Array, r: jax.Array, h0: jax.Array, c0: jax.Array,
+               n0: jax.Array, m0: jax.Array, *,
+               keep_blocks: Optional[jax.Array] = None,
+               dense_mask: Optional[jax.Array] = None,
+               block_size: int = 1,
+               scale: float = 1.0,
+               impl: str = "pallas",
+               interpret: Optional[bool] = None):
+    """Run the full sLSTM time recurrence in one fused pass.
+
+    xg: (T, B, H, 4dh) precomputed non-recurrent gate inputs
+    ``x_t @ W + b`` in (i, f, z, o)-per-head layout (Phase A, bias folded
+    in); r: (H, dh, 4dh) per-head block-diagonal recurrent weights;
+    h0/c0/n0/m0: (B, H, dh) initial hidden/cell/normalizer/stabilizer
+    (fresh start: zeros, zeros, zeros, -1e30). RH dropout over the dh
+    axis, shared across heads: ``keep_blocks`` (T|1, nk) structured ids
+    table OR ``dense_mask`` (T|1, B, 1|H, dh), with inverted-dropout
+    ``scale``; a leading 1 means FIXED. Returns
+    ``(hs (T, B, H, dh), (h_fin, (c_fin, n_fin, m_fin)))``, differentiable
+    w.r.t. (xg, r, h0, c0, n0, m0) through the fused reverse-time
+    backward.
+    """
+    return cell_scan(xg, r, h0, (c0, n0, m0), cell=SLSTM_CELL,
+                     keep_blocks=keep_blocks, dense_mask=dense_mask,
+                     block_size=block_size, scale=scale, impl=impl,
+                     interpret=interpret)

@@ -54,11 +54,12 @@ class XLSTMConfig:
     # recurrent engine for the sLSTM time scan: "scheduled" samples the RH
     # mask schedule pre-scan (rows threaded as scan xs — no in-scan PRNG);
     # "stepwise" draws ctx.state per step. The NR projections are already
-    # time-batched outside the scan in every engine. "fused" is accepted
-    # for CLI/benchmark parity but runs the scheduled path: the sLSTM cell
-    # (exponential gating, normalizer/stabilizer state, per-head
-    # block-diagonal R) is not the kernels/lstm_scan.py recurrence — a
-    # fused sLSTM kernel would be its own kernel.
+    # time-batched outside the scan in every engine. "fused" shares
+    # scheduled's Phase A and runs Phase B — the whole T-step sLSTM
+    # recurrence (exponential gating, (c, n, m) cell/normalizer/stabilizer
+    # carries, per-head block-diagonal R) — as ONE kernels/slstm_scan.py
+    # call with R resident across steps, compact per-step RH gathers off
+    # the schedule ids table, and a fused reverse-time custom_vjp backward.
     engine: str = "scheduled"
     # §Perf (EXPERIMENTS.md xlstm iter 3): keep the sLSTM h carry replicated
     # so the per-step RH compaction gather stays local. Off by default =
@@ -350,8 +351,14 @@ def _group_rms(g, x, H, eps=1e-6):
 
 
 def mlstm_block_apply(pl, x, cfg: XLSTMConfig, drop_state=None, initial=None,
-                      rules=None):
-    """x: (B,S,D) -> (B,S,D). Returns (y, final_state)."""
+                      rules=None, return_conv=False):
+    """x: (B,S,D) -> (B,S,D). Returns (y, final_state).
+
+    ``return_conv=True`` additionally returns the depthwise-conv ring
+    buffer (the last conv_kernel-1 pre-conv ``u`` rows, zero-padded at the
+    front for short prompts) as ``(y, (final_state, conv_tail))`` — the
+    serving prefill needs it to hand off to ``decode_step``.
+    """
     B, S, D = x.shape
     H, I = cfg.n_heads, cfg.inner
     h = _rms(pl["ln"]["g"], x)
@@ -377,6 +384,12 @@ def mlstm_block_apply(pl, x, cfg: XLSTMConfig, drop_state=None, initial=None,
     out = _group_rms(pl["gn"]["g"], hcell, H) * jax.nn.silu(z)
     y = jnp.einsum("bsi,id->bsd", out, pl["w_down"],
                    preferred_element_type=jnp.float32).astype(x.dtype)
+    if return_conv:
+        K = cfg.conv_kernel
+        tail = u[:, max(0, S - (K - 1)):, :]
+        if S < K - 1:
+            tail = jnp.pad(tail, ((0, 0), (K - 1 - S, 0), (0, 0)))
+        return x + y, (state, tail)
     return x + y, state
 
 
@@ -407,22 +420,48 @@ def slstm_block_apply(pl, x, cfg: XLSTMConfig, nr_state=None, ctx=None,
         if rh_xs is None:
             rh_const = rh_sched.state(0)
 
-    def step(carry, inp):
-        h_prev, st = carry
-        xg_t, t, rh_row = inp
-        rh = None
-        if rh_sched is not None:
-            rh = rh_const if rh_row is None else rh_sched.state_for_row(rh_row)
-        elif rh_active:
-            rh = ctx.state(rh_site, (B, 1), dh, t=t)
-        h_new, st_new = slstm_step(xg_t, h_prev, st, pl["R"], rh_state=rh,
-                                   rules=rules, pin_h=cfg.pin_h_carry)
-        return (h_new, st_new), h_new
+    if cfg.engine == "fused":
+        # Phase B as ONE kernels/slstm_scan call: R resident across steps,
+        # compact per-step RH gathers off the schedule ids table, pointwise
+        # exponential-gating update + reverse-time backward fused. The
+        # kernel impl follows the RH site's spec.impl ("pallas" = the
+        # persistent-scan Pallas kernel, interpret mode off TPU; "xla" =
+        # the same fused two-pass structure as lax.scans — the CPU path).
+        from repro.kernels import ops as _kops
+        kw, impl = {}, "xla"
+        if rh_sched is not None and not rh_sched.inactive:
+            impl = rh_sched.spec.impl
+            if rh_sched.structured:
+                kw = dict(keep_blocks=rh_sched.keep_blocks,
+                          block_size=rh_sched.spec.block_size,
+                          scale=rh_sched.scale)
+            else:
+                kw = dict(dense_mask=rh_sched.dense_mask,
+                          scale=rh_sched.scale)
+        xgh = xg.transpose(1, 0, 2).reshape(S, B, H, 4 * dh)
+        hs, (hf, stf) = _kops.slstm_scan(xgh, pl["R"], h0, *st0,
+                                         impl=impl, **kw)
+        hs = hs.transpose(1, 0, 2, 3)
+    else:
+        def step(carry, inp):
+            h_prev, st = carry
+            xg_t, t, rh_row = inp
+            rh = None
+            if rh_sched is not None:
+                rh = (rh_const if rh_row is None
+                      else rh_sched.state_for_row(rh_row))
+            elif rh_active:
+                rh = ctx.state(rh_site, (B, 1), dh, t=t)
+            h_new, st_new = slstm_step(xg_t, h_prev, st, pl["R"],
+                                       rh_state=rh, rules=rules,
+                                       pin_h=cfg.pin_h_carry)
+            return (h_new, st_new), h_new
 
-    (hf, stf), hs = jax.lax.scan(step, (h0, st0),
-                                 (xg.transpose(1, 0, 2),
-                                  step0 + jnp.arange(S), rh_xs))
-    hs = hs.transpose(1, 0, 2, 3).reshape(B, S, D).astype(x.dtype)
+        (hf, stf), hs = jax.lax.scan(step, (h0, st0),
+                                     (xg.transpose(1, 0, 2),
+                                      step0 + jnp.arange(S), rh_xs))
+        hs = hs.transpose(1, 0, 2, 3)
+    hs = hs.reshape(B, S, D).astype(x.dtype)
     out = _group_rms(pl["gn"]["g"], hs, H)
     x = x + out
     # gated FFN (pf 4/3)
@@ -486,6 +525,63 @@ def forward(params, tokens, cfg: XLSTMConfig, *, rules=None, ctx=None):
 
 def _finish(params, x, cfg):
     return _rms(params["ln_f"]["g"], x)
+
+
+def prefill(params, tokens, cfg: XLSTMConfig, *, rules=None):
+    """Teacher-forced pass that also fills the recurrent decode state.
+
+    Runs the same eval-mode block stack as ``forward`` but threads every
+    block's final recurrent state into the ``init_state`` serving layout:
+    mLSTM (C, n, m) + the depthwise-conv ring buffer, sLSTM (h, c, n, m)
+    **including the exponential-gating stabilizer ``m``** — so
+    ``decode_step`` continues exactly where the prompt left off (the
+    recurrent long_500k path; fused-trained params hand off through here).
+    Returns ``(feats, state)``.
+
+    The block traversal mirrors ``forward`` and must stay in lockstep
+    with it (same group loop / trailing-mLSTM bookkeeping); dropout is
+    off here (eval ctx), which is why the per-group rh_site naming and
+    nr states of ``forward`` are not threaded through.
+    """
+    ctx = cfg.plan.bind(None)                       # eval: dropout off
+    B = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+    x = shard_act(x, ("batch", "seq", "embed_act"), rules)
+    kinds = cfg.layer_kinds
+    n_groups = kinds.count("s")
+    per_group = cfg.slstm_every - 1
+    state = init_state(cfg, B)
+
+    def m_scan(x, blocks, lo, hi):
+        def body(x, pl_):
+            y, (st, conv) = mlstm_block_apply(pl_, x, cfg, rules=rules,
+                                              return_conv=True)
+            return y, (st, conv)
+        x, ((C, n, m), conv) = jax.lax.scan(body, x, blocks)
+        state["m_C"] = state["m_C"].at[lo:hi].set(C.astype(state["m_C"].dtype))
+        state["m_n"] = state["m_n"].at[lo:hi].set(n.astype(state["m_n"].dtype))
+        state["m_m"] = state["m_m"].at[lo:hi].set(m.astype(state["m_m"].dtype))
+        state["m_conv"] = state["m_conv"].at[lo:hi].set(
+            conv.astype(state["m_conv"].dtype))
+        return x
+
+    mt, st_p = params["mlstm"], params.get("slstm")
+    mi = 0
+    for g in range(n_groups):
+        if per_group:      # slstm_every=1 -> all-sLSTM, no mLSTM sub-stack
+            grp = jax.tree.map(lambda a: a[mi:mi + per_group], mt)
+            x = m_scan(x, grp, mi, mi + per_group)
+        sl = jax.tree.map(lambda a: a[g], st_p)
+        x, (hf, (cf, nf, mf)) = slstm_block_apply(sl, x, cfg, ctx=ctx,
+                                                  rules=rules)
+        for key, v in (("s_h", hf), ("s_c", cf), ("s_n", nf), ("s_m", mf)):
+            state[key] = state[key].at[g].set(v.astype(state[key].dtype))
+        mi += per_group
+    n_m = kinds.count("m")
+    if mi < n_m:
+        grp = jax.tree.map(lambda a: a[mi:], mt)
+        x = m_scan(x, grp, mi, n_m)
+    return _finish(params, x, cfg), state
 
 
 def lm_logits(params, feats):

@@ -25,10 +25,19 @@ Contract, asserted here:
     and a jitted full train step (value_and_grad) runs finite on each arch
     under the fused engine.
 """
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+try:                     # property tests ride the importorskip convention:
+    import hypothesis    # absent hypothesis skips them, never the module
+    from hypothesis import given, settings
+    from hypothesis import strategies as hst
+except ImportError:      # pragma: no cover
+    hypothesis = None
 
 from repro.core import lstm as lstm_mod
 from repro.core import masks, sparse_matmul as sm
@@ -434,6 +443,268 @@ class TestFusedTrainStep:
                                 engine="fused")
         tok = jax.random.randint(KEY, (2, 16), 0, 50)
         self._smoke("xlstm", cfg, {"tokens": tok, "labels": tok})
+
+
+class TestSLSTMBlockEquivalence:
+    """xLSTM sLSTM block: the fused kernels/slstm_scan path == the
+    scheduled/stepwise scans, forward AND gradients, on every case —
+    the stabilizer (m), normalizer (n) and per-head block-diagonal R all
+    ride through the cell-parametric fused machinery."""
+
+    def _setup(self, heads=4, dh=8, B=3, S=9):
+        cfg = xlstm.XLSTMConfig(num_layers=1, d_model=heads * dh,
+                                n_heads=heads, slstm_every=1)
+        sl = jax.tree.map(lambda a: a[0],
+                          strip(xlstm.init_slstm_block(KEY, cfg, 1)))
+        x = jax.random.normal(jax.random.fold_in(KEY, 77),
+                              (B, S, cfg.d_model)) * 0.5
+        return cfg, sl, x
+
+    def _run(self, cfg, sl, x, ctx, engine):
+        cfg_e = dataclasses.replace(cfg, engine=engine)
+        y, (hf, stf) = xlstm.slstm_block_apply(sl, x, cfg_e, ctx=ctx,
+                                               rh_site="rh")
+        return y, hf, stf
+
+    @pytest.mark.parametrize("case", CASES)
+    def test_forward_and_state(self, case):
+        cfg, sl, x = self._setup()
+        plan = DropoutPlan.case(case, 0.5, block_size=_bs(case),
+                                sites=("rh",))
+        ctx = plan.bind(jax.random.PRNGKey(5), 3)
+        y1, h1, st1 = self._run(cfg, sl, x, ctx, "stepwise")
+        for e in ("scheduled", "fused"):
+            y, h, st = self._run(cfg, sl, x, ctx, e)
+            np.testing.assert_allclose(y, y1, rtol=2e-5, atol=2e-5,
+                                       err_msg=f"{case} {e}")
+            np.testing.assert_allclose(h, h1, rtol=2e-5, atol=2e-5)
+            for a, b, nm in zip(st, st1, ("c", "n", "m")):
+                np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5,
+                                           err_msg=f"{case} {e} {nm}")
+
+    @pytest.mark.parametrize("case", CASES)
+    def test_grads_match(self, case):
+        """d loss / d {R, w_gates, ...} through the fused custom_vjp ==
+        stepwise autodiff (the x@W path, the recurrence, and the final
+        (h, c, n, m) carry-out cotangents are all exercised)."""
+        cfg, sl, x = self._setup(S=7)
+        plan = DropoutPlan.case(case, 0.5, block_size=_bs(case),
+                                sites=("rh",))
+        ctx = plan.bind(jax.random.PRNGKey(5), 3)
+
+        def loss(p, engine):
+            y, hf, stf = self._run(cfg, p, x, ctx, engine)
+            return (y ** 2).sum() + (hf ** 2).sum() + (stf[0] ** 2).sum()
+
+        g1 = jax.grad(lambda p: loss(p, "stepwise"))(sl)
+        g3 = jax.grad(lambda p: loss(p, "fused"))(sl)
+        for (path, a), (_, b) in zip(
+                jax.tree_util.tree_flatten_with_path(g1)[0],
+                jax.tree_util.tree_flatten_with_path(g3)[0]):
+            np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4,
+                                       err_msg=f"{case} {path}")
+
+    def test_fused_pallas_impl_equivalent(self):
+        """impl="pallas" routes the sLSTM block through the persistent-scan
+        kernel (interpret mode on CPU) and agrees with xla."""
+        cfg, sl, x = self._setup()
+        ys = {}
+        for impl in ("pallas", "xla"):
+            plan = DropoutPlan.case("case3", 0.5, block_size=4, impl=impl,
+                                    sites=("rh",))
+            ctx = plan.bind(jax.random.PRNGKey(6), 1)
+            ys[impl], _, _ = self._run(cfg, sl, x, ctx, "fused")
+        np.testing.assert_allclose(ys["pallas"], ys["xla"], rtol=2e-5,
+                                   atol=2e-5)
+
+    def test_eval_mode_fused(self):
+        """No dropout (eval ctx): fused still runs the kernel and matches."""
+        cfg, sl, x = self._setup()
+        y1, h1, st1 = self._run(cfg, sl, x, None, "stepwise")
+        y3, h3, st3 = self._run(cfg, sl, x, None, "fused")
+        np.testing.assert_allclose(y1, y3, rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(st1[2], st3[2], rtol=2e-5, atol=2e-5)
+
+
+class TestFusedServingHandoff:
+    """Serving regression: params trained under engine="fused" must hand
+    off cleanly to serving/engine.py's recurrent prefill -> step path —
+    the prefill state (sLSTM (h, c, n, m) stabilizer included, mLSTM
+    (C, n, m) + conv tail) feeds decode_step and yields deterministic,
+    finite generations."""
+
+    def _train_fused(self, cfg, steps=3):
+        from repro.configs import adapters
+        lfn = adapters.loss_fn("xlstm")
+        params = strip(adapters.init_params("xlstm", KEY, cfg))
+        tok = jax.random.randint(jax.random.fold_in(KEY, 1), (2, 13),
+                                 0, cfg.vocab)
+        batch = {"tokens": tok[:, :-1], "labels": tok[:, 1:]}
+
+        @jax.jit
+        def step(p, i):
+            l, g = jax.value_and_grad(lambda q: lfn(
+                q, batch, cfg, drop_key=jax.random.fold_in(KEY, 100 + i),
+                step=i))(p)
+            return jax.tree.map(lambda a, b: a - 0.05 * b, p, g), l
+        for i in range(steps):
+            params, loss = step(params, jnp.int32(i))
+        assert bool(jnp.isfinite(loss)), "fused training diverged"
+        return params
+
+    def test_prefill_step_deterministic_finite(self):
+        from repro.configs import xlstm_1_3b
+        from repro.serving.engine import DecodeEngine
+        spec = xlstm_1_3b.SPEC
+        cfg = spec.smoke(engine="fused", num_layers=4, slstm_every=2)
+        params = self._train_fused(cfg)
+
+        prompt = jax.random.randint(jax.random.fold_in(KEY, 2), (2, 6),
+                                    0, cfg.vocab)
+        outs = []
+        for _ in range(2):                 # same prompt twice: deterministic
+            eng = DecodeEngine(spec=spec, cfg=cfg, params=params,
+                               max_seq=32, batch=2, temperature=0.0)
+            eng.prefill({"tokens": prompt})
+            # the prompt filled real state: the sLSTM stabilizer moved off
+            # its -1e30 init and every leaf is finite
+            for k, v in eng.state.items():
+                assert bool(jnp.isfinite(v).all()), k
+            assert float(eng.state["s_m"].min()) > -1e29
+            outs.append(eng.generate(prompt[:, -1:], 8, start_pos=6))
+        np.testing.assert_array_equal(outs[0], outs[1])
+        assert outs[0].shape == (2, 8)
+
+    def test_prefill_continues_forward(self):
+        """Greedy decode from the prefill state equals greedy decode read
+        off the teacher-forced forward logits (fused-trained params)."""
+        from repro.configs import xlstm_1_3b
+        from repro.serving.engine import DecodeEngine
+        spec = xlstm_1_3b.SPEC
+        cfg = spec.smoke(engine="fused", num_layers=2, slstm_every=2)
+        params = self._train_fused(cfg, steps=2)
+        tok = jax.random.randint(jax.random.fold_in(KEY, 3), (2, 7),
+                                 0, cfg.vocab)
+        feats = xlstm.forward(params, tok, cfg)
+        ref_next = np.asarray(
+            jnp.argmax(xlstm.lm_logits(params, feats)[:, -1], -1))
+        eng = DecodeEngine(spec=spec, cfg=cfg, params=params, max_seq=16,
+                           batch=2, temperature=0.0)
+        eng.prefill({"tokens": tok[:, :-1]})
+        first = eng.generate(tok[:, -1:], 1, start_pos=6)
+        np.testing.assert_array_equal(first[:, 0], ref_next)
+
+
+# ---------------------------------------------------------------------------
+# Property-based 3-engine equivalence (hypothesis). Random (T, B, H, rate,
+# block, case) draws must give allclose forwards AND grads on scheduled /
+# stepwise / fused, for both the LSTM stack and the sLSTM block. The draw
+# pools are small sets so jit compilation stays bounded; the checks
+# themselves are exact-shape-generic.
+# ---------------------------------------------------------------------------
+
+
+def _check_lstm_stack_engines(T, B, H, rate, block, case, seed):
+    params = lstm_mod.init_lstm_params(jax.random.PRNGKey(seed), 12, H, 2)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (T, B, 12))
+    state = lstm_mod.zero_state(2, B, H)
+    bs = block if case in ("case3", "case4") else 1
+    plan = DropoutPlan.case(case, rate, block_size=bs, sites=("nr", "rh"))
+    ctx = plan.bind(jax.random.PRNGKey(seed + 2), seed % 7)
+
+    def run(engine):
+        return lstm_mod.lstm_stack(params, x, state, ctx=ctx, engine=engine)
+
+    y1, s1 = run("stepwise")
+    for e in ("scheduled", "fused"):
+        y, s = run(e)
+        np.testing.assert_allclose(y, y1, rtol=2e-5, atol=2e-5, err_msg=e)
+        np.testing.assert_allclose(s.c, s1.c, rtol=2e-5, atol=2e-5)
+
+    def loss(p, engine):
+        ys, st = lstm_mod.lstm_stack(p, x, state, ctx=ctx, engine=engine)
+        return (ys ** 2).sum() + (st.h ** 2).sum() + (st.c ** 2).sum()
+
+    g1 = jax.grad(lambda p: loss(p, "stepwise"))(params)
+    for e in ("scheduled", "fused"):
+        g = jax.grad(lambda p: loss(p, e))(params)
+        for l in range(len(params)):
+            for k in ("W", "U", "b"):
+                np.testing.assert_allclose(g[l][k], g1[l][k], rtol=2e-4,
+                                           atol=2e-4, err_msg=f"{e} {l}/{k}")
+
+
+def _check_slstm_block_engines(T, B, heads, dh, rate, block, case, seed):
+    cfg = xlstm.XLSTMConfig(num_layers=1, d_model=heads * dh, n_heads=heads,
+                            slstm_every=1)
+    sl = jax.tree.map(lambda a: a[0], strip(xlstm.init_slstm_block(
+        jax.random.PRNGKey(seed), cfg, 1)))
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1),
+                          (B, T, cfg.d_model)) * 0.5
+    bs = block if case in ("case3", "case4") else 1
+    plan = DropoutPlan.case(case, rate, block_size=bs, sites=("rh",))
+    ctx = plan.bind(jax.random.PRNGKey(seed + 2), seed % 5)
+
+    def run(p, engine):
+        cfg_e = dataclasses.replace(cfg, engine=engine)
+        return xlstm.slstm_block_apply(p, x, cfg_e, ctx=ctx, rh_site="rh")
+
+    y1, (h1, st1) = run(sl, "stepwise")
+    for e in ("scheduled", "fused"):
+        y, (h, st) = run(sl, e)
+        np.testing.assert_allclose(y, y1, rtol=2e-5, atol=2e-5, err_msg=e)
+        for a, b in zip(st, st1):
+            np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5)
+
+    def loss(p, engine):
+        y, (hf, stf) = run(p, engine)
+        return (y ** 2).sum() + (hf ** 2).sum() + (stf[0] ** 2).sum()
+
+    g1 = jax.grad(lambda p: loss(p, "stepwise"))(sl)
+    for e in ("scheduled", "fused"):
+        g = jax.grad(lambda p: loss(p, e))(sl)
+        for (path, a), (_, b) in zip(
+                jax.tree_util.tree_flatten_with_path(g)[0],
+                jax.tree_util.tree_flatten_with_path(g1)[0]):
+            np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4,
+                                       err_msg=f"{e} {path}")
+
+
+def test_engines_equiv_grid():
+    """Deterministic mini-grid through the same checks the hypothesis
+    properties run (coverage even where hypothesis is not installed)."""
+    _check_lstm_stack_engines(T=6, B=3, H=16, rate=0.5, block=4,
+                              case="case3", seed=11)
+    _check_slstm_block_engines(T=5, B=2, heads=2, dh=16, rate=0.5, block=4,
+                               case="case3", seed=12)
+
+
+if hypothesis is not None:
+    _ENGINE_DRAW = dict(
+        rate=hst.sampled_from((0.25, 0.5, 0.65)),
+        block=hst.sampled_from((1, 4, 8)),
+        case=hst.sampled_from(CASES),
+        seed=hst.integers(0, 2 ** 16),
+    )
+
+    class TestEngineProperties:
+        @settings(max_examples=6, deadline=None)
+        @given(T=hst.sampled_from((2, 5, 9)), B=hst.sampled_from((1, 4)),
+               H=hst.sampled_from((16, 24)), **_ENGINE_DRAW)
+        def test_lstm_stack(self, T, B, H, rate, block, case, seed):
+            _check_lstm_stack_engines(T, B, H, rate, block, case, seed)
+
+        @settings(max_examples=6, deadline=None)
+        @given(T=hst.sampled_from((2, 6)), B=hst.sampled_from((1, 3)),
+               heads=hst.sampled_from((1, 4)), dh=hst.sampled_from((8, 16)),
+               **_ENGINE_DRAW)
+        def test_slstm_block(self, T, B, heads, dh, rate, block, case, seed):
+            _check_slstm_block_engines(T, B, heads, dh, rate, block, case,
+                                       seed)
+else:                                          # pragma: no cover
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_engine_properties():
+        pass
 
 
 @pytest.mark.parametrize("hyp", [None])

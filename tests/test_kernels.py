@@ -271,6 +271,174 @@ class TestLSTMScan:
                           block_size=4)
 
 
+class TestSLSTMScan:
+    """Fused persistent-scan sLSTM vs the per-step jnp oracle.
+
+    Mirrors TestLSTMScan over the xLSTM cell (exponential gating, (c, n, m)
+    normalizer/stabilizer carries, per-head block-diagonal R): RH mode
+    (structured / random-dense / off) x time pattern (per-step / FIXED
+    one-row) x impl (pallas interpret / xla) x dtype, forward and gradients
+    through the custom_vjp (d xg/R/h0/c0/n0/m0 vs autodiff-of-oracle).
+    """
+
+    def _setup(self, T, B, H, dh, dtype=jnp.float32, fresh=False):
+        xg = mk((T, B, H, 4 * dh), dtype, 41) * 0.3
+        r = mk((H, dh, 4 * dh), dtype, 42) * 0.2
+        if fresh:          # canonical start: zeros + -1e30 stabilizer
+            z = jnp.zeros((B, H, dh), dtype)
+            return xg, r, z, z, z, jnp.full((B, H, dh), -1e30, dtype)
+        h0 = mk((B, H, dh), dtype, 43) * 0.5
+        c0 = mk((B, H, dh), dtype, 44) * 0.5
+        n0 = jnp.abs(mk((B, H, dh), dtype, 45)) + 0.5   # mid-stream handoff
+        m0 = mk((B, H, dh), dtype, 46) * 0.3
+        return xg, r, h0, c0, n0, m0
+
+    def _kb(self, T, dh, bs, rate, seed=0):
+        return jnp.stack([masks.sample_keep_blocks(
+            jax.random.fold_in(KEY, seed + t), dh, rate, bs)
+            for t in range(T)])
+
+    def _check(self, kw, T=5, B=2, H=3, dh=16, dtype=jnp.float32,
+               grads=True, fresh=False):
+        args = self._setup(T, B, H, dh, dtype, fresh=fresh)
+        ys_ref, (hf_ref, (cf_ref, nf_ref, mf_ref)) = ref.slstm_scan_ref(
+            *args, **kw)
+        for impl in ("xla", "pallas"):
+            ys, (hf, (cf, nf, mf)) = ops.slstm_scan(*args, impl=impl, **kw)
+            np.testing.assert_allclose(
+                np.asarray(ys, np.float32), np.asarray(ys_ref, np.float32),
+                err_msg=f"{impl} ys", **TOL[dtype])
+            for a, b, nm in ((cf, cf_ref, "c"), (nf, nf_ref, "n"),
+                             (mf, mf_ref, "m")):
+                np.testing.assert_allclose(
+                    np.asarray(a, np.float32), np.asarray(b, np.float32),
+                    err_msg=f"{impl} {nm}_fin", **TOL[dtype])
+            if not grads:
+                continue
+
+            def loss(xg, r, h0, c0, n0, m0, impl=impl):
+                ys, (hf, (cf, nf, mf)) = ops.slstm_scan(
+                    xg, r, h0, c0, n0, m0, impl=impl, **kw)
+                return ((ys ** 2).sum() + (hf * cf).sum()
+                        + 0.1 * nf.sum() + 0.01 * mf.sum())
+
+            def loss_ref(xg, r, h0, c0, n0, m0):
+                ys, (hf, (cf, nf, mf)) = ref.slstm_scan_ref(
+                    xg, r, h0, c0, n0, m0, **kw)
+                return ((ys ** 2).sum() + (hf * cf).sum()
+                        + 0.1 * nf.sum() + 0.01 * mf.sum())
+
+            g = jax.grad(loss, argnums=tuple(range(6)))(*args)
+            gr = jax.grad(loss_ref, argnums=tuple(range(6)))(*args)
+            for a, b, nm in zip(g, gr, ("xg", "r", "h0", "c0", "n0", "m0")):
+                np.testing.assert_allclose(
+                    np.asarray(a, np.float32), np.asarray(b, np.float32),
+                    rtol=2e-4, atol=2e-4, err_msg=f"{impl} d{nm}")
+
+    @pytest.mark.parametrize("T,B,H,dh,bs,rate", [
+        (5, 2, 3, 16, 4, 0.5),
+        (7, 2, 2, 32, 8, 0.25),
+        (3, 3, 4, 24, 1, 0.5),         # paper-faithful unit columns
+        (4, 1, 2, 16, 4, 0.65),        # B=1 decode-like
+    ])
+    def test_structured(self, T, B, H, dh, bs, rate):
+        kb = self._kb(T, dh, bs, rate)
+        self._check(dict(keep_blocks=kb, block_size=bs,
+                         scale=masks.inverted_scale(rate, dh, bs)),
+                    T=T, B=B, H=H, dh=dh)
+
+    def test_structured_fixed_one_row(self):
+        """A (1, nk) FIXED table == the same row broadcast to all T steps."""
+        T, B, H, dh, bs = 6, 2, 3, 16, 4
+        kb = self._kb(T, dh, bs, 0.5)
+        kw = dict(block_size=bs, scale=2.0)
+        for impl in ("xla", "pallas"):
+            y1, _ = ops.slstm_scan(*self._setup(T, B, H, dh), impl=impl,
+                                   keep_blocks=kb[:1], **kw)
+            y2, _ = ops.slstm_scan(*self._setup(T, B, H, dh), impl=impl,
+                                   keep_blocks=jnp.broadcast_to(
+                                       kb[:1], (T, kb.shape[1])), **kw)
+            np.testing.assert_allclose(y1, y2, rtol=1e-6, atol=1e-6,
+                                       err_msg=impl)
+        self._check(dict(keep_blocks=kb[:1], block_size=bs, scale=2.0),
+                    T=T, B=B, H=H, dh=dh)
+
+    @pytest.mark.parametrize("fixed", [False, True])
+    def test_dense_mask(self, fixed):
+        """Case-I/II masks: (rows, B, 1, dh) shared across heads."""
+        T, B, H, dh = 5, 2, 3, 16
+        dm = (jax.random.uniform(jax.random.fold_in(KEY, 50),
+                                 (1 if fixed else T, B, 1, dh)) > 0.5
+              ).astype(jnp.float32)
+        self._check(dict(dense_mask=dm, scale=2.0), T=T, B=B, H=H, dh=dh)
+
+    def test_no_dropout(self):
+        self._check({})
+
+    def test_fresh_start(self):
+        """Canonical (zeros, -1e30) init: the step-0 forget gate underflows
+        to exactly 0 and the backward must stay finite (no inf*0)."""
+        kb = self._kb(5, 16, 4, 0.5)
+        self._check(dict(keep_blocks=kb, block_size=4, scale=2.0),
+                    fresh=True)
+
+    def test_bf16(self):
+        kb = self._kb(4, 16, 4, 0.5)
+        self._check(dict(keep_blocks=kb, block_size=4, scale=2.0),
+                    T=4, B=2, H=2, dh=16, dtype=jnp.bfloat16, grads=False)
+
+    def test_mixed_dtype_grad_dtypes(self):
+        """bf16 xg with f32 states (the compute_dtype=bf16 model layout):
+        every cotangent carries its primal's dtype — dxg must not widen
+        to f32 through the custom_vjp."""
+        T, B, H, dh = 3, 2, 2, 16
+        xg = mk((T, B, H, 4 * dh), jnp.bfloat16, 41) * 0.3
+        r = mk((H, dh, 4 * dh), jnp.float32, 42) * 0.2
+        z = jnp.zeros((B, H, dh), jnp.float32)
+        m0 = jnp.full((B, H, dh), -1e30, jnp.float32)
+        for impl in ("xla", "pallas"):
+            g = jax.grad(
+                lambda *a: ops.slstm_scan(*a, impl=impl)[0]
+                .astype(jnp.float32).sum(), argnums=(0, 1, 2, 3))(
+                    xg, r, z, z, z, m0)
+            assert g[0].dtype == jnp.bfloat16, impl
+            assert all(gi.dtype == jnp.float32 for gi in g[1:]), impl
+
+    def test_per_step_masks_differ(self):
+        """Each step really gathers its own kept blocks (not step 0's)."""
+        T, B, H, dh, bs = 4, 2, 2, 32, 8
+        args = self._setup(T, B, H, dh)
+        kb = self._kb(T, dh, bs, 0.5, seed=100)
+        kw = dict(block_size=bs, scale=2.0)
+        for impl in ("xla", "pallas"):
+            y, _ = ops.slstm_scan(*args, impl=impl, keep_blocks=kb, **kw)
+            y0, _ = ops.slstm_scan(*args, impl=impl,
+                                   keep_blocks=jnp.broadcast_to(
+                                       kb[:1], kb.shape), **kw)
+            assert not np.allclose(np.asarray(y), np.asarray(y0)), impl
+
+    def test_stabilizer_extreme_gates(self):
+        """Huge gate pre-activations must not overflow (the m stabilizer's
+        whole job); h stays finite and |h| bounded by the output gate."""
+        T, B, H, dh = 6, 2, 2, 8
+        xg = jnp.full((T, B, H, 4 * dh), 40.0)
+        r = mk((H, dh, 4 * dh), jnp.float32, 60) * 0.1
+        z = jnp.zeros((B, H, dh))
+        for impl in ("xla", "pallas"):
+            ys, (hf, (cf, nf, mf)) = ops.slstm_scan(
+                xg, r, z, z, z, jnp.full((B, H, dh), -1e30), impl=impl)
+            assert bool(jnp.isfinite(ys).all()), impl
+            assert float(jnp.abs(ys).max()) <= 1.0 + 1e-5, impl
+
+    def test_both_masks_raises(self):
+        args = self._setup(3, 2, 2, 16)
+        kb = self._kb(3, 16, 4, 0.5)
+        dm = jnp.ones((3, 2, 1, 16))
+        with pytest.raises(ValueError):
+            ops.slstm_scan(*args, keep_blocks=kb, dense_mask=dm,
+                           block_size=4)
+
+
 class TestLSTMPointwise:
     @pytest.mark.parametrize("B,H", [(4, 32), (8, 650), (128, 512), (3, 17)])
     @pytest.mark.parametrize("fb", [0.0, 1.0])

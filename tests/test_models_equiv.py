@@ -139,3 +139,36 @@ class TestXLSTMModel:
         for t in range(16):
             lg, state = X.decode_step(p, cfg, state, tk[:, t:t + 1], t)
         np.testing.assert_allclose(lg[:, 0], logits_f[:, -1], atol=1e-4)
+
+    def test_prefill_matches_forward(self):
+        """prefill fills the full recurrent serving state — mLSTM (C, n, m)
+        + conv ring buffer, sLSTM (h, c, n, m) stabilizer included — so
+        decode from it continues the teacher-forced forward exactly."""
+        cfg = X.XLSTMConfig(num_layers=4, d_model=32, n_heads=4, vocab=50,
+                            chunk=4, slstm_every=4)
+        p = strip(X.init_params(KEY, cfg))
+        tk = jax.random.randint(KEY, (2, 11), 0, 50)
+        logits_f = X.lm_logits(p, X.forward(p, tk, cfg))
+
+        feats_p, state = X.prefill(p, tk[:, :5], cfg)
+        np.testing.assert_allclose(
+            X.lm_logits(p, feats_p), logits_f[:, :5], atol=1e-4)
+        outs = []
+        for t in range(5, 11):
+            lg, state = X.decode_step(p, cfg, state, tk[:, t:t + 1], t)
+            outs.append(lg)
+        np.testing.assert_allclose(jnp.concatenate(outs, 1),
+                                   logits_f[:, 5:11], atol=1e-4)
+
+    def test_prefill_short_prompt_conv_pad(self):
+        """Prompts shorter than conv_kernel-1 zero-pad the conv ring buffer
+        (same as decode-from-scratch) instead of mis-shaping it."""
+        cfg = X.XLSTMConfig(num_layers=2, d_model=32, n_heads=4, vocab=50,
+                            chunk=4, slstm_every=2, conv_kernel=4)
+        p = strip(X.init_params(KEY, cfg))
+        tk = jax.random.randint(KEY, (2, 8), 0, 50)
+        logits_f = X.lm_logits(p, X.forward(p, tk, cfg))
+        _, state = X.prefill(p, tk[:, :2], cfg)       # S=2 < K-1=3
+        for t in range(2, 8):
+            lg, state = X.decode_step(p, cfg, state, tk[:, t:t + 1], t)
+        np.testing.assert_allclose(lg[:, 0], logits_f[:, -1], atol=1e-4)
