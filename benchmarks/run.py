@@ -33,9 +33,20 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     if args.snapshot:
-        from benchmarks import engines
+        from benchmarks import engines, serving
         path = os.path.join(_REPO_ROOT, f"BENCH_{args.snapshot}.json")
-        engines.snapshot(args.snapshot, path, quick=args.quick)
+        snap = engines.snapshot(args.snapshot, path, quick=args.quick)
+        # serving tokens/sec matrix rides the same snapshot (PR 6): the CI
+        # serving gate reads the ``serving_quick`` section the same way the
+        # training gate reads ``quick_cells``
+        print("\nserving matrix:")
+        snap["serving"] = serving.run_matrix(quick=args.quick)
+        if not args.quick:
+            print("\nserving quick matrix (CI gate baseline):")
+            snap["serving_quick"] = serving.run_matrix(quick=True)
+        with open(path, "w") as f:
+            json.dump(snap, f, indent=1, default=float)
+        print(f"\nsnapshot {args.snapshot} (+serving) -> {path}")
         return
 
     from benchmarks import fig3_curve, table1_ptb, table2_nmt, table3_ner

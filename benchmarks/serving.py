@@ -1,0 +1,321 @@
+"""Serving benchmark: tokens/sec matrix for the continuous-batching engine.
+
+Two measured quantities, both PAIRED so they port across machines:
+
+  * ``device_vs_python`` — the on-device ``lax.while_loop`` chunk decode
+    (one dispatch per chunk) against the pre-PR6 per-token host loop (one
+    dispatch + one host sync per token), same params/state/shapes, stepped
+    in interleaved rounds; the ratio is the median of per-round paired
+    ratios (host-load drift hits both arms of a round equally). This is
+    the wall-clock value of moving the decode loop onto the device.
+  * ``cont_vs_rect`` — the SAME ragged-arrival trace served through the
+    continuous-batching scheduler (evict at chunk boundary, refill the
+    slot immediately) and through the rectangular "batch" policy (refill
+    only when every slot has drained). Both arms emit the same tokens
+    (greedy, per-slot independence), so the time ratio IS the tokens/sec
+    ratio. The DISPATCH ratio (rect chunks / cont chunks) is recorded too:
+    it is fully deterministic, which is what the CI gate leans on.
+
+    PYTHONPATH=src python -m benchmarks.serving [--quick] [--no-check]
+
+``--quick`` doubles as the CI serving gate: absolute floors first — the
+device loop must hold >= 2x over the host loop on at least one recurrent
+arch (the acceptance bar; recurrent O(1)-state archs are where the
+500k-token serving path lives), and continuous batching must not dispatch
+more chunks than the rectangular policy on the ragged trace — then drift
+checks against the ``serving_quick`` section of the latest committed
+``BENCH_*.json`` (cells absent from the baseline are skipped, so new
+archs never fail the gate).
+"""
+from __future__ import annotations
+
+import argparse
+import gc
+import json
+import os
+import sys
+import time
+
+import jax
+import numpy as np
+
+RECURRENT_KINDS = ("xlstm", "ssm")
+
+
+# ---------------------------------------------------------------------------
+# cells: arch x batch x prompt/gen mix
+# ---------------------------------------------------------------------------
+
+
+def _cells(quick: bool):
+    """-> {name: (arch, cfg_overrides, batch, prompt_len, gen)}."""
+    tiny_xlstm = dict(num_layers=2, slstm_every=2, d_model=32, vocab=64,
+                      n_heads=2)
+    if quick:
+        return {
+            "xlstm_b4": ("xlstm-1.3b", tiny_xlstm, 4, 8, 32),
+            "zamba2_b4": ("zamba2-1.2b", dict(num_layers=4), 4, 8, 32),
+            "qwen3_b4": ("qwen3-8b", {}, 4, 8, 32),
+        }
+    return {
+        "xlstm_b1": ("xlstm-1.3b", {}, 1, 16, 64),
+        "xlstm_b8": ("xlstm-1.3b", {}, 8, 16, 64),
+        "zamba2_b8": ("zamba2-1.2b", {}, 8, 16, 64),
+        "qwen3_b8": ("qwen3-8b", {}, 8, 16, 64),
+    }
+
+
+def _build(arch: str, overrides: dict, batch: int, max_seq: int,
+           chunk: int = 16):
+    from repro import configs
+    from repro.configs import adapters
+    from repro.distributed.sharding import strip
+    from repro.serving import DecodeEngine
+
+    spec = configs.get_arch(arch)
+    cfg = spec.smoke(**overrides)
+    params = strip(adapters.init_params(spec.kind, jax.random.PRNGKey(0),
+                                        cfg))
+    eng = DecodeEngine(spec=spec, cfg=cfg, params=params, max_seq=max_seq,
+                       batch=batch, temperature=0.0, chunk=chunk)
+    return spec, cfg, eng
+
+
+# ---------------------------------------------------------------------------
+# device loop vs per-token host loop (paired)
+# ---------------------------------------------------------------------------
+
+
+def time_loops(arch: str, overrides: dict, batch: int, plen: int, gen: int,
+               rounds: int):
+    """One paired cell: generate ``gen`` tokens with each loop per round."""
+    import jax.numpy as jnp
+
+    spec, cfg, eng = _build(arch, overrides, batch, plen + gen)
+    vocab = getattr(cfg, "vocab", 128)
+    tok0 = jnp.asarray(
+        np.random.default_rng(0).integers(3, vocab, (batch, 1)), jnp.int32)
+
+    def run(loop):
+        t0 = time.time()
+        fn = eng.generate if loop == "device" else eng.generate_python
+        out = fn(tok0, gen, start_pos=0)
+        assert out.shape == (batch, gen)
+        return time.time() - t0
+
+    for loop in ("python", "device"):           # compile both arms
+        run(loop)
+    times = {"device": [], "python": []}
+    for _ in range(rounds):
+        for loop in ("python", "device"):
+            times[loop].append(run(loop))
+    dev = float(np.min(times["device"]))
+    py = float(np.min(times["python"]))
+    return {
+        "device_ms": dev * 1e3,
+        "python_ms": py * 1e3,
+        "device_toks_per_s": batch * gen / dev,
+        "python_toks_per_s": batch * gen / py,
+        "device_vs_python": float(np.median(
+            [p / d for p, d in zip(times["python"], times["device"])])),
+        "kind": spec.kind,
+    }
+
+
+# ---------------------------------------------------------------------------
+# ragged-arrival trace: continuous vs rectangular refill (paired)
+# ---------------------------------------------------------------------------
+
+
+def _trace(n: int, vocab: int, seed: int = 0):
+    """Ragged arrivals with a long/short budget mix — the workload
+    continuous batching exists for: under rectangular refill every short
+    request in a group idles until the group's long one drains."""
+    rng = np.random.default_rng(seed)
+    from repro.serving import Request
+    return [Request(rid=i,
+                    prompt=rng.integers(3, vocab, int(rng.integers(2, 11))),
+                    max_new=24 if i % 4 == 0 else 4)
+            for i in range(n)]
+
+
+def time_trace(arch: str, overrides: dict, slots: int, n_requests: int,
+               rounds: int, chunk: int = 8):
+    from repro.serving import serve
+
+    spec, cfg, eng = _build(arch, overrides, slots, 64, chunk=chunk)
+    reqs = _trace(n_requests, getattr(cfg, "vocab", 128))
+
+    def run(policy):
+        t0 = time.time()
+        outs = serve(eng, reqs, policy=policy)
+        dt = time.time() - t0
+        return dt, eng.chunks_run, sum(len(v) for v in outs.values())
+
+    run("batch")                                # compile admit/loop shapes
+    run("continuous")
+    times = {"continuous": [], "batch": []}
+    disp = {}
+    total = 0
+    for _ in range(rounds):
+        for policy in ("batch", "continuous"):
+            dt, chunks, total = run(policy)
+            times[policy].append(dt)
+            disp[policy] = chunks               # deterministic per policy
+    cont = float(np.min(times["continuous"]))
+    rect = float(np.min(times["batch"]))
+    return {
+        "requests": n_requests,
+        "slots": slots,
+        "total_tokens": total,
+        "cont_ms": cont * 1e3,
+        "rect_ms": rect * 1e3,
+        "cont_toks_per_s": total / cont,
+        "rect_toks_per_s": total / rect,
+        "cont_dispatches": disp["continuous"],
+        "rect_dispatches": disp["batch"],
+        "dispatch_ratio": disp["batch"] / disp["continuous"],
+        "cont_vs_rect": float(np.median(
+            [r / c for r, c in zip(times["batch"], times["continuous"])])),
+        "kind": spec.kind,
+    }
+
+
+# ---------------------------------------------------------------------------
+# matrix + gate
+# ---------------------------------------------------------------------------
+
+
+def run_matrix(quick: bool = False, verbose: bool = True) -> dict:
+    rounds = 3 if quick else 5
+    loops = {}
+    for name, (arch, ov, B, P, G) in _cells(quick).items():
+        row = time_loops(arch, ov, B, P, G, rounds)
+        loops[name] = row
+        if verbose:
+            print(f"{name:12s} B={B} gen={G}: device {row['device_ms']:7.1f}"
+                  f" ms ({row['device_toks_per_s']:7.0f} tok/s)  python "
+                  f"{row['python_ms']:7.1f} ms  "
+                  f"speedup {row['device_vs_python']:.2f}x")
+        jax.clear_caches()
+        gc.collect()
+    # trace cell at the default smoke size (8 layers): the decode chunk has
+    # to cost more than the admission bookkeeping for the policy comparison
+    # to measure scheduling rather than host overhead
+    traces = {"xlstm": time_trace(
+        "xlstm-1.3b", {}, slots=4, n_requests=12 if quick else 20,
+        rounds=rounds)}
+    if verbose:
+        for name, row in traces.items():
+            print(f"trace {name:6s} {row['requests']} reqs/"
+                  f"{row['slots']} slots: cont {row['cont_ms']:7.1f} ms "
+                  f"({row['cont_dispatches']} dispatches)  rect "
+                  f"{row['rect_ms']:7.1f} ms ({row['rect_dispatches']})  "
+                  f"ratio {row['cont_vs_rect']:.2f}x "
+                  f"(dispatch {row['dispatch_ratio']:.2f}x)")
+    jax.clear_caches()
+    gc.collect()
+    return {"loops": loops, "trace": traces}
+
+
+def check_floors(matrix: dict, min_recurrent_speedup: float = 2.0) -> list:
+    """Machine-portable absolute floors (the PR acceptance bar)."""
+    failures = []
+    rec = {n: r["device_vs_python"] for n, r in matrix["loops"].items()
+           if r.get("kind") in RECURRENT_KINDS}
+    if rec and max(rec.values()) < min_recurrent_speedup:
+        failures.append(
+            f"device loop < {min_recurrent_speedup}x over the per-token "
+            f"host loop on every recurrent arch: {rec}")
+    for name, row in matrix["trace"].items():
+        if row["dispatch_ratio"] <= 1.0:
+            failures.append(
+                f"trace {name}: continuous batching did not save device "
+                f"dispatches (cont {row['cont_dispatches']} vs rect "
+                f"{row['rect_dispatches']})")
+    return failures
+
+
+def check_regression(matrix: dict, baseline_path: str,
+                     tolerance: float = 1.5, quick: bool = True) -> list:
+    """Drift of the paired ratios vs the latest committed snapshot.
+
+    Quick runs compare against the snapshot's ``serving_quick`` section
+    (same geometries). A baseline predating the serving sections skips
+    with a note — the absolute floors above still gate.
+    """
+    with open(baseline_path) as f:
+        base = json.load(f)
+    sect = base.get("serving_quick" if quick else "serving")
+    if not sect:
+        print("  (baseline has no serving section — drift check skipped, "
+              "absolute floors still apply)")
+        return []
+    failures = []
+    for name, row in matrix["loops"].items():
+        b = sect.get("loops", {}).get(name)
+        if not b or "device_vs_python" not in b:
+            continue
+        drift = b["device_vs_python"] / row["device_vs_python"]
+        status = "FAIL" if drift > tolerance else "ok"
+        print(f"  gate {name:12s} [device_vs_python]: baseline "
+              f"{b['device_vs_python']:.2f}x now "
+              f"{row['device_vs_python']:.2f}x  drift {drift:.2f} "
+              f"[{status}]")
+        if drift > tolerance:
+            failures.append(
+                f"{name}: device-loop speedup fell "
+                f"{b['device_vs_python']:.2f}x -> "
+                f"{row['device_vs_python']:.2f}x (> {tolerance}x drift)")
+    for name, row in matrix["trace"].items():
+        b = sect.get("trace", {}).get(name)
+        if not b or "dispatch_ratio" not in b:
+            continue
+        # dispatch counts are deterministic: a scheduler change that makes
+        # continuous batching save fewer chunks shows up exactly here
+        drift = b["dispatch_ratio"] / row["dispatch_ratio"]
+        status = "FAIL" if drift > tolerance else "ok"
+        print(f"  gate trace {name:6s} [dispatch_ratio]: baseline "
+              f"{b['dispatch_ratio']:.2f}x now {row['dispatch_ratio']:.2f}x"
+              f"  drift {drift:.2f} [{status}]")
+        if drift > tolerance:
+            failures.append(
+                f"trace {name}: dispatch savings fell "
+                f"{b['dispatch_ratio']:.2f}x -> {row['dispatch_ratio']:.2f}x")
+    return failures
+
+
+def main(quick: bool = False, check: bool = True, out: str = "") -> dict:
+    matrix = run_matrix(quick=quick)
+    if out:
+        os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+        with open(out, "w") as f:
+            json.dump(matrix, f, indent=1, default=float)
+        print(f"serving matrix -> {out}")
+    if quick and check:
+        failures = check_floors(matrix)
+        from benchmarks import engines
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        baseline = engines.latest_baseline(root)
+        if baseline:
+            print(f"\nserving gate vs {os.path.basename(baseline)}:")
+            failures += check_regression(matrix, baseline, quick=True)
+        else:
+            print("serving gate: no BENCH_*.json baseline, floors only")
+        if failures:
+            for msg in failures:
+                print(f"SERVING REGRESSION: {msg}", file=sys.stderr)
+            sys.exit(1)
+        print("serving gate: pass")
+    return matrix
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--no-check", action="store_true",
+                    help="skip the --quick serving gate")
+    ap.add_argument("--out", default="",
+                    help="also write the matrix JSON here (CI artifact)")
+    args = ap.parse_args()
+    main(quick=args.quick, check=not args.no_check, out=args.out)

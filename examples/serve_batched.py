@@ -1,7 +1,10 @@
 """Serve a small model with batched requests through the DecodeEngine.
 
 Shows both cache kinds: a KV-cache transformer (qwen3 smoke) and a
-recurrent-state arch (xlstm smoke — the long_500k serving path).
+recurrent-state arch (xlstm smoke — the long_500k serving path), both
+prefilled through the SHARED serving/prefill helper and decoded by the
+on-device chunked loop; plus the continuous-batching scheduler on a
+ragged request trace.
 
     PYTHONPATH=src python examples/serve_batched.py
 """
@@ -11,44 +14,65 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.configs import adapters
-from repro.launch import steps as steps_mod
-from repro.launch import mesh as mesh_mod
 from repro.distributed import sharding as shd
-from repro.serving import DecodeEngine
+from repro.launch import mesh as mesh_mod
+from repro.launch import steps as steps_mod
+from repro.serving import DecodeEngine, Request, prompt_prefill, serve
 
 
-def serve(arch: str, batch=4, prompt_len=12, gen=20):
+def _engine(arch: str, batch, max_seq, **kw):
     spec = configs.get_arch(arch)
     cfg = spec.smoke()
     mesh = mesh_mod.make_host_mesh()
     rules = shd.rules_for_mesh(mesh)
     init_fn, _, _, _ = steps_mod.param_setup(spec, cfg, mesh, rules)
     params = init_fn()
+    return spec, cfg, params, rules, DecodeEngine(
+        spec=spec, cfg=cfg, params=params, max_seq=max_seq, batch=batch,
+        rules=rules, mesh=mesh, **kw)
 
-    engine = DecodeEngine(spec=spec, cfg=cfg, params=params,
-                          max_seq=prompt_len + gen, batch=batch, rules=rules,
-                          temperature=0.8)
+
+def serve_rect(arch: str, batch=4, prompt_len=12, gen=20):
+    """Rectangular: one prompt batch -> one on-device decode dispatch."""
+    spec, cfg, params, rules, engine = _engine(arch, batch, prompt_len + gen,
+                                               temperature=0.8)
     rng = np.random.default_rng(0)
     vocab = getattr(cfg, "vocab", 128)
     prompt = jnp.asarray(rng.integers(3, vocab, (batch, prompt_len)),
                          jnp.int32)
-
     t0 = time.time()
-    if spec.kind == "transformer":
-        engine.prefill({"tokens": prompt})
-    else:  # recurrent state: replay prompt through the state
-        step = adapters.decode_fn(spec)
-        for t in range(prompt_len):
-            _, engine.state = step(params, cfg, engine.state,
-                                   prompt[:, t:t + 1], t, rules=rules)
-    out = engine.generate(prompt[:, -1:], gen, start_pos=prompt_len)
+    # the shared helper picks native prefill (transformer KV / xlstm) or
+    # the masked replay scan (ssm) — no per-arch loop in the entry point
+    engine.state, tok0, pos0 = prompt_prefill(spec, cfg, params, prompt,
+                                              state=engine.state,
+                                              rules=rules)
+    out = engine.generate(tok0, gen, start_pos=pos0)
     dt = time.time() - t0
     print(f"{arch:14s} batch={batch} prompt={prompt_len} gen={gen}: "
           f"{dt*1e3:6.0f} ms  sample: {out[0, :10].tolist()}")
 
 
+def serve_continuous(arch: str, slots=4, n_requests=10):
+    """Ragged trace through the continuous-batching scheduler."""
+    spec, cfg, params, rules, engine = _engine(arch, slots, 64,
+                                               temperature=0.0, chunk=8)
+    rng = np.random.default_rng(1)
+    vocab = getattr(cfg, "vocab", 128)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(3, vocab, int(rng.integers(2, 13))),
+                    max_new=int(rng.integers(4, 17)))
+            for i in range(n_requests)]
+    t0 = time.time()
+    outs = serve(engine, reqs)
+    dt = time.time() - t0
+    total = sum(len(v) for v in outs.values())
+    print(f"{arch:14s} continuous: {n_requests} ragged requests over "
+          f"{slots} slots -> {total} tok in {dt*1e3:6.0f} ms "
+          f"({engine.chunks_run} dispatches)")
+
+
 if __name__ == "__main__":
-    serve("qwen3-8b")      # KV-cache path
-    serve("xlstm-1.3b")    # recurrent-state path (what long_500k runs on)
-    serve("zamba2-1.2b")   # hybrid: SSM state + shared-attention KV
+    serve_rect("qwen3-8b")      # KV-cache path
+    serve_rect("xlstm-1.3b")    # recurrent-state path (long_500k runs here)
+    serve_rect("zamba2-1.2b")   # hybrid: SSM state + shared-attention KV
+    serve_continuous("xlstm-1.3b")

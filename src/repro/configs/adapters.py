@@ -181,6 +181,25 @@ def decode_fn(spec: ArchSpec):
     raise ValueError(f"{spec.kind} has no decode path")
 
 
+def has_native_prefill(spec: ArchSpec) -> bool:
+    """True when ``prefill_fn`` really fills the decode state in one
+    rectangular pass (transformer KV, xlstm recurrent prefill). ssm's
+    forward emits features only — its serving prefill is the shared
+    masked-replay helper (serving/prefill.py)."""
+    return spec.kind in ("transformer", "xlstm")
+
+
+def decode_state_shardings(spec: ArchSpec, cfg, rules, mesh, batch: int,
+                           max_seq: int):
+    """NamedSharding tree for the serving decode state: slots/batch over
+    ("pod", "data"), kv-heads over "model" — the serving mirror of the
+    training param/batch sharding (non-divisible dims replicate)."""
+    from repro.distributed import sharding as shd
+    shapes = decode_state_specs(spec, cfg, batch, max_seq)
+    return shd.make_shardings(decode_state_axes(spec, cfg), rules, mesh,
+                              shapes)
+
+
 def prefill_fn(spec: ArchSpec):
     """(params, batch, cfg, state, rules) -> (feats_or_logits, state)."""
     if spec.kind == "transformer":

@@ -176,6 +176,14 @@ def make_shardings(axes_tree, rules: ShardingRules, mesh: Mesh,
         axes_tree, shapes_tree, is_leaf=is_axes)
 
 
+def shard_put(tree, axes_tree, rules: ShardingRules, mesh: Mesh):
+    """device_put a VALUE tree onto the mesh by its logical-axes tree
+    (divisibility-guarded: non-divisible dims replicate). Used to place
+    serving decode state — batch/slots over ("pod","data"), kv-heads over
+    "model" — without the values ever living unsharded on one device."""
+    return jax.device_put(tree, make_shardings(axes_tree, rules, mesh, tree))
+
+
 def shard_act(x: jax.Array, axes: Sequence[Optional[str]],
               rules: Optional[ShardingRules]) -> jax.Array:
     """with_sharding_constraint by logical names; no-op when rules is None

@@ -1,2 +1,8 @@
-"""Serving: batched decode engine over KV caches / recurrent states."""
+"""Serving: continuous-batching server core.
+
+scheduler (admission/eviction) -> on-device chunked decode loop (engine)
+-> shared prompt-replay prefill (prefill), state sharded over the mesh.
+"""
 from repro.serving.engine import DecodeEngine, sample_logits
+from repro.serving.prefill import prompt_prefill, replay_prefill
+from repro.serving.scheduler import Request, Scheduler, serve

@@ -1,19 +1,39 @@
-"""Batched decode engine: prefill -> step loop over a shared cache/state.
+"""Continuous-batching decode engine with an ON-DEVICE decode loop.
 
-Works for both cache kinds:
-  * transformer archs — paged-lite KV cache (one contiguous region per
-    request slot, slot reuse on completion);
-  * recurrent archs (xlstm / ssm) — O(1) state, max_seq only bounds
-    positions (long_500k serves on this path).
+The pre-PR6 engine was a host loop: one jitted single-token step per
+generated token — one dispatch + one host sync per token, which is where
+small-model serving throughput dies. This engine keeps three structural
+upgrades:
 
-The engine is deliberately simple (continuous batching over fixed slots) —
-the scale story lives in the sharding of the cache (batch over ("pod",
-"data"), kv-heads over "model"), not in scheduler cleverness.
+  * **on-device decode loop** — one jitted ``lax.while_loop`` advances up
+    to ``chunk`` tokens for every slot, carrying ``(state, last-token,
+    pos, budget, active)`` and writing sampled tokens into a preallocated
+    ``(B, chunk)`` device buffer: one dispatch per CHUNK. The loop exits
+    early once every slot is inactive, so a nearly-drained batch does not
+    pay for the full chunk (tokens/sec matrix: ``benchmarks/serving.py``,
+    gated in CI).
+  * **slot admission / eviction** — requests with ragged prompt lengths
+    and token budgets are admitted into free slots (``admit``: batched
+    masked-replay prefill via ``serving/prefill.py``, state rows scattered
+    into the slot indices), decode until EOS/budget, and report
+    ``active=False`` so the scheduler (``serving/scheduler.py``) evicts
+    and refills the slot immediately — continuous batching.
+  * **sharded engine state** — decode-state leaves are placed on the mesh
+    by their logical axes (slots/batch over ("pod", "data"), kv-heads over
+    "model") through ``distributed/sharding.py`` rules, so the same engine
+    runs a multi-device CPU mesh in CI and a pod mesh unchanged.
+
+Cache kinds: transformer paged-lite KV (one contiguous region per slot)
+and recurrent O(1) state (xlstm / ssm — the long_500k path). Per-slot
+ragged POSITIONS require the recurrent path: the KV ``decode_step``
+consumes a single scalar write position, so transformers serve through
+the same engine in rectangular mode (uniform positions across slots).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Any, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -21,62 +41,275 @@ import numpy as np
 
 from repro.configs import adapters
 from repro.configs.base import ArchSpec
+from repro.distributed import sharding as shd
+from repro.serving import prefill as prefill_mod
+
+I32 = jnp.int32
 
 
 def sample_logits(key, logits, *, temperature: float = 1.0,
                   top_k: int = 0) -> jax.Array:
-    """logits: (B, 1, V) -> token ids (B, 1)."""
+    """logits: (B, 1, V) -> token ids (B, 1).
+
+    The top-k mask uses ``finfo.min`` of the logits dtype (not a hard-coded
+    constant): masked entries stay finite, so even the all-masked edge
+    (e.g. a constant row) yields a valid in-vocab sample rather than NaN.
+    """
     lg = logits[:, 0, :].astype(jnp.float32)
     if temperature <= 0.0:
-        return jnp.argmax(lg, axis=-1)[:, None].astype(jnp.int32)
+        return jnp.argmax(lg, axis=-1)[:, None].astype(I32)
     lg = lg / temperature
     if top_k > 0:
         vals, _ = jax.lax.top_k(lg, top_k)
-        lg = jnp.where(lg < vals[:, -1:], -1e30, lg)
-    return jax.random.categorical(key, lg)[:, None].astype(jnp.int32)
+        lg = jnp.where(lg < vals[:, -1:], jnp.finfo(lg.dtype).min, lg)
+    return jax.random.categorical(key, lg)[:, None].astype(I32)
+
+
+def _bucket(n: int, quantum: int = 8) -> int:
+    """Round a ragged replay length up to a shape bucket so the jitted
+    replay scan compiles O(#buckets) times, not O(#distinct lengths)."""
+    return max(quantum, -(-n // quantum) * quantum)
 
 
 @dataclasses.dataclass
 class DecodeEngine:
+    """Slot-batched decode engine over a shared cache/state.
+
+    ``eos_id < 0`` disables EOS stopping (fixed-length generation).
+    ``mesh``/``rules`` shard the engine state; without a mesh everything
+    stays single-device (CPU tests).
+    """
     spec: ArchSpec
     cfg: Any
     params: Any
     max_seq: int
     batch: int
     rules: Any = None
+    mesh: Any = None
     temperature: float = 0.0
-    _step_fn: Optional[Callable] = None
+    top_k: int = 0
+    eos_id: int = -1
+    chunk: int = 16
+    chunks_run: int = 0          # host-visible dispatch counter (bench/tests)
 
     def __post_init__(self):
-        self.state = adapters.init_decode_state(
-            self.spec, self.cfg, self.batch, self.max_seq)
+        if self.mesh is not None and self.rules is None:
+            self.rules = shd.rules_for_mesh(self.mesh)
+        self.state = self._fresh_state(self.batch)
+        B = self.batch
+        self.tok = jnp.zeros((B, 1), I32)       # last token per slot
+        self.pos = jnp.zeros((B,), I32)         # tokens consumed per slot
+        self.gen_left = jnp.zeros((B,), I32)    # remaining token budget
+        self.active = jnp.zeros((B,), bool)
+        self._key = jax.random.PRNGKey(0)
+        self._loops: dict = {}
+        self._scatter = jax.jit(
+            lambda full, p, idx: jax.tree.map(
+                lambda f, q: f.at[:, idx].set(q.astype(f.dtype)), full, p),
+            donate_argnums=(0,))
         decode = adapters.decode_fn(self.spec)
         cfg, rules = self.cfg, self.rules
 
         def step(params, state, tokens, pos, key):
             logits, state = decode(params, cfg, state, tokens, pos,
                                    rules=rules)
-            nxt = sample_logits(key, logits, temperature=self.temperature)
+            nxt = sample_logits(key, logits, temperature=self.temperature,
+                                top_k=self.top_k)
             return nxt, state
 
         self._step_fn = jax.jit(step, donate_argnums=(1,))
+        self._replay_fn = jax.jit(
+            lambda params, state, toks, lens: prefill_mod.replay_prefill(
+                self.spec, cfg, params, state, toks, lens, rules=rules),
+            donate_argnums=(1,))
+
+    # ------------------------------------------------------------------
+    # state lifecycle
+    # ------------------------------------------------------------------
+
+    def _fresh_state(self, batch: int, shard: bool = True):
+        state = adapters.init_decode_state(self.spec, self.cfg, batch,
+                                           self.max_seq)
+        if shard and self.mesh is not None:
+            state = shd.shard_put(
+                state, adapters.decode_state_axes(self.spec, self.cfg),
+                self.rules, self.mesh)
+        return state
+
+    def reset(self, seed: int = 0) -> None:
+        """Clear every slot (fresh state, all inactive) for a new trace."""
+        self.state = self._fresh_state(self.batch)
+        B = self.batch
+        self.tok = jnp.zeros((B, 1), I32)
+        self.pos = jnp.zeros((B,), I32)
+        self.gen_left = jnp.zeros((B,), I32)
+        self.active = jnp.zeros((B,), bool)
+        self._key = jax.random.PRNGKey(seed)
+        self.chunks_run = 0
+
+    def _mesh_ctx(self):
+        return self.mesh if self.mesh is not None else (
+            contextlib.nullcontext())
+
+    # ------------------------------------------------------------------
+    # rectangular prefill (compat API — the scheduler path uses admit())
+    # ------------------------------------------------------------------
 
     def prefill(self, batch) -> None:
         f = adapters.prefill_fn(self.spec)
-        _, self.state = f(self.params, batch, self.cfg, self.state,
-                          rules=self.rules)
+        with self._mesh_ctx():
+            _, self.state = f(self.params, batch, self.cfg, self.state,
+                              rules=self.rules)
+
+    # ------------------------------------------------------------------
+    # slot admission (continuous batching)
+    # ------------------------------------------------------------------
+
+    def admit(self, slots: Sequence[int], prompts: Sequence,
+              budgets: Sequence[int]) -> None:
+        """Prefill newly admitted ragged prompts into free slots.
+
+        ``prompts``: 1-D int32 token arrays (len >= 1) — the whole group
+        replays BATCHED (padded to a shape bucket, per-row length masking)
+        and its state rows scatter into ``slots``; each slot then holds
+        ``pos = len - 1`` with the prompt's last token queued, per the
+        serving/prefill.py convention.
+        """
+        g = len(slots)
+        assert g == len(prompts) == len(budgets) and g > 0
+        lens = np.array([len(p) for p in prompts], np.int64)
+        if lens.min() < 1 or min(budgets) < 1:
+            raise ValueError("prompts must be non-empty, budgets >= 1")
+        if self.spec.kind == "transformer":
+            uniform = len(set(lens.tolist())) == 1
+            if bool(np.any(np.asarray(self.active))) or not uniform:
+                raise NotImplementedError(
+                    "per-slot ragged positions need recurrent O(1) state; "
+                    "the KV decode step writes at one scalar position — "
+                    "serve transformers rectangularly (all slots admitted "
+                    "together with equal prompt lengths)")
+        T = int(lens.max()) - 1
+        part = self._fresh_state(g, shard=False)
+        if T > 0:
+            Tb = _bucket(T)
+            toks = np.zeros((g, Tb), np.int32)
+            for r, p in enumerate(prompts):
+                toks[r, :lens[r] - 1] = np.asarray(p, np.int32)[:-1]
+            with self._mesh_ctx():
+                part = self._replay_fn(self.params, part,
+                                       jnp.asarray(toks),
+                                       jnp.asarray(lens - 1, I32))
+        idx = jnp.asarray(np.asarray(slots, np.int32))
+        # one jitted scatter for the whole state tree (vs one eager
+        # dispatch per leaf — admission cost is on the serving hot path)
+        self.state = self._scatter(self.state, part, idx)
+        last = np.array([np.asarray(p)[-1] for p in prompts], np.int32)
+        self.tok = self.tok.at[idx, 0].set(jnp.asarray(last))
+        self.pos = self.pos.at[idx].set(jnp.asarray(lens - 1, I32))
+        self.gen_left = self.gen_left.at[idx].set(
+            jnp.asarray(np.asarray(budgets, np.int32)))
+        self.active = self.active.at[idx].set(True)
+
+    # ------------------------------------------------------------------
+    # on-device decode loop
+    # ------------------------------------------------------------------
+
+    def _loop_fn(self, n: int):
+        """Jitted while_loop advancing up to ``n`` tokens for every slot."""
+        if n in self._loops:
+            return self._loops[n]
+        decode = adapters.decode_fn(self.spec)
+        cfg, rules = self.cfg, self.rules
+        temp, top_k, eos = self.temperature, self.top_k, self.eos_id
+
+        def loop(params, state, tok, pos, gen_left, active, key):
+            B = tok.shape[0]
+
+            def cond(c):
+                return (c[0] < n) & jnp.any(c[5])
+
+            def body(c):
+                i, state, tok, pos, gen_left, active, out = c
+                # scalar decode position: identical across slots on the
+                # rectangular (KV) path; ignored by the recurrent cells.
+                logits, state = decode(params, cfg, state, tok,
+                                       jnp.max(pos), rules=rules)
+                nxt = sample_logits(jax.random.fold_in(key, i), logits,
+                                    temperature=temp, top_k=top_k)
+                # inactive slots freeze their token (their state rows are
+                # dead until the next admission overwrites them)
+                nxt = jnp.where(active[:, None], nxt, tok)
+                out = out.at[:, i].set(jnp.where(active, nxt[:, 0], -1))
+                act_i = active.astype(I32)
+                pos = pos + act_i
+                gen_left = gen_left - act_i
+                active = active & (gen_left > 0) & (nxt[:, 0] != eos)
+                return (i + 1, state, nxt, pos, gen_left, active, out)
+
+            c = jax.lax.while_loop(
+                cond, body,
+                (jnp.int32(0), state, tok, pos, gen_left, active,
+                 jnp.full((B, n), -1, I32)))
+            return c[1], c[2], c[3], c[4], c[5], c[6]
+
+        self._loops[n] = jax.jit(loop, donate_argnums=(1,))
+        return self._loops[n]
+
+    def decode_chunk(self, n: Optional[int] = None):
+        """Advance every active slot by up to ``n`` tokens in ONE dispatch.
+
+        Returns host arrays ``(tokens (B, n), n_gen (B,), active (B,))``:
+        slot ``s`` generated ``tokens[s, :n_gen[s]]`` this chunk (a slot
+        hitting EOS/budget mid-chunk stops there and reports
+        ``active[s] = False`` so the scheduler can evict + refill it).
+        """
+        n = int(n or self.chunk)
+        fn = self._loop_fn(n)
+        self._key, sub = jax.random.split(self._key)
+        prev = np.asarray(self.pos)
+        with self._mesh_ctx():
+            (self.state, self.tok, self.pos, self.gen_left, self.active,
+             out) = fn(self.params, self.state, self.tok, self.pos,
+                       self.gen_left, self.active, sub)
+        self.chunks_run += 1
+        return (np.asarray(out), np.asarray(self.pos) - prev,
+                np.asarray(self.active))
+
+    # ------------------------------------------------------------------
+    # rectangular generation APIs
+    # ------------------------------------------------------------------
 
     def generate(self, prompt_tokens: jax.Array, n_steps: int,
                  *, seed: int = 0, start_pos: int = 0) -> np.ndarray:
-        """Greedy/sampled continuation of (B, 1) last-prompt tokens.
+        """Greedy/sampled continuation of (B, 1) last-prompt tokens —
+        the whole decode as ONE on-device loop dispatch.
 
-        ``start_pos`` = number of tokens already in the cache/state."""
+        ``start_pos`` = number of tokens already in the cache/state.
+        Greedy results match the per-token reference loop exactly; sampled
+        paths draw per-step keys as ``fold_in(key, step)`` (the pre-PR6
+        host loop split a key per step, so sampled sequences differ)."""
+        B = self.batch
+        self.tok = jnp.asarray(prompt_tokens, I32)
+        self.pos = jnp.full((B,), start_pos, I32)
+        self.gen_left = jnp.full((B,), n_steps, I32)
+        self.active = jnp.ones((B,), bool)
+        self._key = jax.random.PRNGKey(seed)
+        out, _, _ = self.decode_chunk(n_steps)
+        return out
+
+    def generate_python(self, prompt_tokens: jax.Array, n_steps: int,
+                        *, seed: int = 0, start_pos: int = 0) -> np.ndarray:
+        """The pre-PR6 per-token host loop: one dispatch + one host sync
+        per generated token. Kept as the paired baseline the serving
+        benchmark measures the on-device loop against (and as an A/B
+        reference for the loop's greedy outputs)."""
         key = jax.random.PRNGKey(seed)
-        tok = prompt_tokens
+        tok = jnp.asarray(prompt_tokens, I32)
         out = []
-        for t in range(n_steps):
-            key, sub = jax.random.split(key)
-            tok, self.state = self._step_fn(self.params, self.state, tok,
-                                            start_pos + t, sub)
-            out.append(np.asarray(tok))
+        with self._mesh_ctx():
+            for t in range(n_steps):
+                key, sub = jax.random.split(key)
+                tok, self.state = self._step_fn(self.params, self.state,
+                                                tok, start_pos + t, sub)
+                out.append(np.asarray(tok))
         return np.concatenate(out, axis=1)

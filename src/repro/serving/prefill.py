@@ -1,0 +1,91 @@
+"""Shared prompt-replay prefill: ONE helper for every cache kind.
+
+Two ways to turn a prompt into decode state:
+
+  * ``prompt_prefill`` (method="native") — the arch's own rectangular
+    prefill through ``adapters.prefill_fn``: the transformer fills its KV
+    cache in one attention pass, xlstm runs its chunkwise/scan prefill.
+    Fastest, but rectangular — every row must be a full-length prompt.
+  * ``replay_prefill`` — a ``lax.scan`` of ``decode_step`` over (padded)
+    prompt tokens with per-row length masking, so RAGGED prompt groups
+    prefill in one batched call: each row stops updating its state slice
+    at its own length. Works for every kind with a decode path, and is
+    the only prefill for ssm (whose forward emits features, not state).
+
+Convention (both helpers, the engine, and both serve entry points):
+prefill consumes ``prompt[:, :-1]``; decode then starts by feeding
+``prompt[:, -1]`` at position ``len - 1``, which emits the logits for the
+first *generated* token. (The pre-PR6 drivers each carried a copy-pasted
+per-token replay loop that processed the last prompt token twice —
+``launch/serve.py`` and ``examples/serve_batched.py`` now share this
+module instead.)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import adapters
+
+
+def select_rows(old, new, keep):
+    """Per-slot decode-state select: every decode-state leaf is
+    ``(L, B, ...)`` with the slot/batch dim at axis 1; ``keep`` is (B,)
+    bool — True rows take ``new``, False rows keep ``old``."""
+    def sel(o, nw):
+        m = keep.reshape((1, -1) + (1,) * (o.ndim - 2))
+        return jnp.where(m, nw.astype(o.dtype), o)
+    return jax.tree.map(sel, old, new)
+
+
+def replay_prefill(spec, cfg, params, state, tokens, lengths=None, *,
+                   rules=None, start_pos: int = 0):
+    """Replay ``tokens`` (B, T) through ``decode_step``, masking ragged rows.
+
+    ``lengths`` (B,) counts the valid replay tokens per row (default: all
+    T); rows stop updating their state slice at their own length, so one
+    batched scan prefills a ragged group and each row's final state equals
+    a dedicated length-``lengths[b]`` replay. Returns the updated state.
+    """
+    decode = adapters.decode_fn(spec)
+    B, T = tokens.shape
+    if T == 0:
+        return state
+    lengths = (jnp.full((B,), T, jnp.int32) if lengths is None
+               else jnp.asarray(lengths, jnp.int32))
+
+    def body(carry, inp):
+        st = carry
+        tok_t, t = inp
+        _, new_st = decode(params, cfg, st, tok_t[:, None], start_pos + t,
+                           rules=rules)
+        return select_rows(st, new_st, t < lengths), None
+
+    state, _ = jax.lax.scan(
+        body, state, (tokens.T, jnp.arange(T, dtype=jnp.int32)))
+    return state
+
+
+def prompt_prefill(spec, cfg, params, prompt, *, state, rules=None,
+                   method: str = "auto"):
+    """Rectangular prompt -> decode handoff for either cache kind.
+
+    ``prompt``: (B, L) int32, L >= 1. Prefills ``prompt[:, :-1]`` into
+    ``state`` and returns ``(state, last_tokens (B, 1), start_pos)`` —
+    feed ``last_tokens`` at ``start_pos`` to generate the first new token.
+    method="auto" picks the arch's native prefill where it really fills
+    state (``adapters.has_native_prefill``) and the replay scan otherwise.
+    """
+    if method == "auto":
+        method = "native" if adapters.has_native_prefill(spec) else "replay"
+    body = prompt[:, :-1]
+    if body.shape[1]:
+        if method == "native":
+            f = adapters.prefill_fn(spec)
+            _, state = f(params, {"tokens": body}, cfg, state, rules=rules)
+        else:
+            state = jax.jit(
+                lambda p, s, t: replay_prefill(spec, cfg, p, s, t,
+                                               rules=rules),
+                donate_argnums=(1,))(params, state, body)
+    return state, prompt[:, -1:], prompt.shape[1] - 1

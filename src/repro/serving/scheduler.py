@@ -1,0 +1,152 @@
+"""Request scheduler: slot admission / eviction for continuous batching.
+
+Requests arrive with ragged prompt lengths and per-request token budgets.
+The scheduler owns a FIFO queue plus the slot table; the engine owns the
+device state. Two refill policies:
+
+  * ``"continuous"`` — admit whenever a slot is free: a request hitting
+    EOS/budget is evicted at the next chunk boundary and its slot refills
+    immediately, so short requests never hold the batch hostage;
+  * ``"batch"`` — admit only when ALL slots are free: the rectangular
+    fixed-slot baseline (every group decodes until its LONGEST member
+    finishes), kept as the comparison arm ``benchmarks/serving.py``
+    measures continuous batching against.
+
+``serve()`` drives the admit -> decode-chunk -> evict cycle to completion.
+Determinism contract (asserted by tests/test_scheduler.py): under greedy
+decoding, a request's output depends only on its own prompt — slots are
+independent — so the same request set produces identical per-request
+outputs under ANY arrival order or slot assignment.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+POLICIES = ("continuous", "batch")
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request: prompt tokens + a new-token budget."""
+    rid: int
+    prompt: np.ndarray            # (len,) int32, len >= 1
+    max_new: int                  # token budget (EOS may stop earlier)
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        if self.prompt.size < 1:
+            raise ValueError(f"request {self.rid}: empty prompt")
+        if self.max_new < 1:
+            raise ValueError(f"request {self.rid}: max_new must be >= 1")
+
+
+class Scheduler:
+    """Slot table + FIFO admission queue.
+
+    Invariants (asserted in tests): a request occupies at most one slot;
+    a slot is reused only after eviction; every submitted request is
+    admitted exactly once and eventually evicted.
+    """
+
+    def __init__(self, num_slots: int, policy: str = "continuous"):
+        if policy not in POLICIES:
+            raise ValueError(f"unknown policy {policy!r}; one of {POLICIES}")
+        self.num_slots = num_slots
+        self.policy = policy
+        self.queue: deque = deque()
+        self.slot_rid: List[Optional[int]] = [None] * num_slots
+        self._seen: set = set()
+        self.admitted = 0
+        self.evicted = 0
+
+    # -- queue -----------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        if req.rid in self._seen:
+            raise ValueError(f"duplicate rid {req.rid}")
+        self._seen.add(req.rid)
+        self.queue.append(req)
+
+    # -- slots -----------------------------------------------------------
+
+    @property
+    def free_slots(self) -> List[int]:
+        return [s for s, r in enumerate(self.slot_rid) if r is None]
+
+    @property
+    def busy_slots(self) -> List[int]:
+        return [s for s, r in enumerate(self.slot_rid) if r is not None]
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue) or bool(self.busy_slots)
+
+    def admit(self) -> List[Tuple[int, Request]]:
+        """Pop queued requests FIFO into free slots (policy-gated)."""
+        free = self.free_slots
+        if self.policy == "batch" and len(free) < self.num_slots:
+            return []
+        out = []
+        for slot in free:
+            if not self.queue:
+                break
+            req = self.queue.popleft()
+            self.slot_rid[slot] = req.rid
+            self.admitted += 1
+            out.append((slot, req))
+        return out
+
+    def evict(self, slot: int) -> int:
+        rid = self.slot_rid[slot]
+        if rid is None:
+            raise ValueError(f"slot {slot} is not busy")
+        self.slot_rid[slot] = None
+        self.evicted += 1
+        return rid
+
+
+def serve(engine, requests, *, chunk: Optional[int] = None,
+          policy: str = "continuous", seed: int = 0) -> Dict[int, np.ndarray]:
+    """Serve ``requests`` to completion on ``engine``.
+
+    Admission prefill is batched per admitted group (masked ragged replay,
+    ``DecodeEngine.admit``); decode advances all active slots ``chunk``
+    tokens per device dispatch; finished slots are evicted at chunk
+    boundaries and refilled (policy "continuous") or held until the whole
+    batch drains (policy "batch"). Returns ``{rid: generated tokens}``
+    (the EOS token, if emitted, is included).
+    """
+    sched = Scheduler(engine.batch, policy=policy)
+    engine.reset(seed=seed)
+    outputs: Dict[int, list] = {}
+    for r in requests:
+        sched.submit(r)
+        outputs[r.rid] = []
+    guard = 0
+    while sched.has_work:
+        admitted = sched.admit()
+        if admitted:
+            engine.admit([s for s, _ in admitted],
+                         [r.prompt for _, r in admitted],
+                         [r.max_new for _, r in admitted])
+        toks, n_gen, active = engine.decode_chunk(chunk)
+        progressed = bool(admitted)
+        for slot in sched.busy_slots:
+            k = int(n_gen[slot])
+            if k:
+                outputs[sched.slot_rid[slot]].extend(toks[slot, :k].tolist())
+                progressed = True
+            if not active[slot]:
+                sched.evict(slot)
+        guard = 0 if progressed else guard + 1
+        if guard > 2:
+            raise RuntimeError(
+                "serve loop stalled: no admission, generation, or eviction "
+                f"for {guard} chunks (queue={len(sched.queue)}, "
+                f"busy={sched.busy_slots})")
+    assert sched.evicted == sched.admitted == len(outputs)
+    return {rid: np.asarray(v, np.int32) for rid, v in outputs.items()}

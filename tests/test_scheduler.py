@@ -1,0 +1,206 @@
+"""Continuous-batching scheduler: invariants + end-to-end serve contract.
+
+Unit layer (no device work): FIFO admission, slot reuse only after
+eviction, duplicate-rid rejection, the "batch" policy's all-free gate,
+admitted == evicted accounting.
+
+End-to-end layer (tiny xlstm engine): under greedy decoding a request's
+output depends only on its own prompt — so the same request set under two
+arrival orders gives IDENTICAL per-request outputs, and the continuous
+policy matches the rectangular "batch" policy token-for-token while
+spending fewer device dispatches on a ragged trace (the slot refills
+instead of idling until the whole group drains).
+"""
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro import configs                                   # noqa: E402
+from repro.configs import adapters                          # noqa: E402
+from repro.distributed.sharding import strip                # noqa: E402
+from repro.serving import DecodeEngine, Request, Scheduler, serve  # noqa: E402
+from repro.serving.scheduler import POLICIES                # noqa: E402
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _fresh_jit_cache():
+    # this module compiles fresh decode-loop/replay executables on top of
+    # everything the rest of the tier-1 suite already compiled; dropping
+    # the accumulated executables first keeps the long-process footprint
+    # bounded (XLA CPU was observed segfaulting on a trivial compile deep
+    # into a full serial run; benchmarks/engines.py documents the same
+    # long-process allocator behaviour between cells)
+    jax.clear_caches()
+
+
+def _req(rid, plen, max_new, vocab=64, seed=None):
+    rng = np.random.default_rng(rid if seed is None else seed)
+    return Request(rid=rid, prompt=rng.integers(3, vocab, plen),
+                   max_new=max_new)
+
+
+# ---------------------------------------------------------------------------
+# unit invariants (host-only)
+# ---------------------------------------------------------------------------
+
+
+class TestRequestValidation:
+    def test_empty_prompt_rejected(self):
+        with pytest.raises(ValueError, match="empty prompt"):
+            Request(rid=0, prompt=np.zeros((0,), np.int32), max_new=4)
+
+    def test_zero_budget_rejected(self):
+        with pytest.raises(ValueError, match="max_new"):
+            Request(rid=0, prompt=np.array([5]), max_new=0)
+
+    def test_prompt_coerced_int32_1d(self):
+        r = Request(rid=0, prompt=[[1, 2, 3]], max_new=1)
+        assert r.prompt.dtype == np.int32 and r.prompt.shape == (3,)
+
+
+class TestSchedulerInvariants:
+    def test_unknown_policy(self):
+        with pytest.raises(ValueError, match="policy"):
+            Scheduler(2, policy="round-robin")
+        assert POLICIES == ("continuous", "batch")
+
+    def test_duplicate_rid_rejected(self):
+        s = Scheduler(2)
+        s.submit(_req(7, 3, 2))
+        with pytest.raises(ValueError, match="duplicate"):
+            s.submit(_req(7, 4, 2))
+
+    def test_fifo_admission_into_free_slots(self):
+        s = Scheduler(2)
+        for rid in range(4):
+            s.submit(_req(rid, 3, 2))
+        adm = s.admit()
+        assert [(slot, r.rid) for slot, r in adm] == [(0, 0), (1, 1)]
+        assert s.free_slots == [] and s.busy_slots == [0, 1]
+        # no free slot -> nothing admitted, queue keeps FIFO order
+        assert s.admit() == []
+        assert [r.rid for r in s.queue] == [2, 3]
+
+    def test_slot_reused_only_after_eviction(self):
+        s = Scheduler(1)
+        s.submit(_req(0, 3, 2))
+        s.submit(_req(1, 3, 2))
+        (slot, r0), = s.admit()
+        assert s.admit() == []          # occupied: at most one request/slot
+        assert s.evict(slot) == r0.rid
+        (slot2, r1), = s.admit()
+        assert slot2 == slot and r1.rid == 1
+        s.evict(slot2)
+        with pytest.raises(ValueError, match="not busy"):
+            s.evict(slot2)
+        assert s.admitted == s.evicted == 2
+
+    def test_batch_policy_waits_for_all_slots(self):
+        s = Scheduler(2, policy="batch")
+        for rid in range(3):
+            s.submit(_req(rid, 3, 2))
+        assert len(s.admit()) == 2
+        s.evict(0)
+        assert s.admit() == []          # one slot still busy -> no refill
+        s.evict(1)
+        assert [r.rid for _, r in s.admit()] == [2]
+
+    def test_has_work(self):
+        s = Scheduler(1)
+        assert not s.has_work
+        s.submit(_req(0, 2, 1))
+        assert s.has_work
+        s.admit()
+        assert s.has_work               # busy slot counts as work
+        s.evict(0)
+        assert not s.has_work
+
+
+# ---------------------------------------------------------------------------
+# end-to-end serve() on a tiny recurrent engine
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_xlstm():
+    spec = configs.get_arch("xlstm-1.3b")
+    cfg = spec.smoke(num_layers=2, slstm_every=2, d_model=32, vocab=64,
+                     n_heads=2)
+    params = strip(adapters.init_params(spec.kind, jax.random.PRNGKey(0),
+                                        cfg))
+    return spec, cfg, params
+
+
+def _engine(tiny_xlstm, **kw):
+    spec, cfg, params = tiny_xlstm
+    kw.setdefault("max_seq", 64)
+    kw.setdefault("batch", 2)
+    kw.setdefault("chunk", 4)
+    return DecodeEngine(spec=spec, cfg=cfg, params=params,
+                        temperature=0.0, **kw)
+
+
+# a ragged trace: prompt lengths AND budgets staggered so eviction happens
+# mid-group — the case continuous batching exists for
+TRACE = [(0, 5, 4), (1, 3, 8), (2, 7, 4), (3, 2, 8), (4, 4, 4)]
+
+
+def _trace_requests(order=None):
+    items = TRACE if order is None else [TRACE[i] for i in order]
+    return [_req(rid, plen, mnew) for rid, plen, mnew in items]
+
+
+class TestServeEndToEnd:
+    def test_all_requests_served_full_budget(self, tiny_xlstm):
+        eng = _engine(tiny_xlstm)
+        outs = serve(eng, _trace_requests())
+        assert sorted(outs) == [t[0] for t in TRACE]
+        for rid, _, max_new in TRACE:
+            # eos disabled (eos_id=-1): every request runs to its budget
+            assert len(outs[rid]) == max_new, rid
+            assert outs[rid].min() >= 0
+
+    def test_deterministic_across_arrival_orders(self, tiny_xlstm):
+        eng = _engine(tiny_xlstm)
+        a = serve(eng, _trace_requests())
+        b = serve(eng, _trace_requests(order=[4, 2, 0, 3, 1]))
+        for rid in a:
+            np.testing.assert_array_equal(a[rid], b[rid], err_msg=str(rid))
+
+    def test_continuous_matches_batch_with_fewer_dispatches(self, tiny_xlstm):
+        eng = _engine(tiny_xlstm)
+        cont = serve(eng, _trace_requests(), policy="continuous")
+        cont_chunks = eng.chunks_run
+        rect = serve(eng, _trace_requests(), policy="batch")
+        rect_chunks = eng.chunks_run
+        for rid in cont:
+            np.testing.assert_array_equal(cont[rid], rect[rid],
+                                          err_msg=str(rid))
+        assert cont_chunks < rect_chunks, (cont_chunks, rect_chunks)
+
+    def test_eos_evicts_early(self, tiny_xlstm):
+        # derive a real eos id from a greedy run, then re-serve with it:
+        # each output must stop at (and include) its first eos occurrence
+        free = serve(_engine(tiny_xlstm), _trace_requests())
+        eos = int(free[0][1])           # a token greedy decoding does emit
+        eng = _engine(tiny_xlstm, eos_id=eos)
+        outs = serve(eng, _trace_requests())
+        stopped = 0
+        for rid, _, max_new in TRACE:
+            o = outs[rid]
+            assert len(o) <= max_new
+            hits = np.nonzero(o == eos)[0]
+            if hits.size:               # eos emitted -> it ends the output
+                assert hits[0] == len(o) - 1, (rid, o)
+                stopped += 1
+            else:
+                assert len(o) == max_new
+        assert stopped >= 1             # the derived eos fired at least once
+
+    def test_more_requests_than_slots_slot_reuse(self, tiny_xlstm):
+        eng = _engine(tiny_xlstm, batch=2)
+        reqs = [_req(rid, 2 + rid % 3, 3) for rid in range(7)]
+        outs = serve(eng, reqs)
+        assert len(outs) == 7
+        assert all(len(v) == 3 for v in outs.values())

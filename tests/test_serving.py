@@ -1,0 +1,279 @@
+"""Serving engine: sampling, shared prefill, on-device loop, sharded state.
+
+  * ``sample_logits`` masks top-k rejects with ``finfo.min`` of the logits
+    dtype — NOT a hard-coded -1e30 — so rows whose true logits sit below
+    -1e30 still sample from the real top-k (the old constant *boosted*
+    masked entries above them), and the all-extreme edge stays finite.
+  * ``replay_prefill`` with per-row lengths equals a dedicated replay of
+    each row at its own length (ragged groups batch into ONE scan), and
+    ``prompt_prefill``'s native / replay methods hand decode the same
+    state (greedy continuations identical).
+  * the on-device ``lax.while_loop`` chunk decode equals the per-token
+    host loop token-for-token under greedy decoding, for both cache kinds
+    (recurrent xlstm state and transformer KV), and exits early on
+    budgets smaller than the chunk.
+  * the engine runs with its state placed on a host mesh through the
+    logical-axis rules; with >1 device the slot axis is really sharded.
+"""
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp                                     # noqa: E402
+
+from repro import configs                                   # noqa: E402
+from repro.configs import adapters                          # noqa: E402
+from repro.distributed import sharding as shd               # noqa: E402
+from repro.launch import mesh as mesh_mod                   # noqa: E402
+from repro.serving import (DecodeEngine, Request, prompt_prefill,  # noqa: E402
+                           replay_prefill, sample_logits, serve)
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _fresh_jit_cache():
+    # see tests/test_scheduler.py: bound the long-process executable
+    # footprint before compiling this module's decode loops
+    jax.clear_caches()
+
+
+# ---------------------------------------------------------------------------
+# sample_logits (satellite: finfo.min top-k mask + sampled path)
+# ---------------------------------------------------------------------------
+
+
+class TestSampleLogits:
+    def test_greedy_is_argmax(self):
+        lg = jax.random.normal(KEY, (3, 1, 16))
+        out = sample_logits(KEY, lg, temperature=0.0)
+        np.testing.assert_array_equal(out[:, 0], jnp.argmax(lg[:, 0], -1))
+        assert out.shape == (3, 1) and out.dtype == jnp.int32
+
+    def test_topk_restricts_support(self):
+        lg = jax.random.normal(KEY, (2, 1, 32))
+        top = set(np.asarray(jax.lax.top_k(lg[:, 0], 4)[1]).ravel().tolist())
+        for i in range(32):
+            tok = sample_logits(jax.random.fold_in(KEY, i), lg,
+                                temperature=1.0, top_k=4)
+            for b in range(2):
+                assert int(tok[b, 0]) in top
+
+    def test_topk_mask_below_minus_1e30(self):
+        # every real logit sits below -1e30: the old hard-coded -1e30 mask
+        # RAISED rejected entries above the kept ones; finfo.min keeps the
+        # true top-2 as the only support
+        row = -1e32 * jnp.arange(1, 9, dtype=jnp.float32)   # descending
+        lg = row[None, None, :]
+        for i in range(32):
+            tok = sample_logits(jax.random.fold_in(KEY, i), lg,
+                                temperature=1.0, top_k=2)
+            assert int(tok[0, 0]) in (0, 1)
+
+    def test_all_extreme_edge_stays_valid(self):
+        # constant row at the dtype floor: nothing is strictly below the
+        # k-th value, so nothing is masked and the draw is a valid id
+        lg = jnp.full((1, 1, 8), jnp.finfo(jnp.float32).min)
+        tok = sample_logits(KEY, lg, temperature=1.0, top_k=3)
+        assert 0 <= int(tok[0, 0]) < 8
+
+    def test_temperature_scales_entropy(self):
+        lg = jnp.array([[[0.0, 1.0, 0.0, 0.0]]])
+        cold = [int(sample_logits(jax.random.fold_in(KEY, i), lg,
+                                  temperature=0.05)[0, 0])
+                for i in range(16)]
+        assert set(cold) == {1}          # near-greedy at low temperature
+
+
+# ---------------------------------------------------------------------------
+# shared prefill helper
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_xlstm():
+    spec = configs.get_arch("xlstm-1.3b")
+    cfg = spec.smoke(num_layers=2, slstm_every=2, d_model=32, vocab=64,
+                     n_heads=2)
+    params = shd.strip(adapters.init_params(spec.kind, jax.random.PRNGKey(0),
+                                            cfg))
+    return spec, cfg, params
+
+
+@pytest.fixture(scope="module")
+def tiny_qwen3():
+    spec = configs.get_arch("qwen3-8b")
+    cfg = spec.smoke(num_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+                     d_ff=64, vocab=64, max_seq=64)
+    params = shd.strip(adapters.init_params(spec.kind, jax.random.PRNGKey(1),
+                                            cfg))
+    return spec, cfg, params
+
+
+class TestReplayPrefill:
+    def test_ragged_equals_dedicated_replay(self, tiny_xlstm):
+        spec, cfg, params = tiny_xlstm
+        B, T = 3, 6
+        toks = jax.random.randint(KEY, (B, T), 3, cfg.vocab)
+        lens = jnp.array([6, 4, 1], jnp.int32)
+        st0 = adapters.init_decode_state(spec, cfg, B, 32)
+        batched = replay_prefill(spec, cfg, params, st0, toks, lens)
+        for b in range(int(B)):
+            one = adapters.init_decode_state(spec, cfg, 1, 32)
+            lb = int(lens[b])
+            one = replay_prefill(spec, cfg, params, one, toks[b:b + 1, :lb])
+            for k in batched:
+                np.testing.assert_allclose(
+                    np.asarray(batched[k][:, b]), np.asarray(one[k][:, 0]),
+                    rtol=1e-5, atol=1e-5, err_msg=f"row {b} leaf {k}")
+
+    def test_zero_length_replay_is_identity(self, tiny_xlstm):
+        spec, cfg, params = tiny_xlstm
+        st0 = adapters.init_decode_state(spec, cfg, 2, 16)
+        st1 = replay_prefill(spec, cfg, params, st0,
+                             jnp.zeros((2, 0), jnp.int32))
+        for k in st0:
+            np.testing.assert_array_equal(np.asarray(st0[k]),
+                                          np.asarray(st1[k]))
+
+    @pytest.mark.parametrize("fix", ["tiny_xlstm", "tiny_qwen3"])
+    def test_native_and_replay_methods_agree(self, fix, request):
+        # both prefill methods must hand decode a state that continues the
+        # prompt identically (greedy)
+        spec, cfg, params = request.getfixturevalue(fix)
+        prompt = jax.random.randint(jax.random.fold_in(KEY, 2), (2, 7),
+                                    3, cfg.vocab)
+        outs = {}
+        for method in ("native", "replay"):
+            eng = DecodeEngine(spec=spec, cfg=cfg, params=params,
+                               max_seq=32, batch=2, temperature=0.0)
+            eng.state, tok0, pos0 = prompt_prefill(
+                spec, cfg, params, prompt, state=eng.state, method=method)
+            assert pos0 == 6
+            outs[method] = eng.generate(tok0, 6, start_pos=pos0)
+        np.testing.assert_array_equal(outs["native"], outs["replay"])
+
+
+# ---------------------------------------------------------------------------
+# on-device decode loop
+# ---------------------------------------------------------------------------
+
+
+class TestDeviceLoop:
+    @pytest.mark.parametrize("fix", ["tiny_xlstm", "tiny_qwen3"])
+    def test_matches_per_token_host_loop_greedy(self, fix, request):
+        spec, cfg, params = request.getfixturevalue(fix)
+        prompt = jax.random.randint(jax.random.fold_in(KEY, 3), (2, 9),
+                                    3, cfg.vocab)
+
+        def run(loop):
+            eng = DecodeEngine(spec=spec, cfg=cfg, params=params,
+                               max_seq=32, batch=2, temperature=0.0)
+            eng.state, tok0, pos0 = prompt_prefill(
+                spec, cfg, params, prompt, state=eng.state)
+            gen = eng.generate if loop == "device" else eng.generate_python
+            return gen(tok0, 10, start_pos=pos0)
+
+        np.testing.assert_array_equal(run("device"), run("python"))
+
+    def test_budget_early_exit_pads_minus_one(self, tiny_xlstm):
+        spec, cfg, params = tiny_xlstm
+        eng = DecodeEngine(spec=spec, cfg=cfg, params=params, max_seq=32,
+                           batch=2, temperature=0.0, chunk=8)
+        eng.admit([0, 1],
+                  [np.array([5, 6, 7], np.int32), np.array([9], np.int32)],
+                  [2, 5])
+        toks, n_gen, active = eng.decode_chunk()
+        np.testing.assert_array_equal(n_gen, [2, 5])
+        assert not active.any()
+        assert (toks[0, :2] >= 0).all() and (toks[0, 2:] == -1).all()
+        assert (toks[1, :5] >= 0).all() and (toks[1, 5:] == -1).all()
+
+    def test_admit_matches_rectangular_generate(self, tiny_xlstm):
+        # one slot admitted through the scheduler path must produce the
+        # same greedy tokens as the rectangular prefill+generate path
+        spec, cfg, params = tiny_xlstm
+        prompt = jax.random.randint(jax.random.fold_in(KEY, 4), (1, 6),
+                                    3, cfg.vocab)
+        eng = DecodeEngine(spec=spec, cfg=cfg, params=params, max_seq=32,
+                           batch=1, temperature=0.0, chunk=8)
+        eng.state, tok0, pos0 = prompt_prefill(
+            spec, cfg, params, prompt, state=eng.state)
+        rect = eng.generate(tok0, 8, start_pos=pos0)
+
+        eng.reset()
+        eng.admit([0], [np.asarray(prompt[0])], [8])
+        toks, n_gen, _ = eng.decode_chunk(8)
+        np.testing.assert_array_equal(toks, rect)
+        np.testing.assert_array_equal(n_gen, [8])
+
+
+class TestTransformerRectangularGuard:
+    def test_ragged_admit_raises(self, tiny_qwen3):
+        spec, cfg, params = tiny_qwen3
+        eng = DecodeEngine(spec=spec, cfg=cfg, params=params, max_seq=32,
+                           batch=2, temperature=0.0)
+        with pytest.raises(NotImplementedError, match="rectangular"):
+            eng.admit([0, 1], [np.array([5, 6], np.int32),
+                               np.array([5], np.int32)], [4, 4])
+
+    def test_admit_into_active_batch_raises(self, tiny_qwen3):
+        spec, cfg, params = tiny_qwen3
+        eng = DecodeEngine(spec=spec, cfg=cfg, params=params, max_seq=32,
+                           batch=2, temperature=0.0)
+        eng.admit([0], [np.array([5, 6], np.int32)], [16])
+        eng.decode_chunk(2)             # slot 0 still active
+        with pytest.raises(NotImplementedError, match="rectangular"):
+            eng.admit([1], [np.array([5, 6], np.int32)], [4])
+
+    def test_uniform_group_admit_works(self, tiny_qwen3):
+        spec, cfg, params = tiny_qwen3
+        eng = DecodeEngine(spec=spec, cfg=cfg, params=params, max_seq=32,
+                           batch=2, temperature=0.0)
+        outs = serve(eng, [Request(rid=0, prompt=np.array([5, 6, 7]),
+                                   max_new=4),
+                           Request(rid=1, prompt=np.array([8, 9, 10]),
+                                   max_new=4)],
+                     policy="batch")
+        assert len(outs) == 2 and all(len(v) == 4 for v in outs.values())
+
+
+# ---------------------------------------------------------------------------
+# sharded engine state on a host mesh (CI runs this with 4 CPU devices)
+# ---------------------------------------------------------------------------
+
+
+class TestShardedEngine:
+    def test_serve_on_host_mesh(self, tiny_xlstm):
+        spec, cfg, params = tiny_xlstm
+        mesh = mesh_mod.make_host_mesh()
+        rules = shd.rules_for_mesh(mesh)
+        n_dev = mesh.devices.size
+        batch = max(4, n_dev)           # divisible by the data axis
+        eng = DecodeEngine(spec=spec, cfg=cfg, params=params, max_seq=64,
+                           batch=batch, rules=rules, mesh=mesh,
+                           temperature=0.0, chunk=4)
+        if n_dev > 1:
+            # slots really shard over the data axis (axis 1 of every leaf)
+            leaf = eng.state["m_C"]
+            assert len(leaf.sharding.device_set) == n_dev
+            spec_axes = leaf.sharding.spec
+            assert "data" in str(spec_axes), spec_axes
+        rng = np.random.default_rng(0)
+        reqs = [Request(rid=i, prompt=rng.integers(3, cfg.vocab,
+                                                   int(rng.integers(2, 8))),
+                        max_new=int(rng.integers(2, 7)))
+                for i in range(2 * batch + 1)]
+        outs = serve(eng, reqs)
+        assert len(outs) == len(reqs)
+        for r in reqs:
+            assert len(outs[r.rid]) == r.max_new
+
+    def test_decode_state_shardings_cover_state(self, tiny_xlstm):
+        spec, cfg, params = tiny_xlstm
+        mesh = mesh_mod.make_host_mesh()
+        rules = shd.rules_for_mesh(mesh)
+        sh = adapters.decode_state_shardings(spec, cfg, rules, mesh,
+                                             batch=4, max_seq=16)
+        st = adapters.init_decode_state(spec, cfg, 4, 16)
+        assert set(sh) == set(st)       # one sharding per state leaf
