@@ -14,7 +14,9 @@ the LSTM archs and slstm_scan for xlstm's sLSTM blocks).
 ``--quick`` doubles as the CI perf-regression gate: after the (reduced-size)
 matrix it loads the latest committed ``BENCH_*.json`` at the repo root and
 FAILS (exit 1) on a regression of either paired ratio (scheduled AND
-fused — the xlstm fused cells are gated since PR 5). Ratios — not
+fused — the xlstm fused cells are gated since PR 5, the two-pass fused
+NMT decoder cells incl. the IWSLT acceptance geometry since PR 7). Ratios
+— not
 absolute ms — are what gates portably: both engines of a pair run
 interleaved on the same host, so the paired ratio cancels machine speed and
 host-load drift, while CI runners and dev machines disagree wildly on raw
@@ -36,9 +38,11 @@ step times. Two further design points, both measured:
 ``snapshot()`` is the perf-trajectory entry point: ``benchmarks.run
 --snapshot PR3`` calls it and writes ``BENCH_PR3.json`` at the repo root so
 future PRs can regress against this PR's step-times. The snapshot includes
-the acceptance cell ``lstm_lm_ptb_large`` — the Zaremba-large recurrent
+two acceptance cells: ``lstm_lm_ptb_large`` — the Zaremba-large recurrent
 geometry (2x1500, rate .65, batch 20, unroll 35; bench-reduced vocab so the
-softmax does not mask the recurrent engine under test).
+softmax does not mask the recurrent engine under test) — and ``nmt_iwslt``
+— the Luong IWSLT decoder geometry (2x512, input feeding, rate .3), whose
+``fused_vs_scheduled`` ratio prices the two-pass fused decoder.
 """
 from __future__ import annotations
 
@@ -124,6 +128,24 @@ def _acceptance_cell(quick: bool):
     return ("lstm_lm", lambda case, eng: lstm_lm.LSTMLMConfig(
         vocab=2000, embed=H, hidden=H, num_layers=2,
         plan=_plan("lstm_lm", case, 0.65, 4), engine=eng), 20, 35, steps)
+
+
+def _iwslt_cell(quick: bool):
+    """The Luong IWSLT En-Vi decoder geometry (2x512, input feeding,
+    rate .3), bench-reduced vocab so the softmax does not mask the decoder
+    recurrence under test. This is the acceptance cell for the two-pass
+    fused decoder: engine="fused" hoists the layer-0 embedding matmuls out
+    of the attention scan at (1-p) FLOPs (models/seq2seq.py)."""
+    H = 256 if quick else 512
+    steps = 3 if quick else 5
+    seq = 24 if quick else 40
+    return ("nmt", lambda case, eng: seq2seq.NMTConfig(
+        src_vocab=1000, tgt_vocab=1000, embed=H, hidden=H, num_layers=2,
+        plan=_plan("nmt", case, 0.3, 8), engine=eng), 16, seq, steps)
+
+
+# acceptance-geometry cells run a single representative case (case3)
+ACCEPTANCE_CELLS = ("lstm_lm_ptb_large", "nmt_iwslt")
 
 
 # ---------------------------------------------------------------------------
@@ -223,8 +245,9 @@ def run_matrix(quick: bool = False, cases=CASES, verbose: bool = True):
     out = {}
     cells = dict(_cells(quick))
     cells["lstm_lm_ptb_large"] = _acceptance_cell(quick)
+    cells["nmt_iwslt"] = _iwslt_cell(quick)
     for name, (kind, cfg_fn, B, S, steps) in cells.items():
-        run_cases = ("case3",) if name == "lstm_lm_ptb_large" else cases
+        run_cases = ("case3",) if name in ACCEPTANCE_CELLS else cases
         out[name] = {}
         for case in run_cases:
             row = time_engines(kind, cfg_fn, case, B, S, steps)

@@ -1,8 +1,23 @@
 """Pytest bootstrap: put src/ on sys.path so ``python -m pytest`` works
-without the ``PYTHONPATH=src`` incantation."""
+without the ``PYTHONPATH=src`` incantation; bound the XLA executable
+footprint at module boundaries."""
 import os
 import sys
+
+import pytest
 
 _SRC = os.path.join(os.path.dirname(os.path.abspath(__file__)), "src")
 if _SRC not in sys.path:
     sys.path.insert(0, _SRC)
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _fresh_jit_cache_per_module():
+    """Clear jit caches at every test-module boundary. XLA CPU segfaults
+    when a long serial run accumulates a few hundred live executables
+    (first hit ~230 tests in, PR 6; reproduced earlier as the suite grew)
+    — per-module clearing bounds the footprint for every module instead
+    of patching whichever file the crash moved to. Costs only
+    recompilation of the handful of graphs shared across modules."""
+    import jax
+    jax.clear_caches()

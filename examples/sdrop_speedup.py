@@ -23,16 +23,29 @@ The scheduled/stepwise and fused/scheduled ratios are the wall-clock value
 of the two engine refactors; the case3-vs-case1 ratio is the paper's
 structured-sparsity win.
 
+Part 3 (the NMT workload) — times the full seq2seq fwd+bwd on the three
+engines. Here the decoder is the interesting part: input feeding chains
+every step's gate matmul through the previous step's attention readout,
+so stepwise cannot hoist anything. The two-pass fused decoder
+(models/seq2seq.py, PR 7) splits the layer-0 fan-in, time-batches the
+embedding-side NR matmuls at (1-p) FLOPs in Phase A, and runs the rest of
+the recurrence (attention + input feeding included) as one decoder_scan
+kernel with a hand-derived backward.
+
     PYTHONPATH=src python examples/sdrop_speedup.py [--quick]
 """
 import argparse
+import dataclasses
 import time
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import lstm as lstm_mod
 from repro.core import masks, sparse_matmul as sm
 from repro.core.dropout_plan import DropoutPlan
+from repro.data import synthetic
+from repro.models import seq2seq
 
 B, H, N = 700, 1500, 6000            # Zaremba-large LSTM gate matmul shape
 
@@ -134,12 +147,42 @@ def full_stack(quick=False):
           f"its gathers — run without --quick)")
 
 
+def nmt_decoder(quick=False):
+    """Full seq2seq fwd+bwd per engine: prices the two-pass fused decoder
+    against the in-scan oracle on the input-feeding NMT workload."""
+    H = 192 if quick else 512
+    S = 16 if quick else 40
+    Bn = 8 if quick else 16
+    n = 3 if quick else 6
+    plan = DropoutPlan.case("case3", 0.3, block_size=8,
+                            sites=("nr", "rh", "out"))
+    cfg = seq2seq.NMTConfig(src_vocab=1000, tgt_vocab=1000, embed=H,
+                            hidden=H, num_layers=2, plan=plan)
+    batch = jax.tree.map(jnp.asarray, synthetic.nmt_pairs(
+        Bn, 1000, 1000, max_len=S, seed=0))
+    params = seq2seq.init_params(jax.random.PRNGKey(0), cfg)
+    key = jax.random.PRNGKey(3)
+    print(f"\nseq2seq NMT fwd+bwd, case3 rate .3 (2x{H}, B={Bn}, S={S}):")
+    times = {}
+    for engine in ("stepwise", "scheduled", "fused"):
+        c = dataclasses.replace(cfg, engine=engine)
+        step = jax.jit(jax.grad(
+            lambda p, b, k: seq2seq.loss_fn(p, b, c, drop_key=k)))
+        times[engine] = timeit(step, params, batch, key, n=n) * 1e3
+        print(f"  {engine:9s}: {times[engine]:8.1f} ms/step")
+    print(f"  scheduled-engine speedup: "
+          f"{times['stepwise'] / times['scheduled']:.2f}x   "
+          f"two-pass fused vs scheduled: "
+          f"{times['scheduled'] / times['fused']:.2f}x")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     args = ap.parse_args()
     matmul_phases(n=5 if args.quick else 20)
     full_stack(quick=args.quick)
+    nmt_decoder(quick=args.quick)
 
 
 if __name__ == "__main__":

@@ -163,6 +163,9 @@ def init_decode_state(spec: ArchSpec, cfg, batch: int, max_seq: int):
         return xlstm.init_state(cfg, batch)
     if spec.kind == "ssm":
         return ssm.init_state(cfg, batch, max_seq=max_seq)
+    if spec.kind == "nmt":
+        # max_seq caps the resident encoder memory (attention span)
+        return seq2seq.init_state(cfg, batch, max_src=max_seq)
     raise ValueError(f"{spec.kind} has no decode path")
 
 
@@ -178,6 +181,8 @@ def decode_fn(spec: ArchSpec):
         return xlstm.decode_step
     if spec.kind == "ssm":
         return ssm.decode_step
+    if spec.kind == "nmt":
+        return seq2seq.decode_step
     raise ValueError(f"{spec.kind} has no decode path")
 
 
@@ -186,7 +191,7 @@ def has_native_prefill(spec: ArchSpec) -> bool:
     rectangular pass (transformer KV, xlstm recurrent prefill). ssm's
     forward emits features only — its serving prefill is the shared
     masked-replay helper (serving/prefill.py)."""
-    return spec.kind in ("transformer", "xlstm")
+    return spec.kind in ("transformer", "xlstm", "nmt")
 
 
 def decode_state_shardings(spec: ArchSpec, cfg, rules, mesh, batch: int,
@@ -224,6 +229,14 @@ def prefill_fn(spec: ArchSpec):
         def f(params, batch, cfg, state, rules=None):
             return ssm.forward(params, batch["tokens"], cfg,
                                rules=rules), state
+        return f
+    if spec.kind == "nmt":
+        def f(params, batch, cfg, state, rules=None):
+            # encoder pass + teacher-forced replay of the target prefix:
+            # fills (h, c, feed) and the resident attention memory
+            # (enc_out / enc_proj / score_bias) so decode continues where
+            # the prompt left off.
+            return seq2seq.prefill(params, batch, cfg, state, rules=rules)
         return f
     raise ValueError(f"{spec.kind} has no prefill path")
 
@@ -277,4 +290,14 @@ def decode_state_axes(spec: ArchSpec, cfg):
             ax["attn_k"] = kv
             ax["attn_v"] = kv
         return ax
+    if spec.kind == "nmt":
+        mem = ("layer", "batch", "kv_seq", "head_dim")
+        return {
+            "h": ("layer", "batch", "head_dim"),
+            "c": ("layer", "batch", "head_dim"),
+            "feed": ("layer", "batch", "head_dim"),
+            "enc_out": mem,
+            "enc_proj": mem,
+            "score_bias": ("layer", "batch", "kv_seq"),
+        }
     raise ValueError(spec.kind)

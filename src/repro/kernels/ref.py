@@ -131,6 +131,67 @@ def slstm_scan_ref(xg, r, h0, c0, n0, m0, *, keep_blocks=None,
     return jnp.stack(hs), (h, (c, n, m))
 
 
+def decoder_scan_ref(gx0, us, ws, bs, w_feed, w_comb, enc_proj, enc_out,
+                     score_bias, h0, c0, feed0, *, sites):
+    """Oracle for kernels.decoder_scan: plain per-step jnp decoder loop.
+
+    Same signature/site contract as ``decoder_scan`` (canonical order
+    [feed, rh_0..rh_{nl-1}, nr_1..nr_{nl-1}], each ``(keep_blocks|None,
+    dense_mask|None, block_size, scale)``). Per step: layer-0 gates =
+    gx0_t + drop(feed) @ w_feed + drop(h_0) @ u_0; upper layers add their
+    own NR/RH sites + bias; then Luong general attention with the additive
+    ``score_bias`` and the tanh ``w_comb`` readout carried as next step's
+    feed. Differentiable via plain autodiff-of-loop (the independent
+    ground truth for the fused custom_vjp).
+    """
+    nl = len(us)
+    f32 = jnp.float32
+
+    def drop_mm(x, w, site, t):
+        kb, mask, bsz, scale = site
+        if kb is not None:
+            kb_t = kb[0 if kb.shape[0] == 1 else t]
+            ids = _unit_ids(kb_t, bsz)
+            return jnp.dot(jnp.take(x, ids, axis=-1),
+                           jnp.take(w, ids, axis=0),
+                           preferred_element_type=f32) * scale
+        if mask is not None:
+            m_t = mask[0 if mask.shape[0] == 1 else t]
+            return jnp.dot(x * m_t.astype(f32) * scale, w,
+                           preferred_element_type=f32)
+        return jnp.dot(x, w, preferred_element_type=f32)
+
+    T = gx0.shape[0]
+    hs = [h0[l].astype(f32) for l in range(nl)]
+    cs = [c0[l].astype(f32) for l in range(nl)]
+    feed = feed0.astype(f32)
+    ep = enc_proj.astype(f32)
+    eo = enc_out.astype(f32)
+    sb = score_bias.astype(f32)
+    htils = []
+    for t in range(T):
+        g = (gx0[t].astype(f32) + drop_mm(feed, w_feed, sites[0], t)
+             + drop_mm(hs[0], us[0], sites[1], t))
+        hs[0], cs[0] = lstm_pointwise_ref(g, cs[0])
+        cur = hs[0]
+        for l in range(1, nl):
+            g = (drop_mm(cur, ws[l - 1], sites[nl + l], t)
+                 + bs[l - 1].astype(f32)
+                 + drop_mm(hs[l], us[l], sites[1 + l], t))
+            hs[l], cs[l] = lstm_pointwise_ref(g, cs[l])
+            cur = hs[l]
+        scores = jnp.einsum("bh,bsh->bs", cur, ep,
+                            preferred_element_type=f32) + sb
+        alpha = jax.nn.softmax(scores, axis=-1)
+        ctxv = jnp.einsum("bs,bsh->bh", alpha, eo,
+                          preferred_element_type=f32)
+        feed = jnp.tanh(jnp.dot(jnp.concatenate([ctxv, cur], -1),
+                                w_comb.astype(f32),
+                                preferred_element_type=f32))
+        htils.append(feed)
+    return jnp.stack(htils), (jnp.stack(hs), jnp.stack(cs), feed)
+
+
 def lstm_pointwise_ref(gates, c_prev, *, forget_bias=0.0):
     """Oracle for kernels.lstm_pointwise. gates: (B, 4H) order (i,f,g,o)."""
     i, f, g, o = jnp.split(gates, 4, axis=-1)

@@ -2,19 +2,43 @@
 encoder-decoder with general attention + input feeding.
 
 Dropout comes from a ``DropoutPlan`` over named sites — "nr" / "rh" resolve
-for both stacks (full site names "enc/layer0/nr", "dec/layer1/rh", ... keep
+for both stacks (full site names "enc/layer0/nr", "dec/feed/nr", ... keep
 the PRNG streams independent), and "out" covers the encoder/decoder output
 dropout of the paper's §4.2 modification.
 
-``cfg.engine`` selects the recurrent execution path. The encoder runs the
-full engine (lstm_stack ``engine="scheduled"`` two-phase, or ``"fused"`` —
-the whole Phase-B recurrence in one persistent-scan kernel per layer). The
-decoder's NR input is ``[embed_t ; h~_{t-1}]`` — *input feeding* makes it
-sequentially dependent, so its NR matmul cannot leave the scan (and the
-attention inside the step keeps the decode loop out of the fused kernel);
-the scheduled and fused engines still hoist all mask sampling (Phase A
-schedules threaded through as scan xs — no PRNG calls in the decode scan
-body).
+``cfg.engine`` selects the recurrent execution path for BOTH stacks. The
+encoder runs the standard lstm_stack engines. The decoder historically kept
+its whole NR matmul in-scan — input feeding makes step t's NR input
+``[embed_t ; h~_{t-1}]`` depend on step t-1's attention output — but that
+joint matmul splits exactly:
+
+    [embed_t ; h~_{t-1}] @ W  ==  embed_t @ W  +  h~_{t-1} @ W_feed
+
+so the decoder params keep W with embed-only fan-in plus a separate
+``w_feed``, and teacher-forced decoding is TWO PASSES:
+
+  * **pass 1** — the recurrence. The embed half of layer 0's NR matmul has
+    no sequential dependence: it hoists out of the scan and runs
+    time-batched through ``dense_sdrop_scheduled`` at (1-p) FLOPs (site
+    "dec/layer0/nr", bias folded in). The feed half stays recurrent and is
+    carried INSIDE the scan as one more compact-gathered matmul (site
+    "dec/feed/nr") next to the RH matmuls; attention cannot leave the scan
+    (h~_{t-1} -> gates_t -> h_t -> attention_t -> h~_t is a nonlinear
+    chain) so each step's Luong attention + h~ readout runs in-scan too.
+    Under ``engine="fused"`` the whole pass is ONE ``kernels.decoder_scan``
+    call with a hand-derived fused reverse-time backward, so fwd AND bwd
+    run at (1-p) recurrent FLOPs; ``engine="scheduled"`` is the same
+    restructure as a lax.scan; ``engine="stepwise"`` is the per-step-mask
+    in-scan oracle.
+  * **pass 2** — everything after the h~ sequence exists is time-batched:
+    output dropout ("dec/out") + the vocab projection over all T steps at
+    once. (Attention already ran in pass 1 — its per-step outputs are the
+    recurrent feed — so pass 2 has no per-step work left.)
+
+This restructure is exact only under teacher forcing (the target inputs
+for all T steps are known up front). Free-running inference uses the
+single-step path: ``init_state`` / ``prefill`` / ``decode_step`` below
+serve through ``serving.DecodeEngine`` token by token.
 """
 from __future__ import annotations
 
@@ -51,9 +75,11 @@ def init_params(key, cfg: NMTConfig):
         "tgt_embed": L.uniform_init(ks[1], (cfg.tgt_vocab, cfg.embed), 0.1),
         "encoder": lstm_mod.init_lstm_params(ks[2], cfg.embed, H,
                                              cfg.num_layers),
-        # decoder consumes [embed ; input-feed h~] per step
-        "decoder": lstm_mod.init_lstm_params(ks[3], cfg.embed + H, H,
+        # decoder layer 0 consumes the embed only; the input-feed half of
+        # the old joint [embed ; h~] matmul is the separate w_feed below
+        "decoder": lstm_mod.init_lstm_params(ks[3], cfg.embed, H,
                                              cfg.num_layers),
+        "w_feed": L.uniform_init(ks[7], (H, 4 * H), 0.05),
         "w_att": L.init_dense(ks[4], H, H, bias=False),     # general score
         "w_comb": L.init_dense(ks[5], 2 * H, H, bias=False),
         "fc": L.init_dense(ks[6], H, cfg.tgt_vocab),
@@ -74,88 +100,133 @@ def encode(params, src, cfg: NMTConfig, *, ctx=None):
     return enc, state
 
 
+def _scan_site_names(nl):
+    """The decoder's IN-SCAN dropout sites, in ``kernels.decoder_scan``'s
+    canonical order [feed, rh_0..rh_{nl-1}, nr_1..nr_{nl-1}]. (Layer 0's
+    NR site "dec/layer0/nr" is the hoisted Phase-A one — not in-scan.)"""
+    return (["dec/feed/nr"]
+            + [f"dec/layer{l}/rh" for l in range(nl)]
+            + [f"dec/layer{l}/nr" for l in range(1, nl)])
+
+
+def _attend(params, cur, enc_proj, enc_out, score_bias):
+    """Luong general attention + h~ readout for one step's top state."""
+    scores = jnp.einsum("bh,bsh->bs", cur, enc_proj) + score_bias
+    alpha = jax.nn.softmax(scores, axis=-1)
+    ctx_vec = jnp.einsum("bs,bsh->bh", alpha, enc_out)
+    return jnp.tanh(L.dense(params["w_comb"],
+                            jnp.concatenate([ctx_vec, cur], -1)))
+
+
+def _dec_step(params, nl, carry, gx0_t, sts, enc_proj, enc_out, score_bias):
+    """One decoder step given the precomputed layer-0 embed gates ``gx0_t``
+    (bias folded) and the in-scan sites' DropoutStates ``sts`` (canonical
+    order, None = eval)."""
+    dec = params["decoder"]
+    hs, cs, feed = carry
+    g = (gx0_t
+         + L.dense_sdrop({"w": params["w_feed"]}, feed, sts[0])
+         + L.dense_sdrop({"w": dec[0]["U"]}, hs[0], sts[1]))
+    h, c = lstm_mod.lstm_pointwise(g, cs[0])
+    new_h, new_c = [h], [c]
+    cur = h
+    for l in range(1, nl):
+        g = (L.dense_sdrop({"w": dec[l]["W"], "b": dec[l]["b"]}, cur,
+                           sts[nl + l])
+             + L.dense_sdrop({"w": dec[l]["U"]}, hs[l], sts[1 + l]))
+        h, c = lstm_mod.lstm_pointwise(g, cs[l])
+        new_h.append(h)
+        new_c.append(c)
+        cur = h
+    h_tilde = _attend(params, cur, enc_proj, enc_out, score_bias)
+    return (jnp.stack(new_h), jnp.stack(new_c), h_tilde), h_tilde
+
+
+def _site_args(sched):
+    """MaskSchedule -> decoder_scan's (keep_blocks, dense_mask, bs, scale)."""
+    if sched.inactive:
+        return (None, None, 1, 1.0)
+    if sched.structured:
+        return (sched.keep_blocks, None, sched.spec.block_size, sched.scale)
+    return (None, sched.dense_mask, 1, sched.scale)
+
+
 def decode_train(params, tgt_in, enc_out, enc_state, cfg: NMTConfig, *,
                  ctx=None, src_mask=None):
     """Teacher-forced decoding with Luong general attention + input feeding.
 
     tgt_in: (B, St); enc_out: (B, Ss, H). Returns logits (B, St, V).
+    Two-pass restructure per the module docstring; ``cfg.engine`` picks the
+    pass-1 execution (stepwise oracle / scheduled scan / fused kernel).
     """
     if ctx is None:
         ctx = cfg.plan.bind(None)
     B, St = tgt_in.shape
     H = cfg.hidden
+    nl = cfg.num_layers
+    dec = params["decoder"]
     x = jnp.take(params["tgt_embed"], tgt_in, axis=0)      # (B,St,E)
+    x_seq = x.transpose(1, 0, 2)                           # (St,B,E)
     enc_proj = L.dense(params["w_att"], enc_out)           # (B,Ss,H)
     if src_mask is None:
         src_mask = jnp.ones(enc_out.shape[:2], bool)
-
-    dec_params = params["decoder"]
-    nl = cfg.num_layers
-    in_dims = [cfg.embed + H] + [H] * (nl - 1)
-
-    # fused hoists mask sampling exactly like scheduled here — the decode
-    # loop itself stays a lax.scan (input feeding + attention in the body).
-    scheduled = cfg.engine != "stepwise"
-    if scheduled:
-        # Phase A: all T steps' masks for every decoder site, sampled
-        # pre-scan. PER_STEP rows ride through the scan as xs, FIXED masks
-        # are closed over as scan constants — no in-scan PRNG either way.
-        # Input feeding ([embed_t ; h~_{t-1}] entering W) keeps the NR
-        # matmul itself inside the scan — it is sequentially dependent.
-        nr_scheds = [ctx.schedule(f"dec/layer{l}/nr", St, B, in_dims[l])
-                     for l in range(nl)]
-        rh_scheds = [ctx.schedule(f"dec/layer{l}/rh", St, B, H)
-                     for l in range(nl)]
-        drop_xs = ([s.scan_rows() for s in nr_scheds],
-                   [s.scan_rows() for s in rh_scheds])
-        nr_const = [s.state(0) if r is None else None
-                    for s, r in zip(nr_scheds, drop_xs[0])]
-        rh_const = [s.state(0) if r is None else None
-                    for s, r in zip(rh_scheds, drop_xs[1])]
-    else:
-        drop_xs = None
-
-    def drop_states(t, rows):
-        if scheduled:
-            nr_rows, rh_rows = rows
-            return ([nr_const[l] if nr_rows[l] is None
-                     else nr_scheds[l].state_for_row(nr_rows[l])
-                     for l in range(nl)],
-                    [rh_const[l] if rh_rows[l] is None
-                     else rh_scheds[l].state_for_row(rh_rows[l])
-                     for l in range(nl)])
-        return ([ctx.state(f"dec/layer{l}/nr", B, in_dims[l], t=t)
-                 for l in range(nl)],
-                [ctx.state(f"dec/layer{l}/rh", B, H, t=t) for l in range(nl)])
-
-    def step(carry, inp):
-        (hs, cs, feed) = carry
-        x_t, t, rows = inp                                 # x_t: (B,E)
-        inp_t = jnp.concatenate([x_t, feed], axis=-1)
-        nr_sts, rh_sts = drop_states(t, rows)
-        new_h, new_c = [], []
-        cur = inp_t
-        for l in range(nl):
-            h, c = lstm_mod.lstm_cell(dec_params[l], cur, hs[l], cs[l],
-                                      nr_sts[l], rh_sts[l])
-            new_h.append(h)
-            new_c.append(c)
-            cur = h
-        # Luong general attention on the top hidden state
-        scores = jnp.einsum("bh,bsh->bs", cur, enc_proj)
-        scores = jnp.where(src_mask, scores, -1e30)
-        alpha = jax.nn.softmax(scores, axis=-1)
-        ctx_vec = jnp.einsum("bs,bsh->bh", alpha, enc_out)
-        h_tilde = jnp.tanh(L.dense(params["w_comb"],
-                                   jnp.concatenate([ctx_vec, cur], -1)))
-        return (jnp.stack(new_h), jnp.stack(new_c), h_tilde), h_tilde
-
-    h0 = enc_state.h
-    c0 = enc_state.c
+    score_bias = jnp.where(src_mask, 0.0, -1e30).astype(jnp.float32)
+    h0, c0 = enc_state.h, enc_state.c
     feed0 = jnp.zeros((B, H), x.dtype)
-    (_, _, _), h_tildes = jax.lax.scan(
-        step, (h0, c0, feed0),
-        (x.transpose(1, 0, 2), jnp.arange(St), drop_xs))
+    site_names = _scan_site_names(nl)
+
+    if cfg.engine == "stepwise":
+        # oracle: everything in-scan, masks drawn per step via ctx.state
+        # (row t of a schedule is bit-identical — same per-step key).
+        def step(carry, xs):
+            x_t, t = xs
+            gx0_t = L.dense_sdrop(
+                {"w": dec[0]["W"], "b": dec[0]["b"]}, x_t,
+                ctx.state("dec/layer0/nr", B, cfg.embed, t=t))
+            sts = [ctx.state(n, B, H, t=t) for n in site_names]
+            return _dec_step(params, nl, carry, gx0_t, sts, enc_proj,
+                             enc_out, score_bias)
+
+        _, h_tildes = jax.lax.scan(step, (h0, c0, feed0),
+                                   (x_seq, jnp.arange(St)))
+    else:
+        # Phase A (both remaining engines): the hoisted embed-half NR
+        # matmul, time-batched + compacted at (1-p) FLOPs, bias folded.
+        gx0 = L.dense_sdrop_scheduled(
+            {"w": dec[0]["W"], "b": dec[0]["b"]}, x_seq,
+            ctx.schedule("dec/layer0/nr", St, B, cfg.embed))
+        scheds = [ctx.schedule(n, St, B, H) for n in site_names]
+        if cfg.engine == "fused":
+            from repro.kernels import ops as _kops
+            nr0 = ctx.spec("dec/layer0/nr")
+            impl = next((s.spec.impl for s in scheds if not s.inactive),
+                        nr0.impl if nr0.active else "xla")
+            h_tildes, _ = _kops.decoder_scan(
+                gx0, tuple(p["U"] for p in dec),
+                tuple(p["W"] for p in dec[1:]),
+                tuple(p["b"] for p in dec[1:]),
+                params["w_feed"], params["w_comb"]["w"], enc_proj, enc_out,
+                score_bias, h0, c0, feed0,
+                sites=tuple(_site_args(s) for s in scheds), impl=impl)
+        else:
+            # scheduled: same restructure as a slim lax.scan. PER_STEP
+            # mask rows ride through as xs, FIXED ones close over as
+            # constants — no PRNG and no embed matmul in the body.
+            xs_rows = tuple(s.scan_rows() for s in scheds)
+            consts = [s.state(0) if r is None else None
+                      for s, r in zip(scheds, xs_rows)]
+
+            def step(carry, xs):
+                gx0_t, rows = xs
+                sts = [consts[i] if rows[i] is None
+                       else scheds[i].state_for_row(rows[i])
+                       for i in range(len(scheds))]
+                return _dec_step(params, nl, carry, gx0_t, sts, enc_proj,
+                                 enc_out, score_bias)
+
+            _, h_tildes = jax.lax.scan(step, (h0, c0, feed0),
+                                       (gx0, xs_rows))
+    # pass 2: time-batched output dropout + vocab projection.
     ht = h_tildes.transpose(1, 0, 2)                       # (B,St,H)
     ht = ctx.apply("dec/out", ht)
     return L.dense(params["fc"], ht).astype(jnp.float32)
@@ -174,3 +245,86 @@ def loss_fn(params, batch, cfg: NMTConfig, *, drop_key=None, rules=None,
     if mask is not None:
         return (nll * mask).sum() / jnp.maximum(mask.sum(), 1)
     return nll.mean()
+
+
+# ---------------------------------------------------------------------------
+# serving: free-running inference stays on the single-step path (the
+# two-pass restructure needs all T inputs up front — teacher forcing).
+# ---------------------------------------------------------------------------
+
+
+def init_state(cfg: NMTConfig, batch: int, max_src: int):
+    """Fresh decode state (every leaf batch-at-axis-1 for slot scatter).
+
+    ``score_bias`` starts all -1e30: before prefill the softmax is uniform
+    over zero encoder memory (finite, contributes nothing)."""
+    nl, H = cfg.num_layers, cfg.hidden
+    f32 = jnp.float32
+    return {
+        "h": jnp.zeros((nl, batch, H), f32),
+        "c": jnp.zeros((nl, batch, H), f32),
+        "feed": jnp.zeros((1, batch, H), f32),
+        "enc_out": jnp.zeros((1, batch, max_src, H), f32),
+        "enc_proj": jnp.zeros((1, batch, max_src, H), f32),
+        "score_bias": jnp.full((1, batch, max_src), -1e30, f32),
+    }
+
+
+def _eval_step(params, nl, x_t, h, c, feed, enc_proj, enc_out, score_bias):
+    """One no-dropout decoder step (the training step with eval states)."""
+    dec = params["decoder"]
+    gx0_t = L.dense_sdrop({"w": dec[0]["W"], "b": dec[0]["b"]}, x_t, None)
+    (h, c, h_tilde), _ = _dec_step(params, nl, (h, c, feed), gx0_t,
+                                   [None] * (2 * nl), enc_proj, enc_out,
+                                   score_bias)
+    return h, c, h_tilde
+
+
+def prefill(params, batch, cfg: NMTConfig, state, *, rules=None):
+    """Fill the decode state from {"src", "tgt_in", ["src_mask"]}: run the
+    encoder, park its memory (enc_out / enc_proj / score_bias) in the
+    state, then replay the target prefix through eval decoder steps so
+    (h, c, feed) sit exactly where teacher-forced decoding left them."""
+    del rules
+    src = batch["src"]
+    B, Ss = src.shape
+    enc, enc_state = encode(params, src, cfg)              # eval ctx
+    enc_proj = L.dense(params["w_att"], enc)
+    src_mask = batch.get("src_mask")
+    if src_mask is None:
+        src_mask = jnp.ones((B, Ss), bool)
+    sb = jnp.where(src_mask, 0.0, -1e30).astype(jnp.float32)
+    state = dict(state)
+    state["enc_out"] = state["enc_out"].at[0, :, :Ss, :].set(enc)
+    state["enc_proj"] = state["enc_proj"].at[0, :, :Ss, :].set(enc_proj)
+    state["score_bias"] = (jnp.full_like(state["score_bias"], -1e30)
+                           .at[0, :, :Ss].set(sb))
+    nl, H = cfg.num_layers, cfg.hidden
+    ep, eo, sbf = state["enc_proj"][0], state["enc_out"][0], \
+        state["score_bias"][0]
+    x = jnp.take(params["tgt_embed"], batch["tgt_in"], axis=0)
+
+    def step(carry, x_t):
+        h, c, feed = carry
+        h, c, h_tilde = _eval_step(params, nl, x_t, h, c, feed, ep, eo, sbf)
+        return (h, c, h_tilde), None
+
+    feed0 = jnp.zeros((B, H), enc.dtype)
+    (h, c, feed), _ = jax.lax.scan(
+        step, (enc_state.h, enc_state.c, feed0), x.transpose(1, 0, 2))
+    state["h"], state["c"], state["feed"] = h, c, feed[None]
+    return None, state
+
+
+def decode_step(params, cfg: NMTConfig, state, tokens, pos, *, rules=None):
+    """One serving decode step: tokens (B, 1) -> (logits (B, 1, V), state).
+    ``pos`` is ignored — the recurrent state is O(1) in position."""
+    del pos, rules
+    x_t = jnp.take(params["tgt_embed"], tokens[:, 0], axis=0)
+    h, c, h_tilde = _eval_step(
+        params, cfg.num_layers, x_t, state["h"], state["c"],
+        state["feed"][0], state["enc_proj"][0], state["enc_out"][0],
+        state["score_bias"][0])
+    logits = L.dense(params["fc"], h_tilde).astype(jnp.float32)[:, None]
+    state = {**state, "h": h, "c": c, "feed": h_tilde[None]}
+    return logits, state

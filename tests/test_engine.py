@@ -595,12 +595,80 @@ class TestFusedServingHandoff:
         np.testing.assert_array_equal(first[:, 0], ref_next)
 
 
+class TestSeq2SeqServingHandoff:
+    """Serving regression for the NMT decoder: params trained under
+    engine="fused" (the two-pass decoder) hand off to serving/engine.py's
+    prefill -> step path — the encoder memory (enc_out / enc_proj /
+    score_bias) plus the teacher-forced target replay land (h, c, feed)
+    exactly where training-time decoding left them."""
+
+    def _setup_fused(self, steps=3):
+        from repro.configs import adapters
+        from repro.configs.paper_models import LUONG_NMT
+        cfg = LUONG_NMT.smoke(engine="fused")
+        batch = jax.tree.map(jnp.asarray, synthetic.nmt_pairs(
+            2, cfg.src_vocab, cfg.tgt_vocab, max_len=10, seed=5))
+        lfn = adapters.loss_fn("nmt")
+        params = adapters.init_params("nmt", KEY, cfg)
+
+        @jax.jit
+        def step(p, i):
+            l, g = jax.value_and_grad(lambda q: lfn(
+                q, batch, cfg, drop_key=jax.random.fold_in(KEY, 100 + i),
+                step=i))(p)
+            return jax.tree.map(lambda a, b: a - 0.05 * b, p, g), l
+
+        for i in range(steps):
+            params, loss = step(params, jnp.int32(i))
+        assert bool(jnp.isfinite(loss)), "fused training diverged"
+        return LUONG_NMT, cfg, params, batch
+
+    def test_prefill_step_deterministic_finite(self):
+        from repro.serving.engine import DecodeEngine
+        spec, cfg, params, batch = self._setup_fused()
+        tok = batch["tgt_in"]
+        T = tok.shape[1]
+        outs = []
+        for _ in range(2):                 # same prompt twice: deterministic
+            eng = DecodeEngine(spec=spec, cfg=cfg, params=params,
+                               max_seq=16, batch=2, temperature=0.0)
+            eng.prefill({"src": batch["src"], "src_mask": batch["src_mask"],
+                         "tgt_in": tok[:, :-1]})
+            for k, v in eng.state.items():
+                assert bool(jnp.isfinite(v).all()), k
+            # prefill parked real attention memory: kept source positions
+            # moved their additive score bias off the -1e30 init
+            assert float(eng.state["score_bias"].max()) == 0.0
+            outs.append(eng.generate(tok[:, -1:], 8, start_pos=T - 1))
+        np.testing.assert_array_equal(outs[0], outs[1])
+        assert outs[0].shape == (2, 8)
+
+    def test_prefill_continues_forward(self):
+        """Greedy first token from the prefill state equals the argmax of
+        the teacher-forced forward logits at the last position."""
+        from repro.serving.engine import DecodeEngine
+        spec, cfg, params, batch = self._setup_fused(steps=2)
+        tok = batch["tgt_in"]
+        T = tok.shape[1]
+        ecfg = dataclasses.replace(cfg, engine="stepwise")
+        enc, st = seq2seq.encode(params, batch["src"], ecfg)
+        logits = seq2seq.decode_train(params, tok, enc, st, ecfg,
+                                      src_mask=batch["src_mask"])
+        ref_next = np.asarray(jnp.argmax(logits[:, -1], -1))
+        eng = DecodeEngine(spec=spec, cfg=cfg, params=params, max_seq=16,
+                           batch=2, temperature=0.0)
+        eng.prefill({"src": batch["src"], "src_mask": batch["src_mask"],
+                     "tgt_in": tok[:, :-1]})
+        first = eng.generate(tok[:, -1:], 1, start_pos=T - 1)
+        np.testing.assert_array_equal(first[:, 0], ref_next)
+
+
 # ---------------------------------------------------------------------------
 # Property-based 3-engine equivalence (hypothesis). Random (T, B, H, rate,
 # block, case) draws must give allclose forwards AND grads on scheduled /
-# stepwise / fused, for both the LSTM stack and the sLSTM block. The draw
-# pools are small sets so jit compilation stays bounded; the checks
-# themselves are exact-shape-generic.
+# stepwise / fused, for the LSTM stack, the sLSTM block, and the seq2seq
+# two-pass decoder. The draw pools are small sets so jit compilation stays
+# bounded; the checks themselves are exact-shape-generic.
 # ---------------------------------------------------------------------------
 
 
@@ -670,6 +738,36 @@ def _check_slstm_block_engines(T, B, heads, dh, rate, block, case, seed):
                                        err_msg=f"{e} {path}")
 
 
+def _check_seq2seq_engines(L, B, H, rate, block, case, seed):
+    """Two-pass fused NMT decoder == scheduled == stepwise: loss and every
+    param grad (w_feed, split-fan-in decoder, attention, w_comb, embeds,
+    fc) agree across the three engines. ``L`` is the synthetic pair
+    max_len (>= 8 per synthetic.nmt_pairs); embed != hidden so the hoisted
+    layer-0 NR site exercises its own dim."""
+    bs = block if case in ("case3", "case4") else 1
+    plan = DropoutPlan.case(case, rate, block_size=bs,
+                            sites=("nr", "rh", "out"))
+    batch = synthetic.nmt_pairs(B, 60, 60, max_len=L, seed=seed % 97)
+    cfg = seq2seq.NMTConfig(src_vocab=60, tgt_vocab=60, embed=16, hidden=H,
+                            num_layers=2, plan=plan)
+    params = seq2seq.init_params(jax.random.PRNGKey(seed), cfg)
+    dk = jax.random.PRNGKey(seed + 2)
+
+    def loss(p, engine):
+        c = dataclasses.replace(cfg, engine=engine)
+        return seq2seq.loss_fn(p, batch, c, drop_key=dk, step=seed % 5)
+
+    l1, g1 = jax.value_and_grad(lambda p: loss(p, "stepwise"))(params)
+    for e in ("scheduled", "fused"):
+        l, g = jax.value_and_grad(lambda p: loss(p, e))(params)
+        np.testing.assert_allclose(l, l1, rtol=2e-5, atol=2e-5, err_msg=e)
+        for (path, a), (_, b) in zip(
+                jax.tree_util.tree_flatten_with_path(g)[0],
+                jax.tree_util.tree_flatten_with_path(g1)[0]):
+            np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4,
+                                       err_msg=f"{e} {path}")
+
+
 def test_engines_equiv_grid():
     """Deterministic mini-grid through the same checks the hypothesis
     properties run (coverage even where hypothesis is not installed)."""
@@ -677,6 +775,8 @@ def test_engines_equiv_grid():
                               case="case3", seed=11)
     _check_slstm_block_engines(T=5, B=2, heads=2, dh=16, rate=0.5, block=4,
                                case="case3", seed=12)
+    _check_seq2seq_engines(L=9, B=3, H=16, rate=0.5, block=4,
+                           case="case3", seed=13)
 
 
 if hypothesis is not None:
@@ -701,6 +801,12 @@ if hypothesis is not None:
         def test_slstm_block(self, T, B, heads, dh, rate, block, case, seed):
             _check_slstm_block_engines(T, B, heads, dh, rate, block, case,
                                        seed)
+
+        @settings(max_examples=6, deadline=None)
+        @given(L=hst.sampled_from((8, 11)), B=hst.sampled_from((1, 3)),
+               H=hst.sampled_from((16, 24)), **_ENGINE_DRAW)
+        def test_seq2seq(self, L, B, H, rate, block, case, seed):
+            _check_seq2seq_engines(L, B, H, rate, block, case, seed)
 else:                                          # pragma: no cover
     @pytest.mark.skip(reason="hypothesis not installed")
     def test_engine_properties():

@@ -439,6 +439,147 @@ class TestSLSTMScan:
                            block_size=4)
 
 
+class TestDecoderScan:
+    """Two-pass fused seq2seq decoder scan vs the per-step jnp oracle.
+
+    The decoder's 2*nl in-scan dropout sites (input-feed NR / per-layer RH
+    / upper-layer NR) are swept over mode (structured / random-dense / off,
+    plus a mixed assignment) x time pattern (per-step / FIXED one-row) x
+    impl (pallas interpret / xla): forward (h~ sequence + attention-scan
+    finals h/c/feed) and gradients through the custom_vjp against
+    autodiff-of-oracle, for every differentiable operand.
+    """
+
+    NL = 2
+    DIFF = ("gx0", "us", "ws", "bs", "w_feed", "w_comb", "enc_proj",
+            "enc_out", "h0", "c0", "feed0")
+
+    def _args(self, T, B, S, H):
+        G = 4 * H
+
+        def m(shape, seed, scale=0.4):
+            return mk(shape, jnp.float32, seed) * scale
+
+        sb = jnp.where(jnp.arange(S) < S - 1, 0.0, -1e30)  # last src = pad
+        return dict(
+            gx0=m((T, B, G), 70),
+            us=tuple(m((H, G), 71 + i) for i in range(self.NL)),
+            ws=tuple(m((H, G), 74 + i) for i in range(self.NL - 1)),
+            bs=tuple(m((G,), 77 + i) for i in range(self.NL - 1)),
+            w_feed=m((H, G), 80),
+            w_comb=m((2 * H, H), 81),
+            enc_proj=m((B, S, H), 82),
+            enc_out=m((B, S, H), 83),
+            score_bias=jnp.broadcast_to(sb, (B, S)).astype(jnp.float32),
+            h0=m((self.NL, B, H), 84, 0.5),
+            c0=m((self.NL, B, H), 85, 0.5),
+            feed0=m((B, H), 86, 0.5),
+        )
+
+    def _sites(self, kind, T, B, H, bs):
+        sites = []
+        for i in range(2 * self.NL):
+            k = ("off", "sf", "sp", "dp")[i % 4] if kind == "mixed" else kind
+            if k == "off":
+                sites.append((None, None, 1, 1.0))
+            elif k in ("sf", "sp"):           # structured, FIXED / per-step
+                rows = 1 if k == "sf" else T
+                kb = jnp.stack([masks.sample_keep_blocks(
+                    jax.random.fold_in(KEY, 90 + 16 * i + t), H, 0.5, bs)
+                    for t in range(rows)])
+                sites.append((kb, None, bs, 2.0))
+            else:                             # random-dense, FIXED / per-step
+                rows = 1 if k == "df" else T
+                dm = (jax.random.uniform(jax.random.fold_in(KEY, 60 + i),
+                                         (rows, B, H)) > 0.5
+                      ).astype(jnp.float32)
+                sites.append((None, dm, 1, 2.0))
+        return tuple(sites)
+
+    def _check(self, kind, T=3, B=2, S=4, H=8, bs=4):
+        args = self._args(T, B, S, H)
+        sites = self._sites(kind, T, B, H, bs)
+        wy = mk((T, B, H), jnp.float32, 87)
+        wh = mk((self.NL, B, H), jnp.float32, 88)
+        wf = mk((B, H), jnp.float32, 89)
+
+        def loss(fn):
+            def f(d):
+                a = dict(args)
+                a.update(d)
+                htil, (hf, cf, ff) = fn(**a, sites=sites)
+                return (jnp.sum(htil * wy) + jnp.sum(hf * wh)
+                        + jnp.sum(cf) + jnp.sum(ff * wf))
+            return f
+
+        d0 = {k: args[k] for k in self.DIFF}
+        y_ref = ref.decoder_scan_ref(**args, sites=sites)
+        g_ref = jax.grad(loss(ref.decoder_scan_ref))(d0)
+        for impl in ("xla", "pallas"):
+            def fn(**kw):
+                return ops.decoder_scan(**kw, impl=impl)
+
+            y = fn(**args, sites=sites)
+            np.testing.assert_allclose(y[0], y_ref[0], rtol=2e-5, atol=2e-5,
+                                       err_msg=f"{kind}/{impl} h_tildes")
+            for a, b, nm in zip(y[1], y_ref[1], ("h", "c", "feed")):
+                np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5,
+                                           err_msg=f"{kind}/{impl} {nm}_fin")
+            g = jax.grad(loss(fn))(d0)
+            for (p, a), (_, b) in zip(
+                    jax.tree_util.tree_flatten_with_path(g)[0],
+                    jax.tree_util.tree_flatten_with_path(g_ref)[0]):
+                np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4,
+                                           err_msg=f"{kind}/{impl} grad {p}")
+
+    @pytest.mark.parametrize("kind", ["off", "sf", "sp", "df", "dp", "mixed"])
+    def test_site_modes(self, kind):
+        self._check(kind)
+
+    def test_larger_shapes(self):
+        self._check("mixed", T=5, B=3, S=6, H=16, bs=4)
+
+    def test_structured_fixed_one_row(self):
+        """A (1, nk) FIXED table == the same row broadcast to all T steps."""
+        T, B, S, H, bs = 4, 2, 4, 8, 4
+        args = self._args(T, B, S, H)
+        kb = jnp.stack([masks.sample_keep_blocks(
+            jax.random.fold_in(KEY, 200 + t), H, 0.5, bs) for t in range(T)])
+
+        def run(impl, rows):
+            sites = tuple((rows, None, bs, 2.0) for _ in range(2 * self.NL))
+            return ops.decoder_scan(**args, sites=sites, impl=impl)
+
+        for impl in ("xla", "pallas"):
+            y1 = run(impl, kb[:1])
+            y2 = run(impl, jnp.broadcast_to(kb[:1], (T, kb.shape[1])))
+            np.testing.assert_allclose(y1[0], y2[0], rtol=1e-6, atol=1e-6,
+                                       err_msg=impl)
+
+    def test_per_step_masks_differ(self):
+        """Each step really gathers its own kept blocks (not step 0's)."""
+        T, B, S, H, bs = 4, 2, 4, 16, 4
+        args = self._args(T, B, S, H)
+        kb = jnp.stack([masks.sample_keep_blocks(
+            jax.random.fold_in(KEY, 300 + t), H, 0.5, bs) for t in range(T)])
+
+        def run(impl, rows):
+            sites = ((None, None, 1, 1.0),) + tuple(
+                (rows, None, bs, 2.0) for _ in range(2 * self.NL - 1))
+            return ops.decoder_scan(**args, sites=sites, impl=impl)
+
+        for impl in ("xla", "pallas"):
+            y = run(impl, kb)
+            y0 = run(impl, jnp.broadcast_to(kb[:1], kb.shape))
+            assert not np.allclose(np.asarray(y[0]), np.asarray(y0[0])), impl
+
+    def test_wrong_site_count_raises(self):
+        args = self._args(3, 2, 4, 8)
+        with pytest.raises(ValueError):
+            ops.decoder_scan(**args,
+                             sites=((None, None, 1, 1.0),) * (2 * self.NL - 1))
+
+
 class TestLSTMPointwise:
     @pytest.mark.parametrize("B,H", [(4, 32), (8, 650), (128, 512), (3, 17)])
     @pytest.mark.parametrize("fb", [0.0, 1.0])
