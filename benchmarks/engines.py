@@ -15,7 +15,10 @@ the LSTM archs and slstm_scan for xlstm's sLSTM blocks).
 matrix it loads the latest committed ``BENCH_*.json`` at the repo root and
 FAILS (exit 1) on a regression of either paired ratio (scheduled AND
 fused — the xlstm fused cells are gated since PR 5, the two-pass fused
-NMT decoder cells incl. the IWSLT acceptance geometry since PR 7). Ratios
+NMT decoder cells incl. the IWSLT acceptance geometry since PR 7) or of
+the PR 8 ragged cell (``run_ragged``: token-packed vs rectangular
+effective tokens/sec on a skewed-length corpus — absolute ``RAGGED_FLOOR``
+plus drift vs the snapshot's ``ragged_quick`` row). Ratios
 — not
 absolute ms — are what gates portably: both engines of a pair run
 interleaved on the same host, so the paired ratio cancels machine speed and
@@ -237,6 +240,160 @@ def time_engines(kind, cfg_fn, case, batch, seq, steps, warmup=2):
 
 
 # ---------------------------------------------------------------------------
+# ragged cell: token-packed vs rectangular padding (PR 8)
+# ---------------------------------------------------------------------------
+
+
+def _ragged_cfg(quick: bool):
+    H = 128 if quick else 256
+    return lstm_lm.LSTMLMConfig(
+        vocab=1000, embed=H, hidden=H, num_layers=2,
+        plan=_plan("lstm_lm", "case3", 0.5, 8), engine="scheduled")
+
+
+class _RaggedRunner:
+    """One jitted LM training cell stepped over externally supplied batches
+    (the ragged bench feeds several static shapes — one trace per bucket
+    cap; all traces are compiled during the warmup epoch)."""
+
+    def __init__(self, cfg):
+        from repro.configs import adapters
+        from repro.distributed.sharding import strip
+
+        lfn = adapters.loss_fn("lstm_lm")
+        self.key = jax.random.PRNGKey(0)
+        self.params = strip(adapters.init_params("lstm_lm", self.key, cfg))
+        self.opt = optim.chain(optim.clip_by_global_norm(1.0),
+                               optim.adamw(1e-3))
+        self.opt_state = self.opt.init(self.params)
+
+        @jax.jit
+        def step_fn(params, opt_state, b, key, i):
+            l, g = jax.value_and_grad(
+                lambda p: lfn(p, b, cfg, drop_key=key, step=i))(params)
+            upd, opt_state = self.opt.update(g, opt_state, params)
+            return optim.apply_updates(params, upd), opt_state, l
+
+        self._step = step_fn
+
+    def step(self, batch, i):
+        self.params, self.opt_state, loss = self._step(
+            self.params, self.opt_state, batch,
+            jax.random.fold_in(self.key, i), jnp.int32(i))
+        jax.block_until_ready(loss)
+
+
+def run_ragged(quick: bool = False, rounds: int = 3, verbose: bool = True):
+    """Effective-tokens/sec: token-packed bucketed batches vs rectangular
+    padding, same skewed-length corpus, same token budget per batch.
+
+    Rectangular pads every doc to max_len (rows = budget // max_len) and
+    masks the loss; packed buckets by length caps (data/pipeline.py) so
+    short docs stop paying the longest row's FLOPs. Both modes train the
+    identical masked objective over the identical corpus, so the gated
+    quantity — ``packed_vs_rect`` = median per-round ratio of epoch
+    effective tokens/sec (real tokens / wall) — isolates the padding FLOPs.
+    Epochs alternate rect/packed per round, the paired-drift estimator of
+    ``time_engines``.
+    """
+    from repro.data import pipeline
+
+    cfg = _ragged_cfg(quick)
+    n_docs = 192 if quick else 768
+    max_len = 64
+    budget = 1024 if quick else 2048
+    docs = synthetic.lm_ragged_docs(n_docs, cfg.vocab, max_len, seed=0,
+                                    skew=1.0)
+    real_tokens = int(docs["lengths"].sum())
+
+    rows = budget // max_len
+    rect_batches = []
+    for j in range(0, n_docs, rows):
+        b = {}
+        for k, v in docs.items():
+            pad = np.zeros((rows,) + v.shape[1:], v.dtype)
+            pad[:min(rows, n_docs - j)] = v[j:j + rows]
+            b[k] = jnp.asarray(pad)
+        rect_batches.append(b)
+    pb = pipeline.PackedBatcher(docs, budget, seed=0)
+    packed_batches = [jax.tree.map(jnp.asarray, pb.batch_fn(s))
+                      for s in range(pb.steps_per_epoch)]
+
+    def slot_util(batches):
+        slots = sum(int(b["tokens"].size) for b in batches)
+        return real_tokens / slots
+
+    runners = {"rect": _RaggedRunner(cfg), "packed": _RaggedRunner(cfg)}
+    epochs = {"rect": rect_batches, "packed": packed_batches}
+
+    def epoch(mode, i0):
+        t0 = time.time()
+        for j, b in enumerate(epochs[mode]):
+            runners[mode].step(b, i0 + j)
+        return time.time() - t0
+
+    for mode in runners:               # warmup: compiles every bucket shape
+        epoch(mode, 0)
+    walls = {"rect": [], "packed": []}
+    for r in range(rounds):
+        for mode in runners:
+            walls[mode].append(epoch(mode, (r + 1) * len(epochs[mode])))
+    row = {
+        "rect_tok_s": real_tokens / float(np.min(walls["rect"])),
+        "packed_tok_s": real_tokens / float(np.min(walls["packed"])),
+        "packed_vs_rect": float(np.median(
+            [a / b for a, b in zip(walls["rect"], walls["packed"])])),
+        "slot_util_rect": slot_util(rect_batches),
+        "slot_util_packed": slot_util(packed_batches),
+        "real_tokens": real_tokens,
+    }
+    if verbose:
+        print(f"{'ragged_lm':20s} pack: rect {row['rect_tok_s']:9.0f} tok/s "
+              f"(util {row['slot_util_rect']:.2f})  packed "
+              f"{row['packed_tok_s']:9.0f} tok/s "
+              f"(util {row['slot_util_packed']:.2f})  "
+              f"packed/rect {row['packed_vs_rect']:.2f}x")
+    jax.clear_caches()
+    gc.collect()
+    return row
+
+
+# minimum packed/rect effective-tokens/sec the ragged cell must show —
+# the PR 8 acceptance floor, checked in ABSOLUTE terms (it is already a
+# same-host paired ratio) on top of the drift check vs the snapshot
+RAGGED_FLOOR = 1.2
+
+
+def check_ragged(row: dict, baseline_path: str,
+                 tolerance_cell: float = 1.5) -> list:
+    """Gate the ragged cell: absolute RAGGED_FLOOR + drift vs the
+    snapshot's ``ragged_quick`` row (absent in pre-PR8 snapshots: floor
+    only)."""
+    failures = []
+    r = row["packed_vs_rect"]
+    status = "FAIL" if r < RAGGED_FLOOR else "ok"
+    print(f"  gate {'ragged_lm':20s} packed/rect: {r:.2f}x "
+          f"(floor {RAGGED_FLOOR}x) [{status}]")
+    if r < RAGGED_FLOOR:
+        failures.append(f"ragged_lm: packed/rect effective tokens/sec "
+                        f"{r:.2f}x below the {RAGGED_FLOOR}x floor")
+    with open(baseline_path) as f:
+        base = json.load(f)
+    b = base.get("ragged_quick")
+    if b and "packed_vs_rect" in b:
+        drift = b["packed_vs_rect"] / r
+        status = "FAIL" if drift > tolerance_cell else "ok"
+        print(f"  gate {'ragged_lm':20s} drift: baseline "
+              f"{b['packed_vs_rect']:.2f}x now {r:.2f}x  "
+              f"drift {drift:.2f} [{status}]")
+        if drift > tolerance_cell:
+            failures.append(
+                f"ragged_lm: packed/rect fell {b['packed_vs_rect']:.2f}x "
+                f"-> {r:.2f}x (drift {drift:.2f} > {tolerance_cell})")
+    return failures
+
+
+# ---------------------------------------------------------------------------
 # matrix + snapshot
 # ---------------------------------------------------------------------------
 
@@ -290,6 +447,8 @@ def snapshot(tag: str, out_path: str, quick: bool = False) -> dict:
         "arch_ratios": arch_ratios(cells),
         # scheduled/fused per arch: the value of the fused Phase-B pass
         "fused_arch_ratios": arch_ratios(cells, "fused_vs_scheduled"),
+        # token-packed vs rectangular effective tokens/sec (PR 8)
+        "ragged": run_ragged(quick=quick),
     }
     if not quick:
         # the CI gate runs --quick, whose smaller geometries have
@@ -298,6 +457,9 @@ def snapshot(tag: str, out_path: str, quick: bool = False) -> dict:
         print("\nquick-mode matrix (CI gate baseline):")
         snap["quick_cells"] = run_matrix(quick=True)
         snap["quick_arch_ratios"] = arch_ratios(snap["quick_cells"])
+        snap["ragged_quick"] = run_ragged(quick=True)
+    else:
+        snap["ragged_quick"] = snap["ragged"]
     with open(out_path, "w") as f:
         json.dump(snap, f, indent=1, default=float)
     print(f"\nsnapshot {tag} -> {out_path}")
@@ -415,9 +577,11 @@ def check_regression(cells: dict, baseline_path: str,
 def main(quick: bool = False, check: bool = True, out: str = "",
          tolerance_cell: float = 1.5, tolerance_arch: float = 1.25) -> dict:
     cells = run_matrix(quick=quick)
+    ragged = run_ragged(quick=quick)
     result = {"backend": jax.default_backend(), "quick": bool(quick),
               "cells": cells, "arch_ratios": arch_ratios(cells),
-              "fused_arch_ratios": arch_ratios(cells, "fused_vs_scheduled")}
+              "fused_arch_ratios": arch_ratios(cells, "fused_vs_scheduled"),
+              "ragged": ragged}
     if out:
         os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
         with open(out, "w") as f:
@@ -434,6 +598,7 @@ def main(quick: bool = False, check: bool = True, out: str = "",
                   f"{tolerance_arch}x per-arch geomean):")
             failures = check_regression(cells, baseline, tolerance_cell,
                                         tolerance_arch, quick=True)
+            failures += check_ragged(ragged, baseline, tolerance_cell)
             if failures:
                 for msg in failures:
                     print(f"PERF REGRESSION: {msg}", file=sys.stderr)

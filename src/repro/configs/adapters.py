@@ -113,7 +113,26 @@ def apply_engine(spec: ArchSpec, cfg, text: str):
 # ---------------------------------------------------------------------------
 
 
-def train_batch_specs(spec: ArchSpec, cfg, shape: ShapeSpec):
+# Kinds whose loss_fn consumes per-row length columns (the token-packed
+# ragged path: lengths freeze recurrent carries in-kernel and derive the
+# masked loss — see core/metrics.py and data/pipeline.py::PackedBatcher).
+RAGGED_KINDS = ("lstm_lm", "nmt", "tagger", "xlstm")
+
+# The length column(s) a ragged batch of each kind carries.
+RAGGED_KEYS = {
+    "lstm_lm": ("lengths",),
+    "xlstm": ("lengths",),
+    "tagger": ("lengths",),
+    "nmt": ("src_lengths", "tgt_lengths"),
+}
+
+
+def train_batch_specs(spec: ArchSpec, cfg, shape: ShapeSpec, *,
+                      ragged: bool = False):
+    """Batch leaf specs for one (arch x shape) cell.
+
+    ``ragged=True`` adds the kind's length column(s) — (B,) int32 — for
+    token-packed batches (only ``RAGGED_KINDS`` support them)."""
     B, S = shape.global_batch, shape.seq_len
     if spec.kind == "transformer":
         d: dict = {"labels": _sds((B, S), I32)}
@@ -124,20 +143,27 @@ def train_batch_specs(spec: ArchSpec, cfg, shape: ShapeSpec):
         if getattr(cfg, "is_encoder_decoder", False):
             d["frames"] = _sds((B, cfg.enc_seq, cfg.d_model),
                                cfg.compute_dtype)
-        return d
-    if spec.kind in ("xlstm", "ssm"):
-        return {"tokens": _sds((B, S), I32), "labels": _sds((B, S), I32)}
-    if spec.kind == "lstm_lm":
-        return {"tokens": _sds((B, S), I32), "labels": _sds((B, S), I32)}
-    if spec.kind == "nmt":
-        return {"src": _sds((B, S), I32), "tgt_in": _sds((B, S), I32),
-                "tgt_out": _sds((B, S), I32)}
-    if spec.kind == "tagger":
-        return {"words": _sds((B, S), I32),
-                "chars": _sds((B, S, 12), I32),
-                "tags": _sds((B, S), I32),
-                "mask": _sds((B, S), jnp.bool_)}
-    raise ValueError(spec.kind)
+    elif spec.kind in ("xlstm", "ssm"):
+        d = {"tokens": _sds((B, S), I32), "labels": _sds((B, S), I32)}
+    elif spec.kind == "lstm_lm":
+        d = {"tokens": _sds((B, S), I32), "labels": _sds((B, S), I32)}
+    elif spec.kind == "nmt":
+        d = {"src": _sds((B, S), I32), "tgt_in": _sds((B, S), I32),
+             "tgt_out": _sds((B, S), I32)}
+    elif spec.kind == "tagger":
+        d = {"words": _sds((B, S), I32),
+             "chars": _sds((B, S, 12), I32),
+             "tags": _sds((B, S), I32),
+             "mask": _sds((B, S), jnp.bool_)}
+    else:
+        raise ValueError(spec.kind)
+    if ragged:
+        if spec.kind not in RAGGED_KINDS:
+            raise ValueError(f"{spec.kind} has no ragged (length-column) "
+                             f"path; supported: {RAGGED_KINDS}")
+        for k in RAGGED_KEYS[spec.kind]:
+            d[k] = _sds((B,), I32)
+    return d
 
 
 def batch_logical_axes(spec: ArchSpec, cfg, shape: ShapeSpec):

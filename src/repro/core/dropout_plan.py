@@ -215,6 +215,14 @@ class MaskSchedule:
     random specs store a ``(rows, *batch, dim)`` dense mask. ``rows`` is
     ``steps`` for PER_STEP specs and 1 for FIXED ones (one mask reused at
     every step — ``rows()`` broadcasts it).
+
+    ``steps`` is always the *padded* batch width. Under ragged batches a
+    row whose sequence ends at ``lengths[b] < steps`` still consumes the
+    same schedule rows ``0..steps-1`` as its unpacked counterpart — the
+    kernels' carry freeze discards the masked work at frozen steps rather
+    than re-indexing the schedule, which is what keeps packed and
+    unpacked runs bit-equivalent under active PER_STEP dropout
+    (structured masks are batch-independent; see docs/engines.md).
     """
 
     spec: DropoutSpec                          # block-size fitted
@@ -326,8 +334,10 @@ class DropoutCtx:
         The per-row key derivation is identical to ``state(site, ..., t)``:
         row ``t`` folds ``t0 + t`` into the site key for PER_STEP specs,
         FIXED specs sample a single row from the bare site key. ``t0``
-        offsets the time axis (e.g. a chunk resuming mid-sequence) and may
-        be traced.
+        offsets the time axis (e.g. a chunk resuming mid-sequence, or an
+        xlstm group continuing at ``step0``) and may be traced. ``steps``
+        is the padded width — per-row sequence lengths do not shorten the
+        schedule (see the MaskSchedule docstring for the ragged contract).
         """
         spec = self.spec(site)
         if self.key is None or not spec.active:

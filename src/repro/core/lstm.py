@@ -98,7 +98,7 @@ def lstm_cell(params, x, h_prev, c_prev, nr_drop, rh_drop, *,
 
 
 def _lstm_stack_stepwise(params, x_seq, state, *, ctx, site, forget_bias,
-                         pointwise_impl):
+                         pointwise_impl, lengths=None):
     """Reference engine: one scan over time, per-step mask sampling."""
     num_layers = len(params)
     hidden = state.h.shape[-1]
@@ -115,6 +115,10 @@ def _lstm_stack_stepwise(params, x_seq, state, *, ctx, site, forget_bias,
             h, c = lstm_cell(params[l], inp, hs[l], cs[l], nr, rh,
                              forget_bias=forget_bias,
                              pointwise_impl=pointwise_impl)
+            if lengths is not None:
+                act = (t < lengths)[:, None]
+                h = jnp.where(act, h, hs[l])
+                c = jnp.where(act, c, cs[l])
             new_h.append(h)
             new_c.append(c)
             inp = h
@@ -127,7 +131,7 @@ def _lstm_stack_stepwise(params, x_seq, state, *, ctx, site, forget_bias,
 
 
 def _lstm_stack_scheduled(params, x_seq, state, *, ctx, site, forget_bias,
-                          pointwise_impl):
+                          pointwise_impl, lengths=None):
     """Two-phase engine: NR matmuls + mask sampling hoisted out of the scan.
 
     Layers run as successive per-layer scans: layer l's full output sequence
@@ -152,19 +156,24 @@ def _lstm_stack_scheduled(params, x_seq, state, *, ctx, site, forget_bias,
         # are a single state closed over as a scan constant.
         rh_xs = rh_sched.scan_rows()
         rh_const = rh_sched.state(0) if rh_xs is None else None
+        ts = jnp.arange(T) if lengths is not None else None
 
         def step(carry, xs, _U=U, _b=b, _rh=rh_sched, _const=rh_const):
             h_prev, c_prev = carry
-            gx_t, rh_row = xs
+            gx_t, rh_row, t = xs
             st = _const if rh_row is None else _rh.state_for_row(rh_row)
             gh = L.dense_sdrop({"w": _U}, h_prev, st)
             gates = gx_t + gh + _b
             h, c = lstm_pointwise(gates, c_prev, forget_bias=forget_bias,
                                   impl=pointwise_impl)
+            if lengths is not None:
+                act = (t < lengths)[:, None]
+                h = jnp.where(act, h, h_prev)
+                c = jnp.where(act, c, c_prev)
             return (h, c), h
 
         (h_l, c_l), ys = jax.lax.scan(
-            step, (state.h[l], state.c[l]), (gx, rh_xs))
+            step, (state.h[l], state.c[l]), (gx, rh_xs, ts))
         h_fin.append(h_l)
         c_fin.append(c_l)
         inp = ys
@@ -172,7 +181,7 @@ def _lstm_stack_scheduled(params, x_seq, state, *, ctx, site, forget_bias,
 
 
 def _lstm_stack_fused(params, x_seq, state, *, ctx, site, forget_bias,
-                      pointwise_impl):
+                      pointwise_impl, lengths=None):
     """Fused engine: Phase A as in "scheduled", Phase B as ONE kernel/layer.
 
     Each layer's whole T-step recurrence — RH matmul (compact via the
@@ -212,7 +221,7 @@ def _lstm_stack_fused(params, x_seq, state, *, ctx, site, forget_bias,
                           scale=rh_sched.scale)
         ys, (h_l, c_l) = _kops.lstm_scan(
             gx, params[l]["U"], state.h[l], state.c[l],
-            forget_bias=forget_bias, impl=impl, **kw)
+            forget_bias=forget_bias, impl=impl, lengths=lengths, **kw)
         h_fin.append(h_l)
         c_fin.append(c_l)
         inp = ys
@@ -224,7 +233,8 @@ def lstm_stack(params, x_seq: jax.Array, state: LSTMState, *,
                site: str = "lstm",
                forget_bias: float = 0.0,
                pointwise_impl: str = "xla",
-               engine: str = "scheduled"):
+               engine: str = "scheduled",
+               lengths: Optional[jax.Array] = None):
     """Run a multi-layer LSTM over a (T, B, D) sequence.
 
     Returns (outputs (T, B, H), final LSTMState). Dropout comes from the
@@ -237,6 +247,12 @@ def lstm_stack(params, x_seq: jax.Array, state: LSTMState, *,
     the two-phase engine (masks + NR matmuls hoisted out of the scan),
     "fused" = Phase B as one persistent-scan kernel per layer
     (kernels/lstm_scan.py), "stepwise" = the in-scan reference.
+
+    ``lengths`` (B,) int32 makes the batch ragged: row b's (h, c) carries
+    freeze after step ``lengths[b]`` in every layer (outputs repeat the
+    last valid state, finals are the state at the last real step) and
+    frozen steps contribute zero gradient — identical semantics across
+    all three engines.
     """
     ctx = NULL_CTX if ctx is None else ctx
     if engine not in ENGINES:
@@ -245,4 +261,5 @@ def lstm_stack(params, x_seq: jax.Array, state: LSTMState, *,
            "stepwise": _lstm_stack_stepwise,
            "fused": _lstm_stack_fused}[engine]
     return run(params, x_seq, state, ctx=ctx, site=site,
-               forget_bias=forget_bias, pointwise_impl=pointwise_impl)
+               forget_bias=forget_bias, pointwise_impl=pointwise_impl,
+               lengths=lengths)

@@ -1,0 +1,90 @@
+"""Length-aware loss and metric helpers for ragged (token-packed) batches.
+
+Rectangular batches pay for every padding position twice: once in FLOPs
+and once in the loss denominator. These helpers make the loss side exact —
+per-token NLL masked by a per-row length (or an explicit mask), averaged
+over *real* tokens only — so a token-packed batch optimizes the same
+objective as the per-sequence unpacked reference (tests/test_ragged.py
+asserts bit-level agreement). The FLOPs side is the kernels' ``lengths``
+carry-freeze (see kernels/cell_scan.py) plus data/pipeline.py's packing.
+
+Conventions: ``lengths`` is (B,) int32 real-token counts; masks produced
+here are (B, T) float32 with 1.0 on real positions. Dummy rows packed to
+fill a bucket batch have length 0 and thus contribute nothing.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def length_mask(lengths: jax.Array, seq_len: int) -> jax.Array:
+    """(B,) lengths -> (B, T) float32 mask; 1.0 where t < lengths[b]."""
+    t = jnp.arange(seq_len)
+    return (t[None, :] < lengths[:, None]).astype(jnp.float32)
+
+
+def masked_mean(values: jax.Array, mask: jax.Array) -> jax.Array:
+    """Mean of ``values`` over positions where ``mask`` is nonzero.
+
+    Shapes must broadcast; the denominator is clamped to 1 so an all-pad
+    batch (e.g. a bucket filled with dummy rows) yields 0.0, not NaN.
+    """
+    m = mask.astype(jnp.float32)
+    return (values.astype(jnp.float32) * m).sum() / jnp.maximum(m.sum(), 1.0)
+
+
+def masked_token_nll(logits: jax.Array, labels: jax.Array,
+                     mask: jax.Array) -> jax.Array:
+    """Mean NLL over real tokens. logits (B, T, V), labels/mask (B, T)."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return masked_mean(logz - tgt, mask)
+
+
+def masked_lm_loss(head: dict, feats: jax.Array, labels: jax.Array,
+                   mask: jax.Array, *, chunk: int = 1024) -> jax.Array:
+    """Chunked masked softmax-xent: mean NLL over real tokens.
+
+    ``head["w"]`` (D, V) (+ optional ``head["b"]``) applied to feats
+    (B, T, D) in time-major chunks so the (tokens, V) logits never fully
+    materialize — the masked twin of ``transformer.lm_loss`` (which
+    divides by B*T and has no mask support).
+    """
+    B, T, D = feats.shape
+    w = head["w"]
+    b = head.get("b")
+    f2 = feats.reshape(B * T, D)
+    l2 = labels.reshape(B * T)
+    m2 = mask.reshape(B * T).astype(jnp.float32)
+    n_chunks = max(1, -(-f2.shape[0] // chunk))
+    pad = n_chunks * chunk - f2.shape[0]
+    f2 = jnp.pad(f2, ((0, pad), (0, 0)))
+    l2 = jnp.pad(l2, (0, pad))
+    m2 = jnp.pad(m2, (0, pad))
+
+    def body(carry, xs):
+        f_c, l_c, m_c = xs
+        logits = f_c @ w
+        if b is not None:
+            logits = logits + b
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, l_c[:, None], axis=-1)[:, 0]
+        return carry + ((logz - tgt) * m_c).sum(), None
+
+    total, _ = jax.lax.scan(
+        body, jnp.float32(0.0),
+        (f2.reshape(n_chunks, chunk, D), l2.reshape(n_chunks, chunk),
+         m2.reshape(n_chunks, chunk)))
+    return total / jnp.maximum(mask.astype(jnp.float32).sum(), 1.0)
+
+
+def resolve_mask(batch: dict, tokens: jax.Array,
+                 key: str = "lengths") -> Optional[jax.Array]:
+    """(B, T) mask from ``batch[key]`` lengths, or None if rectangular."""
+    lengths = batch.get(key)
+    if lengths is None:
+        return None
+    return length_mask(lengths, tokens.shape[1])

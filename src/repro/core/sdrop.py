@@ -64,6 +64,14 @@ Two axes — within-batch pattern x across-time pattern — give four cases:
 mLSTM, SSM). The training step always re-samples (folded at bind time).
 ``block_size`` trades mask granularity for TPU-lane-aligned compaction:
 1 = paper-faithful columns, 128 = MXU/lane-aligned blocks.
+
+Ragged batches: STRUCTURED masks drop the same units for every row, so
+they are independent of how sequences are packed into the batch —
+token-packed batches (data/pipeline.py PackedBatcher) reproduce the
+per-sequence losses and gradients exactly under active case3/case4
+dropout with the same drop_key (tests/test_ragged.py). RANDOM masks are
+per-row and tie a mask stream to a batch layout; prefer the structured
+cases when mixing dropout with packed ragged traffic.
 """
 from __future__ import annotations
 

@@ -1,16 +1,28 @@
-"""Host-sharded batching + background prefetch.
+"""Host-sharded batching, token-packed ragged batching + prefetch.
 
 Each host slices the deterministic synthetic stream by
 ``(host_index, host_count)`` — no data server needed, identical semantics at
 1 or 1000 hosts, and a restart resumes from the step counter alone (the
 stream is a pure function of (seed, step)) — this is the fault-tolerance
 property the checkpoint layer relies on: data state is never checkpointed.
+
+``PackedBatcher`` extends the same contract to ragged corpora: sequences
+are bucketed by length caps and packed so every batch holds roughly
+``token_budget`` tokens (rows = budget // cap — short-sequence buckets get
+proportionally more rows). Combined with the kernels' per-row ``lengths``
+carry-freeze (kernels/cell_scan.py) and the masked losses (core/metrics.py)
+this recovers the FLOPs a rectangular batcher burns on padding. The
+packing plan for an epoch is a pure function of ``(seed, epoch)``, so
+restart-at-step resumes bit-identically and every host derives the same
+plan locally.
 """
 from __future__ import annotations
 
 import queue
 import threading
-from typing import Callable, Iterator, Optional
+from typing import Callable, Iterator, Optional, Sequence
+
+import numpy as np
 
 
 def host_shard(global_batch: int, host_index: int, host_count: int):
@@ -68,3 +80,126 @@ class ShardedBatcher:
         self._stop.set()
         if self._thread is not None:
             self._thread.join(timeout=1.0)
+
+
+# ---------------------------------------------------------------------------
+# token-packed ragged batching
+# ---------------------------------------------------------------------------
+
+
+def bucket_boundaries(max_len: int, n_buckets: int = 4):
+    """Geometric length caps ending at ``max_len``: (…, max/4, max/2, max).
+
+    Each halving doubles the bucket's row count at a fixed token budget, so
+    per-bucket batch shapes stay static (jit caches one trace per cap)
+    while short sequences stop paying for the longest row in the batch.
+    """
+    caps = set()
+    c = int(max_len)
+    for _ in range(max(1, n_buckets)):
+        caps.add(c)
+        c = max(1, c // 2)
+    return tuple(sorted(caps))
+
+
+def pack_plan(lengths, token_budget: int, boundaries: Sequence[int], *,
+              seed: int = 0, epoch: int = 0, host_count: int = 1):
+    """Deterministic packing plan for one epoch of a ragged corpus.
+
+    Returns a list of ``(cap, row_indices)`` batches where ``row_indices``
+    is an int64 array of ``max(1, token_budget // cap)`` corpus indices,
+    ``-1`` marking dummy fill rows (length 0 — free under the carry freeze,
+    excluded from masked losses). Every sequence appears exactly once per
+    epoch; the shuffle and the bucket interleave are pure functions of
+    ``(seed, epoch)``; the plan is padded with all-dummy batches so its
+    length divides ``host_count`` (all hosts step in lockstep).
+    """
+    lengths = np.asarray(lengths)
+    caps = np.asarray(sorted(int(b) for b in boundaries))
+    if lengths.size and int(lengths.max()) > int(caps[-1]):
+        raise ValueError(f"max length {int(lengths.max())} exceeds the "
+                         f"largest bucket cap {int(caps[-1])}")
+    rng = np.random.default_rng([seed, epoch])
+    order = rng.permutation(lengths.size)
+    which = np.searchsorted(caps, lengths[order])      # smallest cap >= len
+    batches = []
+    for ci, cap in enumerate(caps):
+        rows = max(1, token_budget // int(cap))
+        idxs = order[which == ci]
+        for j in range(0, len(idxs), rows):
+            chunk = np.full(rows, -1, np.int64)
+            sl = idxs[j:j + rows]
+            chunk[:len(sl)] = sl
+            batches.append((int(cap), chunk))
+    perm = rng.permutation(len(batches))               # interleave buckets
+    batches = [batches[int(k)] for k in perm]
+    while len(batches) % host_count:
+        cap = int(caps[-1])
+        batches.append((cap, np.full(max(1, token_budget // cap), -1,
+                                     np.int64)))
+    return batches
+
+
+class PackedBatcher:
+    """Deterministic token-packed batches over a padded ragged corpus.
+
+    ``docs`` maps field names to ``(N, max_len, …)`` padded arrays plus
+    ``"lengths"`` (N,) int32 (``data.synthetic.lm_ragged_docs`` emits this
+    layout). Each step materializes one ``pack_plan`` batch: the bucket's
+    rows sliced to its cap (static per-cap shapes), dummy rows all-zero
+    with length 0, and the length column emitted under ``length_key`` so
+    models opt into the ragged path. Like ``ShardedBatcher``, a batch is a
+    pure function of ``(seed, step)`` — resume-from-step needs no data
+    state — and hosts shard by taking interleaved plan entries. Feed
+    ``batch_fn`` to ``ShardedBatcher`` for background prefetch.
+    """
+
+    def __init__(self, docs: dict, token_budget: int, *, seed: int = 0,
+                 boundaries: Optional[Sequence[int]] = None,
+                 host_index: int = 0, host_count: int = 1,
+                 length_key: str = "lengths"):
+        self.lengths = np.asarray(docs["lengths"], np.int32)
+        self.fields = {k: np.asarray(v) for k, v in docs.items()
+                       if k != "lengths"}
+        self.token_budget = int(token_budget)
+        if boundaries is None:
+            boundaries = bucket_boundaries(
+                int(self.lengths.max()) if self.lengths.size else 1)
+        self.boundaries = tuple(sorted(int(b) for b in boundaries))
+        self.seed = seed
+        self.host_index = host_index
+        self.host_count = host_count
+        self.length_key = length_key
+        self._plan_cache: dict = {}
+
+    def _plan(self, epoch: int):
+        if epoch not in self._plan_cache:
+            self._plan_cache.clear()               # keep one epoch resident
+            self._plan_cache[epoch] = pack_plan(
+                self.lengths, self.token_budget, self.boundaries,
+                seed=self.seed, epoch=epoch, host_count=self.host_count)
+        return self._plan_cache[epoch]
+
+    @property
+    def steps_per_epoch(self) -> int:
+        return len(self._plan(0)) // self.host_count
+
+    def batch_fn(self, step: int) -> dict:
+        epoch, idx = divmod(step, self.steps_per_epoch)
+        cap, rows = self._plan(epoch)[idx * self.host_count
+                                      + self.host_index]
+        real = rows >= 0
+        batch = {}
+        for k, arr in self.fields.items():
+            out = np.zeros((len(rows), cap) + arr.shape[2:], arr.dtype)
+            out[real] = arr[rows[real], :cap]
+            batch[k] = out
+        batch[self.length_key] = np.where(
+            real, self.lengths[np.maximum(rows, 0)], 0).astype(np.int32)
+        return batch
+
+    def __iter__(self) -> Iterator:
+        step = 0
+        while True:
+            yield self.batch_fn(step)
+            step += 1

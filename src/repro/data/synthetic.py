@@ -44,6 +44,34 @@ def token_batches(stream: np.ndarray, batch: int, seq: int):
         yield data[:, i:i + seq], data[:, i + 1:i + seq + 1]
 
 
+def lm_ragged_docs(n: int, vocab: int, max_len: int, *, seed: int = 0,
+                   skew: float = 1.0):
+    """Ragged LM corpus: ``n`` documents with lognormal-skewed lengths.
+
+    Returns ``{"tokens" (n, max_len) int32 zero-padded, "labels" idem,
+    "lengths" (n,) int32}``. The length distribution is the production-
+    trace shape (many short requests, a long tail near max_len) that makes
+    rectangular padding wasteful — feed it to ``pipeline.PackedBatcher``
+    to recover the padding FLOPs. ``skew`` is the lognormal sigma; larger
+    = more short docs relative to the max.
+    """
+    rng = np.random.default_rng(seed)
+    raw = rng.lognormal(mean=np.log(max_len) - 1.5 * skew, sigma=skew,
+                        size=n)
+    lengths = np.clip(np.rint(raw).astype(np.int64), 2, max_len).astype(
+        np.int32)
+    stream = lm_stream(vocab, int(lengths.sum()) + 1, seed=seed + 1)
+    tokens = np.zeros((n, max_len), np.int32)
+    labels = np.zeros((n, max_len), np.int32)
+    pos = 0
+    for i, L in enumerate(lengths):
+        tokens[i, :L] = stream[pos:pos + L]
+        labels[i, :L - 1] = stream[pos + 1:pos + L]
+        labels[i, L - 1] = stream[(pos + L) % len(stream)]
+        pos += L
+    return {"tokens": tokens, "labels": labels, "lengths": lengths}
+
+
 def nmt_pairs(n: int, src_vocab: int, tgt_vocab: int, max_len: int = 24,
               *, seed: int = 0):
     """Learnable toy translation: tgt = affine-remapped src with local swaps.

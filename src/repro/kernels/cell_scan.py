@@ -37,6 +37,30 @@ matmul shapes stay static): ``keep_blocks`` is a ``(T|1, nk)`` ids table
 of dh-blocks, ``dense_mask`` is ``(T|1, B, 1|H, dh)``. A leading 1 row is
 a FIXED time pattern (one mask reused every step).
 
+**Ragged batches** (PR 8): an optional per-row ``lengths (B,) int32``
+freezes each row's carries once its sequence ends. Forward, step t of row
+b with ``t >= lengths[b]`` writes ``h_{t-1}`` / ``states_{t-1}`` through
+unchanged (so ``hs[t, b]`` repeats the last valid state and the returned
+finals are the states at each row's last REAL step — the handoff the NMT
+encoder->decoder chain and serving prefill rely on). Backward, frozen
+steps route the (dh, dstates) cotangents straight through to t-1 and
+contribute exactly zero dgates/dU (the pointwise VJP is linear in its
+cotangents, so zeroing them at frozen steps kills the whole step's grad).
+In the pallas path ``lengths`` rides as a second scalar-prefetch operand
+next to the schedule-ids table; ``t < lengths`` is the per-step activity
+predicate in both directions. Packed-batch loss/grads therefore equal the
+per-sequence unpacked reference bit-for-bit (tests/test_ragged.py).
+
+Dtype contract: all pointwise math and matmul accumulation run in f32;
+outputs are cast back so every cotangent carries its primal's dtype
+(``dgx`` -> gx.dtype, ``du`` -> u.dtype, ``dh0``/``dstates0`` -> their
+states' dtypes). A bf16-gx call never silently widens its grads.
+
+Oracles: this module is tested against the plain-``lax.scan`` references
+``kernels/ref.py::lstm_scan_ref`` (via kernels/lstm_scan.py) and
+``kernels/ref.py::slstm_scan_ref`` (via kernels/slstm_scan.py), with
+grads checked against autodiff of those references.
+
 The pallas path targets TPU and auto-falls back to interpret mode off TPU
 (correct, not fast); ``impl="xla"`` is the CPU production path. VMEM
 budget and tile-alignment notes from PR 3 carry over per head: u
@@ -92,6 +116,10 @@ def _dummy_ids():
     return jnp.zeros((1, 1), jnp.int32)
 
 
+def _dummy_lens():
+    return jnp.zeros((1,), jnp.int32)
+
+
 def _unit_ids_table(kb, block_size):
     """(rows, nk) kept-block ids -> (rows, nk*bs) unit ids."""
     if block_size == 1:
@@ -103,7 +131,11 @@ def _unit_ids_table(kb, block_size):
 # ---------------------------------------------------------------------------
 # Pallas kernels. Grid = (T,): one grid step per time step, carry in scratch.
 # Variadic refs (the cell's state count is a parameter) are unpacked by
-# position: [scalar ids | inputs | outputs | scratch].
+# position: [scalar ids, scalar lens | inputs | outputs | scratch]. The
+# schedule-ids table AND the per-row lengths column both ride the scalar-
+# prefetch path (num_scalar_prefetch=2); when the batch is rectangular the
+# lens operand is a (1,) dummy and ``ragged=False`` compiles the predicate
+# away entirely.
 # ---------------------------------------------------------------------------
 
 
@@ -138,17 +170,17 @@ def _recurrent_fwd(gates, h_prev, u_ref, ids_ref, m_ref, t, *,
 
 
 def _fwd_kernel(*args, cell: CellSpec, heads: int, nk: int, block_size: int,
-                scale: float, mode: str, fixed: bool):
+                scale: float, mode: str, fixed: bool, ragged: bool):
     ns = cell.num_states
-    ids_ref = args[0]
-    gx_ref, u_ref, h0_ref = args[1:4]
-    st0_refs = args[4:4 + ns]
-    m_ref = args[4 + ns]
-    hs_ref = args[5 + ns]
-    gates_ref = args[6 + ns]
-    stseq_refs = args[7 + ns:7 + 2 * ns]
-    h_s = args[7 + 2 * ns]
-    st_s = args[8 + 2 * ns:8 + 3 * ns]
+    ids_ref, lens_ref = args[0], args[1]
+    gx_ref, u_ref, h0_ref = args[2:5]
+    st0_refs = args[5:5 + ns]
+    m_ref = args[5 + ns]
+    hs_ref = args[6 + ns]
+    gates_ref = args[7 + ns]
+    stseq_refs = args[8 + ns:8 + 2 * ns]
+    h_s = args[8 + 2 * ns]
+    st_s = args[9 + 2 * ns:9 + 3 * ns]
 
     t = pl.program_id(0)
 
@@ -165,6 +197,12 @@ def _fwd_kernel(*args, cell: CellSpec, heads: int, nk: int, block_size: int,
                            fixed=fixed)
     st_prev = tuple(s[...] for s in st_s)
     h_new, st_new = cell.pointwise_fwd(gates, st_prev)
+    if ragged:
+        # rows past their length freeze: carry t-1's state through unchanged
+        act = (t < lens_ref[...])[:, None, None]
+        h_new = jnp.where(act, h_new, h_prev)
+        st_new = tuple(jnp.where(act, v, p)
+                       for v, p in zip(st_new, st_prev))
     h_s[...] = h_new
     for s, v in zip(st_s, st_new):
         s[...] = v
@@ -175,28 +213,29 @@ def _fwd_kernel(*args, cell: CellSpec, heads: int, nk: int, block_size: int,
 
 
 def _bwd_kernel(*args, cell: CellSpec, heads: int, n_steps: int, nk: int,
-                block_size: int, scale: float, mode: str, fixed: bool):
+                block_size: int, scale: float, mode: str, fixed: bool,
+                ragged: bool):
     """Reverse-time step: grid step t processes time step r = T-1-t.
 
     All time-indexed refs arrive through r-indexed BlockSpecs; dU accumulates
     in f32 scratch across the whole grid and flushes on the last step.
     """
     ns = cell.num_states
-    ids_ref = args[0]
-    dy_ref, gates_ref = args[1:3]
-    stn_refs = args[3:3 + ns]                  # states at t   (rev-indexed)
-    stp_refs = args[3 + ns:3 + 2 * ns]         # states at t-1 (rev-indexed)
-    hp_ref = args[3 + 2 * ns]
-    u_ref = args[4 + 2 * ns]
-    m_ref = args[5 + 2 * ns]
-    dstT_refs = args[6 + 2 * ns:6 + 3 * ns]
-    dgx_ref = args[6 + 3 * ns]
-    du_ref = args[7 + 3 * ns]
-    dh0_ref = args[8 + 3 * ns]
-    dst0_refs = args[9 + 3 * ns:9 + 4 * ns]
-    dh_s = args[9 + 4 * ns]
-    dst_s = args[10 + 4 * ns:10 + 5 * ns]
-    du_s = args[10 + 5 * ns]
+    ids_ref, lens_ref = args[0], args[1]
+    dy_ref, gates_ref = args[2:4]
+    stn_refs = args[4:4 + ns]                  # states at t   (rev-indexed)
+    stp_refs = args[4 + ns:4 + 2 * ns]         # states at t-1 (rev-indexed)
+    hp_ref = args[4 + 2 * ns]
+    u_ref = args[5 + 2 * ns]
+    m_ref = args[6 + 2 * ns]
+    dstT_refs = args[7 + 2 * ns:7 + 3 * ns]
+    dgx_ref = args[7 + 3 * ns]
+    du_ref = args[8 + 3 * ns]
+    dh0_ref = args[9 + 3 * ns]
+    dst0_refs = args[10 + 3 * ns:10 + 4 * ns]
+    dh_s = args[10 + 4 * ns]
+    dst_s = args[11 + 4 * ns:11 + 5 * ns]
+    du_s = args[11 + 5 * ns]
 
     t = pl.program_id(0)
     r = n_steps - 1 - t                      # the time step being processed
@@ -209,12 +248,21 @@ def _bwd_kernel(*args, cell: CellSpec, heads: int, n_steps: int, nk: int,
         du_s[...] = jnp.zeros_like(du_s)
 
     dh = dy_ref[0].astype(jnp.float32) + dh_s[...]
+    dst_in = tuple(s[...] for s in dst_s)
+    if ragged:
+        # frozen steps: zero the cotangents into the cell (-> zero dgates,
+        # zero dU contribution) and pass them through to t-1 afterwards
+        act = (r < lens_ref[...])[:, None, None]
+        dh_c = jnp.where(act, dh, 0.0)
+        dst_c = tuple(jnp.where(act, d, 0.0) for d in dst_in)
+    else:
+        dh_c, dst_c = dh, dst_in
     gates = gates_ref[0].astype(jnp.float32)
     st_new = tuple(s[0].astype(jnp.float32) for s in stn_refs)
     st_prev = tuple(s[0].astype(jnp.float32) for s in stp_refs)
     h_prev = hp_ref[0].astype(jnp.float32)
-    dgates, dst_prev = cell.pointwise_bwd(gates, st_prev, st_new, dh,
-                                          tuple(s[...] for s in dst_s))
+    dgates, dst_prev = cell.pointwise_bwd(gates, st_prev, st_new, dh_c,
+                                          dst_c)
     dgx_ref[0] = dgates.astype(dgx_ref.dtype)
 
     B = dh.shape[0]
@@ -259,6 +307,10 @@ def _bwd_kernel(*args, cell: CellSpec, heads: int, n_steps: int, nk: int,
             du_s[hd] = du_s[hd] + jnp.dot(h_prev[:, hd].T, dgh,
                                           preferred_element_type=jnp.float32)
     dh_prev = jnp.stack(dhp, axis=1)
+    if ragged:
+        dh_prev = dh_prev + jnp.where(act, 0.0, dh)
+        dst_prev = tuple(p + jnp.where(act, 0.0, d)
+                         for p, d in zip(dst_prev, dst_in))
     dh_s[...] = dh_prev
     for s, v in zip(dst_s, dst_prev):
         s[...] = v
@@ -275,44 +327,46 @@ def _mask_inputs(mask, dtype, fixed, rev=None):
     """(m_in, m_spec) for the (1, B, 1|H, dh) per-step mask ref."""
     if mask is None:
         m_in = jnp.zeros((1, 1, 1, 1), dtype)        # unused placeholder
-        return m_in, pl.BlockSpec((1, 1, 1, 1), lambda t, ids: (0, 0, 0, 0))
-    per_t = rev if rev is not None else (lambda t, ids: (t, 0, 0, 0))
+        return m_in, pl.BlockSpec((1, 1, 1, 1), lambda t, *_: (0, 0, 0, 0))
+    per_t = rev if rev is not None else (lambda t, *_: (t, 0, 0, 0))
     spec = pl.BlockSpec((1, *mask.shape[1:]),
-                        (lambda t, ids: (0, 0, 0, 0)) if fixed else per_t)
+                        (lambda t, *_: (0, 0, 0, 0)) if fixed else per_t)
     return mask, spec
 
 
-def _pallas_fwd(cell, gx, u, h0, states0, kb, mask, *, block_size, scale,
-                interpret):
+def _pallas_fwd(cell, gx, u, h0, states0, kb, mask, lengths, *, block_size,
+                scale, interpret):
     T, B, H, G = gx.shape
     dh = u.shape[1]
     ns = cell.num_states
     mode = _rh_mode(kb, mask)
     fixed = _is_fixed(mode, kb, mask)
+    ragged = lengths is not None
     nk = kb.shape[1] if mode == "structured" else 0
     ids = kb if mode == "structured" else _dummy_ids()
+    lens = lengths.astype(jnp.int32) if ragged else _dummy_lens()
     m_in, m_spec = _mask_inputs(mask, gx.dtype, fixed)
-    const3 = pl.BlockSpec((B, H, dh), lambda t, ids: (0, 0, 0))
-    seq3 = pl.BlockSpec((1, B, H, dh), lambda t, ids: (t, 0, 0, 0))
+    const3 = pl.BlockSpec((B, H, dh), lambda t, *_: (0, 0, 0))
+    seq3 = pl.BlockSpec((1, B, H, dh), lambda t, *_: (t, 0, 0, 0))
     odt = h0.dtype
     kernel = functools.partial(
         _fwd_kernel, cell=cell, heads=H, nk=nk, block_size=block_size,
-        scale=scale, mode=mode, fixed=fixed)
+        scale=scale, mode=mode, fixed=fixed, ragged=ragged)
     outs = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
+            num_scalar_prefetch=2,
             grid=(T,),
             in_specs=[
-                pl.BlockSpec((1, B, H, G), lambda t, ids: (t, 0, 0, 0)),
-                pl.BlockSpec((H, dh, G), lambda t, ids: (0, 0, 0)),  # U resident
+                pl.BlockSpec((1, B, H, G), lambda t, *_: (t, 0, 0, 0)),
+                pl.BlockSpec((H, dh, G), lambda t, *_: (0, 0, 0)),  # U resident
                 const3,
                 *([const3] * ns),
                 m_spec,
             ],
             out_specs=[
                 seq3,
-                pl.BlockSpec((1, B, H, G), lambda t, ids: (t, 0, 0, 0)),
+                pl.BlockSpec((1, B, H, G), lambda t, *_: (t, 0, 0, 0)),
                 *([seq3] * ns),
             ],
             scratch_shapes=[pltpu.VMEM((B, H, dh), jnp.float32)] * (1 + ns),
@@ -322,32 +376,35 @@ def _pallas_fwd(cell, gx, u, h0, states0, kb, mask, *, block_size, scale,
                    *[jax.ShapeDtypeStruct((T, B, H, dh), s.dtype)
                      for s in states0]],
         interpret=interpret,
-    )(ids, gx, u, h0, *states0, m_in)
+    )(ids, lens, gx, u, h0, *states0, m_in)
     hs, gates = outs[0], outs[1]
     return hs, gates, tuple(outs[2:])
 
 
 def _pallas_bwd(cell, dy, dstT, gates, st_seqs, st_prev_seqs, h_prev_seq, u,
-                kb, mask, *, block_size, scale, interpret):
+                kb, mask, lengths, *, block_size, scale, interpret):
     T, B, H, G = gates.shape
     dh = u.shape[1]
     ns = cell.num_states
     mode = _rh_mode(kb, mask)
     fixed = _is_fixed(mode, kb, mask)
+    ragged = lengths is not None
     nk = kb.shape[1] if mode == "structured" else 0
     ids = kb if mode == "structured" else _dummy_ids()
-    rev = lambda t, ids: (T - 1 - t, 0, 0, 0)        # reverse-time index map
+    lens = lengths.astype(jnp.int32) if ragged else _dummy_lens()
+    rev = lambda t, *_: (T - 1 - t, 0, 0, 0)         # reverse-time index map
     m_in, m_spec = _mask_inputs(mask, gates.dtype, fixed, rev=rev)
-    const3 = pl.BlockSpec((B, H, dh), lambda t, ids: (0, 0, 0))
+    const3 = pl.BlockSpec((B, H, dh), lambda t, *_: (0, 0, 0))
     rev3 = pl.BlockSpec((1, B, H, dh), rev)
     odt = dy.dtype
     kernel = functools.partial(
         _bwd_kernel, cell=cell, heads=H, n_steps=T, nk=nk,
-        block_size=block_size, scale=scale, mode=mode, fixed=fixed)
+        block_size=block_size, scale=scale, mode=mode, fixed=fixed,
+        ragged=ragged)
     outs = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
+            num_scalar_prefetch=2,
             grid=(T,),
             in_specs=[
                 rev3,                                       # dy
@@ -355,13 +412,13 @@ def _pallas_bwd(cell, dy, dstT, gates, st_seqs, st_prev_seqs, h_prev_seq, u,
                 *([rev3] * ns),                             # states at t
                 *([rev3] * ns),                             # states at t-1
                 rev3,                                       # h_{t-1}
-                pl.BlockSpec((H, dh, G), lambda t, ids: (0, 0, 0)),  # U
+                pl.BlockSpec((H, dh, G), lambda t, *_: (0, 0, 0)),  # U
                 m_spec,
                 *([const3] * ns),                           # d(state_T)
             ],
             out_specs=[
                 pl.BlockSpec((1, B, H, G), rev),            # dgx
-                pl.BlockSpec((H, dh, G), lambda t, ids: (0, 0, 0)),  # dU
+                pl.BlockSpec((H, dh, G), lambda t, *_: (0, 0, 0)),  # dU
                 const3,                                     # dh0
                 *([const3] * ns),                           # d(state_0)
             ],
@@ -373,7 +430,8 @@ def _pallas_bwd(cell, dy, dstT, gates, st_seqs, st_prev_seqs, h_prev_seq, u,
                    jax.ShapeDtypeStruct((B, H, dh), odt),
                    *[jax.ShapeDtypeStruct((B, H, dh), odt)] * ns],
         interpret=interpret,
-    )(ids, dy, gates, *st_seqs, *st_prev_seqs, h_prev_seq, u, m_in, *dstT)
+    )(ids, lens, dy, gates, *st_seqs, *st_prev_seqs, h_prev_seq, u, m_in,
+      *dstT)
     dgx, du, dh0 = outs[0], outs[1], outs[2]
     return dgx, du, dh0, tuple(outs[3:])
 
@@ -391,7 +449,8 @@ def _pallas_bwd(cell, dy, dstT, gates, st_seqs, st_prev_seqs, h_prev_seq, u,
 # ---------------------------------------------------------------------------
 
 
-def _xla_fwd(cell, gx, u, h0, states0, kb, mask, *, block_size, scale):
+def _xla_fwd(cell, gx, u, h0, states0, kb, mask, lengths, *, block_size,
+             scale):
     mode = _rh_mode(kb, mask)
     fixed = _is_fixed(mode, kb, mask)
     sc32 = jnp.asarray(scale, jnp.float32)
@@ -403,10 +462,11 @@ def _xla_fwd(cell, gx, u, h0, states0, kb, mask, *, block_size, scale):
     if not fixed:
         xs_extra = ids if mode == "structured" else (
             mask if mode == "dense" else None)
+    ts = jnp.arange(gx.shape[0]) if lengths is not None else None
 
     def step(carry, xs):
         h, sts = carry
-        gx_t, extra = xs
+        gx_t, extra, t = xs
         if mode == "structured":
             ids_t = ids[0] if fixed else extra
             u_c = u_c0 if fixed else jnp.take(u, ids_t, axis=1)
@@ -426,15 +486,20 @@ def _xla_fwd(cell, gx, u, h0, states0, kb, mask, *, block_size, scale):
             gates, tuple(s.astype(jnp.float32) for s in sts))
         h2 = h2.astype(h.dtype)
         st2 = tuple(v.astype(s.dtype) for v, s in zip(st2, sts))
+        if lengths is not None:
+            # rows past their length freeze: carry t-1's state through
+            act = (t < lengths)[:, None, None]
+            h2 = jnp.where(act, h2, h)
+            st2 = tuple(jnp.where(act, v, s) for v, s in zip(st2, sts))
         return (h2, st2), (h2, st2, gates.astype(gx.dtype))
 
     (_, _), (hs, st_seqs, gates) = jax.lax.scan(step, (h0, states0),
-                                                (gx, xs_extra))
+                                                (gx, xs_extra, ts))
     return hs, gates, st_seqs
 
 
 def _xla_bwd(cell, dy, dstT, gates, st_seqs, st_prev_seqs, h_prev_seq, u,
-             kb, mask, *, block_size, scale):
+             kb, mask, lengths, *, block_size, scale):
     T, B, H, G = gates.shape
     dh_dim = u.shape[1]
     mode = _rh_mode(kb, mask)
@@ -452,15 +517,25 @@ def _xla_bwd(cell, dy, dstT, gates, st_seqs, st_prev_seqs, h_prev_seq, u,
     if not fixed:
         xs_extra = ids if mode == "structured" else (
             mask if mode == "dense" else None)
+    ts = jnp.arange(T) if lengths is not None else None
 
     def step(carry, xs):
         dh_next, dst_next, du = carry
-        dy_t, g_t, stn_t, stp_t, hp_t, extra = xs
+        dy_t, g_t, stn_t, stp_t, hp_t, extra, t = xs
         dh = dy_t.astype(jnp.float32) + dh_next
+        if lengths is not None:
+            # frozen steps: zero the cotangents INTO the cell (pointwise_bwd
+            # is linear in them, so dgates/du vanish for those rows) and
+            # pass the originals straight through to t-1 below.
+            act = (t < lengths)[:, None, None]
+            dh_c = jnp.where(act, dh, 0.0)
+            dst_c = tuple(jnp.where(act, d, 0.0) for d in dst_next)
+        else:
+            dh_c, dst_c = dh, dst_next
         dgates, dst_prev = cell.pointwise_bwd(
             g_t.astype(jnp.float32),
             tuple(s.astype(jnp.float32) for s in stp_t),
-            tuple(s.astype(jnp.float32) for s in stn_t), dh, dst_next)
+            tuple(s.astype(jnp.float32) for s in stn_t), dh_c, dst_c)
         if mode == "structured":
             ids_t = ids[0] if fixed else extra
             u_c = (u_c0 if fixed else jnp.take(u, ids_t, axis=1)
@@ -490,13 +565,17 @@ def _xla_bwd(cell, dy, dstT, gates, st_seqs, st_prev_seqs, h_prev_seq, u,
                                  preferred_element_type=jnp.float32)
             du = du + jnp.einsum("bhd,bhg->hdg", hp_t.astype(jnp.float32),
                                  dgates, preferred_element_type=jnp.float32)
+        if lengths is not None:
+            dh_prev = dh_prev + jnp.where(act, 0.0, dh)
+            dst_prev = tuple(p + jnp.where(act, 0.0, d)
+                             for p, d in zip(dst_prev, dst_next))
         return (dh_prev, dst_prev, du), dgates.astype(dy.dtype)
 
     (dh0, dst0, du), dgx = jax.lax.scan(
         step,
         (jnp.zeros((B, H, dh_dim), jnp.float32),
          tuple(d.astype(jnp.float32) for d in dstT), du0),
-        (dy, gates, st_seqs, st_prev_seqs, h_prev_seq, xs_extra),
+        (dy, gates, st_seqs, st_prev_seqs, h_prev_seq, xs_extra, ts),
         reverse=True)
     if mode == "structured" and fixed:
         du = jnp.zeros((H, dh_dim, G), jnp.float32).at[:, ids[0]].set(du)
@@ -511,27 +590,28 @@ def _xla_bwd(cell, dy, dstT, gates, st_seqs, st_prev_seqs, h_prev_seq, u,
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4))
 def _cell_scan(cell, block_size, scale, impl, interpret,
-               gx, u, h0, states0, kb, mask):
+               gx, u, h0, states0, kb, mask, lengths):
     out, _ = _cell_scan_fwd(cell, block_size, scale, impl, interpret,
-                            gx, u, h0, states0, kb, mask)
+                            gx, u, h0, states0, kb, mask, lengths)
     return out
 
 
 def _cell_scan_fwd(cell, block_size, scale, impl, interpret,
-                   gx, u, h0, states0, kb, mask):
+                   gx, u, h0, states0, kb, mask, lengths):
     if impl == "pallas":
         hs, gates, st_seqs = _pallas_fwd(cell, gx, u, h0, states0, kb, mask,
-                                         block_size=block_size, scale=scale,
-                                         interpret=interpret)
+                                         lengths, block_size=block_size,
+                                         scale=scale, interpret=interpret)
     else:
         hs, gates, st_seqs = _xla_fwd(cell, gx, u, h0, states0, kb, mask,
-                                      block_size=block_size, scale=scale)
+                                      lengths, block_size=block_size,
+                                      scale=scale)
     out = (hs, hs[-1], tuple(s[-1] for s in st_seqs))
-    return out, (gates, st_seqs, hs, u, h0, states0, kb, mask)
+    return out, (gates, st_seqs, hs, u, h0, states0, kb, mask, lengths)
 
 
 def _cell_scan_bwd(cell, block_size, scale, impl, interpret, res, dout):
-    gates, st_seqs, hs, u, h0, states0, kb, mask = res
+    gates, st_seqs, hs, u, h0, states0, kb, mask, lengths = res
     dhs, dh_fin, dst_fin = dout
     # dL/dh_T arrives both through hs[-1] and the explicit final state.
     dy = dhs.at[-1].add(dh_fin)
@@ -542,20 +622,22 @@ def _cell_scan_bwd(cell, block_size, scale, impl, interpret, res, dout):
     if impl == "pallas":
         dgx, du, dh0, dst0 = _pallas_bwd(
             cell, dy, dst_fin, gates, st_seqs, st_prev_seqs, h_prev_seq, u,
-            kb, mask, block_size=block_size, scale=scale, interpret=interpret)
+            kb, mask, lengths, block_size=block_size, scale=scale,
+            interpret=interpret)
     else:
         dgx, du, dh0, dst0 = _xla_bwd(
             cell, dy, dst_fin, gates, st_seqs, st_prev_seqs, h_prev_seq, u,
-            kb, mask, block_size=block_size, scale=scale)
+            kb, mask, lengths, block_size=block_size, scale=scale)
     dkb = None if kb is None else _float0_like(kb)
     dmask = None if mask is None else jnp.zeros_like(mask)
+    dlens = None if lengths is None else _float0_like(lengths)
     # cotangents carry their primals' dtypes (gates stores gx.dtype): a
     # bf16-gx / f32-state call must not widen dgx to f32 — that doubles
     # grad memory and makes grad dtype engine-dependent.
     return (dgx.astype(gates.dtype), du.astype(u.dtype),
             dh0.astype(h0.dtype),
             tuple(d.astype(s.dtype) for d, s in zip(dst0, states0)),
-            dkb, dmask)
+            dkb, dmask, dlens)
 
 
 _cell_scan.defvjp(_cell_scan_fwd, _cell_scan_bwd)
@@ -571,7 +653,8 @@ def cell_scan(gx: jax.Array, u: jax.Array, h0: jax.Array,
               block_size: int = 1,
               scale: float = 1.0,
               impl: str = "pallas",
-              interpret: Optional[bool] = None):
+              interpret: Optional[bool] = None,
+              lengths: Optional[jax.Array] = None):
     """Run one cell's full Phase-B recurrence in one fused pass.
 
     gx: (T, B, H, G) precomputed non-recurrent gate inputs (Phase A, bias
@@ -583,6 +666,14 @@ def cell_scan(gx: jax.Array, u: jax.Array, h0: jax.Array,
     ``scale``; a leading 1 means FIXED (one mask for all steps). Returns
     ``(hs (T, B, H, dh), (h_fin, states_fin))`` and is differentiable
     w.r.t. (gx, u, h0, states0) through the fused reverse-time backward.
+
+    ``lengths`` (B,) int32 makes the batch ragged: row ``b`` freezes after
+    its ``lengths[b]``-th step — ``hs[t, b]`` repeats the last valid state
+    for ``t >= lengths[b]``, final states are the states at the last real
+    step, and frozen steps contribute exactly zero to every gradient.
+    Equivalent to running each row unpacked at its own length (see
+    tests/test_ragged.py); ``lengths=None`` keeps the rectangular path
+    bit-identical to before.
     """
     if keep_blocks is not None and dense_mask is not None:
         raise ValueError("give at most one of keep_blocks / dense_mask")
@@ -591,5 +682,5 @@ def cell_scan(gx: jax.Array, u: jax.Array, h0: jax.Array,
     hs, h_fin, st_fin = _cell_scan(cell, int(block_size), float(scale),
                                    impl, bool(interpret),
                                    gx, u, h0, tuple(states0),
-                                   keep_blocks, dense_mask)
+                                   keep_blocks, dense_mask, lengths)
     return hs, (h_fin, st_fin)

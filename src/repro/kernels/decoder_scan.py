@@ -50,6 +50,31 @@ autodiff (dW_x, db, dembed). ``impl="xla"`` is the CPU production path
 single time-as-grid persistent kernels (state in VMEM scratch, weights +
 encoder memory resident via constant index maps, ids tables scalar-
 prefetched) and auto-falls back to interpret mode off TPU.
+
+**Ragged batches** (PR 8): an optional per-row ``lengths (B,) int32``
+rides as one more scalar-prefetch operand (appended after the 2*nl ids
+tables, so ``num_scalar_prefetch = 2*nl + 1``; a (1,) dummy when
+rectangular and the ``ragged`` flag compiles the predicate away). Forward:
+step t of row b with ``t >= lengths[b]`` writes the t-1 carries (h_l, c_l,
+feed) through unchanged, so the emitted h~ repeats the last valid readout
+and the finals are the state at the last real step — which is what the
+serving prefill handoff consumes. Backward: frozen steps zero the (dh, dc,
+dh~) cotangents INTO the step math (pointwise + attention backward are
+linear in them, so every weight/attention grad contribution vanishes) and
+pass the original cotangents straight through to t-1. A token-packed
+batch therefore produces bit-for-bit the loss and grads of running each
+row unpacked at its own length (tests/test_ragged.py).
+
+Dtype contract: all step math runs in f32 inside the scan regardless of
+operand dtypes; residual sequences (gates, h, c, h~, alpha) are stored
+f32 by the pallas path; the returned h~ sequence / feed final carry
+``gx0.dtype`` and the h/c finals carry ``h0.dtype``/``c0.dtype``;
+cotangents are cast back to each primal's dtype on the way out.
+
+Oracle: every (impl, engine) combination is tested against
+``kernels/ref.py::decoder_scan_ref`` — a plain ``jax.lax.scan``
+transliteration of the step equations above differentiated by autodiff —
+in tests/test_kernels.py and tests/test_engine.py.
 """
 from __future__ import annotations
 
@@ -62,8 +87,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.cell_scan import (_dummy_ids, _float0_like, _is_fixed,
-                                     _rh_mode, _unit_ids_table)
+from repro.kernels.cell_scan import (_dummy_ids, _dummy_lens, _float0_like,
+                                     _is_fixed, _rh_mode, _unit_ids_table)
 from repro.kernels.lstm_scan import _pointwise_bwd, _pointwise_fwd
 
 F32 = jnp.float32
@@ -127,7 +152,7 @@ def _site_tables(descs, masks):
     return uids, tuple(xs)
 
 
-def _xla_fwd(nl, descs, ops, masks):
+def _xla_fwd(nl, descs, ops, masks, lengths):
     gx0 = ops["gx0"]
     ws = _site_weights(nl, ops)
     uids, xs_extra = _site_tables(descs, masks)
@@ -153,9 +178,11 @@ def _xla_fwd(nl, descs, ops, masks):
         return jnp.dot(x * m_t.astype(F32) * d.scale, ws[i],
                        preferred_element_type=F32)
 
+    ts = jnp.arange(gx0.shape[0]) if lengths is not None else None
+
     def step(carry, xs):
         hs, cs, feed = carry
-        gx0_t, extras = xs
+        gx0_t, extras, t = xs
         g = gx0_t.astype(F32) + mm(feed, 0, extras[0]) + mm(hs[0], 1,
                                                             extras[1])
         h, c = _pw_fwd(g, cs[0])
@@ -176,19 +203,25 @@ def _xla_fwd(nl, descs, ops, masks):
                           preferred_element_type=F32)
         htil = jnp.tanh(jnp.dot(jnp.concatenate([ctxv, cur], -1), wcomb,
                                 preferred_element_type=F32))
+        if lengths is not None:
+            # rows past their length freeze every carry (h, c, feed)
+            act = (t < lengths)[:, None]
+            new_h = [jnp.where(act, v, p) for v, p in zip(new_h, hs)]
+            new_c = [jnp.where(act, v, p) for v, p in zip(new_c, cs)]
+            htil = jnp.where(act, htil, feed)
         return ((tuple(new_h), tuple(new_c), htil),
                 (htil, tuple(gates), tuple(new_h), tuple(new_c), alpha))
 
     init = (tuple(ops["h0"][l].astype(F32) for l in range(nl)),
             tuple(ops["c0"][l].astype(F32) for l in range(nl)),
             ops["feed0"].astype(F32))
-    (hF, cF, feedF), ys = jax.lax.scan(step, init, (gx0, xs_extra))
+    (hF, cF, feedF), ys = jax.lax.scan(step, init, (gx0, xs_extra, ts))
     htil_seq, gates_seqs, h_seqs, c_seqs, alpha_seq = ys
     return (htil_seq, gates_seqs, h_seqs, c_seqs, alpha_seq,
             (jnp.stack(hF), jnp.stack(cF), feedF))
 
 
-def _xla_bwd(nl, descs, ops, masks, res, dout):
+def _xla_bwd(nl, descs, ops, masks, lengths, res, dout):
     gates_seqs, h_seqs, c_seqs, htil_seq, alpha_seq = res
     d_htil, d_hfin, d_cfin, d_ffin = dout
     T, B, G = ops["gx0"].shape
@@ -251,13 +284,23 @@ def _xla_bwd(nl, descs, ops, masks, res, dout):
             return jnp.zeros((H, G), F32).at[uids[i][0]].set(acc)
         return acc
 
+    ts = jnp.arange(T) if lengths is not None else None
+
     def step(carry, xs):
         dh, dc, dfeed, accs, dbs, dwcomb, dep, deo = carry
         (dy_t, g_t, h_t, hp_t, c_t, cp_t, htil_t, fp_t, alpha_t,
-         extras) = xs
+         extras, t) = xs
         # h~ readout backward (tanh + w_comb + attention softmax jacobian)
         dhtil = dy_t.astype(F32) + dfeed
-        dpre = dhtil * (1.0 - htil_t * htil_t)
+        if lengths is not None:
+            # frozen rows: zero the cotangents into the step math (every
+            # piece below is linear in them, so all weight/attention grads
+            # vanish) and pass the originals through to t-1 at the end.
+            act = (t < lengths)[:, None]
+            dhtil_c = jnp.where(act, dhtil, 0.0)
+        else:
+            act, dhtil_c = None, dhtil
+        dpre = dhtil_c * (1.0 - htil_t * htil_t)
         cur = h_t[nl - 1]
         ctxv = jnp.einsum("bs,bsh->bh", alpha_t, eo,
                           preferred_element_type=F32)
@@ -285,11 +328,19 @@ def _xla_bwd(nl, descs, ops, masks, res, dout):
         dgx0_t = None
         new_dfeed = None
         for l in reversed(range(nl)):
-            dg, dc_prev = _pw_bwd(g_t[l], cp_t[l], c_t[l], dh_cur[l], dc[l])
+            if lengths is not None:
+                dh_cell = jnp.where(act, dh_cur[l], 0.0)
+                dc_cell = jnp.where(act, dc[l], 0.0)
+            else:
+                dh_cell, dc_cell = dh_cur[l], dc[l]
+            dg, dc_prev = _pw_bwd(g_t[l], cp_t[l], c_t[l], dh_cell, dc_cell)
             new_dh[l] = bp(dg, 1 + l, extras[1 + l])
             accs[1 + l] = wg_add(accs[1 + l], hp_t[l], dg, 1 + l,
                                  extras[1 + l])
             new_dc[l] = dc_prev
+            if lengths is not None:
+                new_dh[l] = new_dh[l] + jnp.where(act, 0.0, dh_cur[l])
+                new_dc[l] = new_dc[l] + jnp.where(act, 0.0, dc[l])
             if l > 0:
                 dh_cur[l - 1] = dh_cur[l - 1] + bp(dg, nl + l,
                                                    extras[nl + l])
@@ -299,6 +350,8 @@ def _xla_bwd(nl, descs, ops, masks, res, dout):
             else:
                 dgx0_t = dg
                 new_dfeed = bp(dg, 0, extras[0])
+                if lengths is not None:
+                    new_dfeed = new_dfeed + jnp.where(act, 0.0, dhtil)
                 accs[0] = wg_add(accs[0], fp_t, dg, 0, extras[0])
         return ((tuple(new_dh), tuple(new_dc), new_dfeed, tuple(accs),
                  tuple(dbs), dwcomb, dep, deo), dgx0_t)
@@ -313,7 +366,7 @@ def _xla_bwd(nl, descs, ops, masks, res, dout):
     (dh0, dc0, dfeed0, accs, dbs, dwcomb, dep, deo), dgx = jax.lax.scan(
         step, init,
         (d_htil, gates_seqs, h_seqs, h_prev_seqs, c_seqs, c_prev_seqs,
-         htil_seq, feed_prev_seq, alpha_seq, xs_extra),
+         htil_seq, feed_prev_seq, alpha_seq, xs_extra, ts),
         reverse=True)
     accs = [wg_fin(a, i) for i, a in enumerate(accs)]
     return (dgx, accs, dbs, dwcomb, dep, deo,
@@ -357,10 +410,11 @@ def _pl_mm(x, w_ref, ids_ref, m_ref, t, d):
                    preferred_element_type=F32)
 
 
-def _pl_fwd_kernel(*args, nl, descs, n_steps):
+def _pl_fwd_kernel(*args, nl, descs, n_steps, ragged):
     ns = 2 * nl
     i = 0
     ids_refs = args[i:i + ns]; i += ns                              # noqa: E702
+    lens_ref = args[i]; i += 1                                      # noqa: E702
     gx0 = args[i]; i += 1                                           # noqa: E702
     us = args[i:i + nl]; i += nl                                    # noqa: E702
     ws = args[i:i + nl - 1]; i += nl - 1                            # noqa: E702
@@ -410,6 +464,13 @@ def _pl_fwd_kernel(*args, nl, descs, n_steps):
     htil = jnp.tanh(jnp.dot(ctxv, wc[:H], preferred_element_type=F32)
                     + jnp.dot(cur, wc[H:], preferred_element_type=F32))
 
+    if ragged:
+        # rows past their length freeze every carry (h, c, feed)
+        act = (t < lens_ref[...])[:, None]
+        new_h = [jnp.where(act, v, h_s[l]) for l, v in enumerate(new_h)]
+        new_c = [jnp.where(act, v, c_s[l]) for l, v in enumerate(new_c)]
+        htil = jnp.where(act, htil, feed_s[...])
+
     for l in range(nl):
         h_s[l] = new_h[l]
         c_s[l] = new_c[l]
@@ -427,14 +488,16 @@ def _pl_fwd_kernel(*args, nl, descs, n_steps):
         ffin_r[...] = htil.astype(ffin_r.dtype)
 
 
-def _pallas_fwd(nl, descs, ops, masks, *, interpret):
+def _pallas_fwd(nl, descs, ops, masks, lengths, *, interpret):
     gx0 = ops["gx0"]
     T, B, G = gx0.shape
     H = ops["w_feed"].shape[0]
     S = ops["enc_out"].shape[1]
     ns = 2 * nl
+    ragged = lengths is not None
     ids = [masks[i] if d.mode == "structured" else _dummy_ids()
            for i, d in enumerate(descs)]
+    lens = lengths.astype(jnp.int32) if ragged else _dummy_lens()
     m_ins, m_specs = [], []
     for i, d in enumerate(descs):
         m_in, m_spec = _m3_inputs(masks[i] if d.mode == "dense" else None,
@@ -445,11 +508,12 @@ def _pallas_fwd(nl, descs, ops, masks, *, interpret):
     seq = lambda shp: pl.BlockSpec((1, *shp), lambda t, *_: (t,) + (0,) * len(shp))
     const = lambda shp: pl.BlockSpec(shp, lambda t, *_: (0,) * len(shp))
 
-    kernel = functools.partial(_pl_fwd_kernel, nl=nl, descs=descs, n_steps=T)
+    kernel = functools.partial(_pl_fwd_kernel, nl=nl, descs=descs, n_steps=T,
+                               ragged=ragged)
     outs = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=ns,
+            num_scalar_prefetch=ns + 1,
             grid=(T,),
             in_specs=[
                 seq((B, G)),                                   # gx0
@@ -482,7 +546,7 @@ def _pallas_fwd(nl, descs, ops, masks, *, interpret):
                    jax.ShapeDtypeStruct((nl, B, H), F32),
                    jax.ShapeDtypeStruct((B, H), F32)],
         interpret=interpret,
-    )(*ids, gx0, *ops["us"], *ops["ws"],
+    )(*ids, lens, gx0, *ops["us"], *ops["ws"],
       *[b.reshape(1, G) for b in ops["bs"]],
       ops["w_feed"], ops["w_comb"], ops["enc_proj"], ops["enc_out"],
       ops["score_bias"], ops["h0"], ops["c0"], ops["feed0"], *m_ins)
@@ -531,10 +595,11 @@ def _pl_wg(x, dg, acc_ref, ids_ref, m_ref, r, d):
                                           preferred_element_type=F32)
 
 
-def _pl_bwd_kernel(*args, nl, descs, n_steps):
+def _pl_bwd_kernel(*args, nl, descs, n_steps, ragged):
     ns = 2 * nl
     i = 0
     ids_refs = args[i:i + ns]; i += ns                              # noqa: E702
+    lens_ref = args[i]; i += 1                                      # noqa: E702
     dy = args[i]; i += 1                                            # noqa: E702
     gates = args[i:i + nl]; i += nl                                 # noqa: E702
     hh = args[i:i + nl]; i += nl                                    # noqa: E702
@@ -583,7 +648,14 @@ def _pl_bwd_kernel(*args, nl, descs, n_steps):
     cur = hh[nl - 1][0].astype(F32)
 
     dhtil = dy[0].astype(F32) + dfeed_s[...]
-    dpre = dhtil * (1.0 - htil_t * htil_t)
+    if ragged:
+        # frozen rows: zero the cotangents into the step math (linear in
+        # them), pass the originals through to t-1 at the end.
+        act = (r < lens_ref[...])[:, None]
+        dhtil_c = jnp.where(act, dhtil, 0.0)
+    else:
+        act, dhtil_c = None, dhtil
+    dpre = dhtil_c * (1.0 - htil_t * htil_t)
     ctxv = jnp.einsum("bs,bsh->bh", alpha_t, eo32,
                       preferred_element_type=F32)
     wc = w_comb[...].astype(F32)
@@ -609,14 +681,22 @@ def _pl_bwd_kernel(*args, nl, descs, n_steps):
     new_dh, new_dc = [None] * nl, [None] * nl
     dfeed_prev = None
     for l in reversed(range(nl)):
+        if ragged:
+            dh_cell = jnp.where(act, dh_cur[l], 0.0)
+            dc_cell = jnp.where(act, dc_s[l], 0.0)
+        else:
+            dh_cell, dc_cell = dh_cur[l], dc_s[l]
         dg, dc_prev = _pw_bwd(gates[l][0].astype(F32),
                               cp[l][0].astype(F32), cc[l][0].astype(F32),
-                              dh_cur[l], dc_s[l])
+                              dh_cell, dc_cell)
         new_dh[l] = _pl_bp(dg, site_w[1 + l], ids_refs[1 + l],
                            m_refs[1 + l], r, descs[1 + l], H)
         _pl_wg(hp[l][0].astype(F32), dg, acc_s[1 + l], ids_refs[1 + l],
                m_refs[1 + l], r, descs[1 + l])
         new_dc[l] = dc_prev
+        if ragged:
+            new_dh[l] = new_dh[l] + jnp.where(act, 0.0, dh_cur[l])
+            new_dc[l] = new_dc[l] + jnp.where(act, 0.0, dc_s[l])
         if l > 0:
             dh_cur[l - 1] = dh_cur[l - 1] + _pl_bp(
                 dg, site_w[nl + l], ids_refs[nl + l], m_refs[nl + l], r,
@@ -628,6 +708,8 @@ def _pl_bwd_kernel(*args, nl, descs, n_steps):
             dgx0_r[0] = dg.astype(dgx0_r.dtype)
             dfeed_prev = _pl_bp(dg, site_w[0], ids_refs[0], m_refs[0], r,
                                 descs[0], H)
+            if ragged:
+                dfeed_prev = dfeed_prev + jnp.where(act, 0.0, dhtil)
             _pl_wg(fprev[0].astype(F32), dg, acc_s[0], ids_refs[0],
                    m_refs[0], r, descs[0])
     for l in range(nl):
@@ -651,15 +733,17 @@ def _pl_bwd_kernel(*args, nl, descs, n_steps):
         df0_r[...] = dfeed_prev.astype(df0_r.dtype)
 
 
-def _pallas_bwd(nl, descs, ops, masks, res, dout, *, interpret):
+def _pallas_bwd(nl, descs, ops, masks, lengths, res, dout, *, interpret):
     gates_seqs, h_seqs, c_seqs, htil_seq, alpha_seq = res
     d_htil, d_hfin, d_cfin, d_ffin = dout
     T, B, G = ops["gx0"].shape
     H = ops["w_feed"].shape[0]
     S = ops["enc_out"].shape[1]
     ns = 2 * nl
+    ragged = lengths is not None
     ids = [masks[i] if d.mode == "structured" else _dummy_ids()
            for i, d in enumerate(descs)]
+    lens = lengths.astype(jnp.int32) if ragged else _dummy_lens()
     rev3 = lambda t, *_: (T - 1 - t, 0, 0)
     m_ins, m_specs = [], []
     for i, d in enumerate(descs):
@@ -681,11 +765,12 @@ def _pallas_bwd(nl, descs, ops, masks, res, dout, *, interpret):
                                    lambda t, *_: (T - 1 - t,) + (0,) * len(shp))
     const = lambda shp: pl.BlockSpec(shp, lambda t, *_: (0,) * len(shp))
 
-    kernel = functools.partial(_pl_bwd_kernel, nl=nl, descs=descs, n_steps=T)
+    kernel = functools.partial(_pl_bwd_kernel, nl=nl, descs=descs, n_steps=T,
+                               ragged=ragged)
     outs = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=ns,
+            num_scalar_prefetch=ns + 1,
             grid=(T,),
             in_specs=[
                 rev((B, H)),                                   # dy
@@ -729,7 +814,7 @@ def _pallas_bwd(nl, descs, ops, masks, res, dout, *, interpret):
                    jax.ShapeDtypeStruct((nl, B, H), F32),
                    jax.ShapeDtypeStruct((B, H), F32)],
         interpret=interpret,
-    )(*ids, d_htil, *gates_seqs, *h_seqs, *h_prev_seqs, *c_seqs,
+    )(*ids, lens, d_htil, *gates_seqs, *h_seqs, *h_prev_seqs, *c_seqs,
       *c_prev_seqs, htil_seq, feed_prev_seq, alpha_seq, *ops["us"],
       *ops["ws"], ops["w_feed"], ops["w_comb"], ops["enc_proj"],
       ops["enc_out"], d_hfin, d_cfin, d_ffin, *m_ins)
@@ -749,37 +834,39 @@ def _pallas_bwd(nl, descs, ops, masks, res, dout, *, interpret):
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
-def _decoder_scan(descs, impl, interpret, ops, masks):
-    out, _ = _decoder_scan_fwd(descs, impl, interpret, ops, masks)
+def _decoder_scan(descs, impl, interpret, ops, masks, lengths):
+    out, _ = _decoder_scan_fwd(descs, impl, interpret, ops, masks, lengths)
     return out
 
 
-def _decoder_scan_fwd(descs, impl, interpret, ops, masks):
+def _decoder_scan_fwd(descs, impl, interpret, ops, masks, lengths):
     nl = len(ops["us"])
     if impl == "pallas":
         (htil_seq, gates_seqs, h_seqs, c_seqs, alpha_seq,
-         finals) = _pallas_fwd(nl, descs, ops, masks, interpret=interpret)
+         finals) = _pallas_fwd(nl, descs, ops, masks, lengths,
+                               interpret=interpret)
     else:
         (htil_seq, gates_seqs, h_seqs, c_seqs, alpha_seq,
-         finals) = _xla_fwd(nl, descs, ops, masks)
+         finals) = _xla_fwd(nl, descs, ops, masks, lengths)
     h_fin, c_fin, feed_fin = finals
     odt = ops["gx0"].dtype
     out = (htil_seq.astype(odt), h_fin.astype(ops["h0"].dtype),
            c_fin.astype(ops["c0"].dtype), feed_fin.astype(odt))
     return out, (gates_seqs, h_seqs, c_seqs, htil_seq, alpha_seq, ops,
-                 masks)
+                 masks, lengths)
 
 
 def _decoder_scan_bwd(descs, impl, interpret, res, dout):
-    gates_seqs, h_seqs, c_seqs, htil_seq, alpha_seq, ops, masks = res
+    (gates_seqs, h_seqs, c_seqs, htil_seq, alpha_seq, ops, masks,
+     lengths) = res
     nl = len(ops["us"])
     r = (gates_seqs, h_seqs, c_seqs, htil_seq, alpha_seq)
     if impl == "pallas":
         (dgx, accs, dbs, dwcomb, dep, deo, dh0, dc0, dfeed0) = _pallas_bwd(
-            nl, descs, ops, masks, r, dout, interpret=interpret)
+            nl, descs, ops, masks, lengths, r, dout, interpret=interpret)
     else:
         (dgx, accs, dbs, dwcomb, dep, deo, dh0, dc0, dfeed0) = _xla_bwd(
-            nl, descs, ops, masks, r, dout)
+            nl, descs, ops, masks, lengths, r, dout)
     d_ops = {
         "gx0": dgx.astype(ops["gx0"].dtype),
         "us": tuple(accs[1 + l].astype(ops["us"][l].dtype)
@@ -800,7 +887,8 @@ def _decoder_scan_bwd(descs, impl, interpret, res, dout):
         None if m is None else
         (_float0_like(m) if d.mode == "structured" else jnp.zeros_like(m))
         for d, m in zip(descs, masks))
-    return d_ops, d_masks
+    dlens = None if lengths is None else _float0_like(lengths)
+    return d_ops, d_masks, dlens
 
 
 _decoder_scan.defvjp(_decoder_scan_fwd, _decoder_scan_bwd)
@@ -814,7 +902,8 @@ def decoder_scan(gx0: jax.Array, us: Tuple[jax.Array, ...],
                  enc_proj: jax.Array, enc_out: jax.Array,
                  score_bias: jax.Array, h0: jax.Array, c0: jax.Array,
                  feed0: jax.Array, *, sites,
-                 impl: str = "xla", interpret: Optional[bool] = None):
+                 impl: str = "xla", interpret: Optional[bool] = None,
+                 lengths: Optional[jax.Array] = None):
     """Run the full teacher-forced decoder recurrence in one fused pass.
 
     gx0: (T, B, 4H) Phase-A gate inputs ``drop(embed_t) @ W_x + b_0``
@@ -830,6 +919,13 @@ def decoder_scan(gx0: jax.Array, us: Tuple[jax.Array, ...],
     (h_fin (nl, B, H), c_fin, feed_fin (B, H)))``, differentiable w.r.t.
     every array input (score_bias gets zero cotangent) through the fused
     hand-derived reverse-time backward.
+
+    ``lengths`` (B,) int32 makes the target batch ragged: row b freezes
+    every carry (h_l, c_l, feed) after its ``lengths[b]``-th step, so
+    ``h_tildes[t, b]`` repeats the last valid readout for
+    ``t >= lengths[b]``, finals are the states at the last real step, and
+    frozen steps contribute exactly zero to every weight/attention
+    gradient — equivalent to running each row unpacked at its own length.
     """
     nl = len(us)
     if len(sites) != 2 * nl:
@@ -844,5 +940,5 @@ def decoder_scan(gx0: jax.Array, us: Tuple[jax.Array, ...],
                enc_out=enc_out, score_bias=score_bias, h0=h0, c0=c0,
                feed0=feed0)
     htil, h_fin, c_fin, feed_fin = _decoder_scan_jit(
-        descs, impl, bool(interpret), ops, site_masks)
+        descs, impl, bool(interpret), ops, site_masks, lengths)
     return htil, (h_fin, c_fin, feed_fin)

@@ -106,7 +106,8 @@ def lstm_scan(gx: jax.Array, u: jax.Array, h0: jax.Array, c0: jax.Array, *,
               scale: float = 1.0,
               forget_bias: float = 0.0,
               impl: str = "pallas",
-              interpret: Optional[bool] = None):
+              interpret: Optional[bool] = None,
+              lengths: Optional[jax.Array] = None):
     """Run the full Phase-B LSTM recurrence in one fused pass.
 
     gx: (T, B, 4H) precomputed non-recurrent gate inputs ``x_t @ W + b``
@@ -117,6 +118,10 @@ def lstm_scan(gx: jax.Array, u: jax.Array, h0: jax.Array, c0: jax.Array, *,
     ``(hs (T, B, H), (h_fin, c_fin))`` and is differentiable w.r.t.
     (gx, u, h0, c0) through the fused reverse-time backward.
 
+    ``lengths`` (B,) int32 makes the batch ragged: row b freezes its
+    (h, c) carry after step ``lengths[b]`` and frozen steps contribute
+    zero gradient — see ``cell_scan.cell_scan`` for the exact contract.
+
     This is the dense-recurrence (heads=1) instance of
     ``cell_scan.cell_scan``; the head axis is added/stripped here.
     """
@@ -125,5 +130,5 @@ def lstm_scan(gx: jax.Array, u: jax.Array, h0: jax.Array, c0: jax.Array, *,
         gx[:, :, None, :], u[None], h0[:, None], (c0[:, None],),
         cell=lstm_cell_spec(float(forget_bias)),
         keep_blocks=keep_blocks, dense_mask=dm, block_size=block_size,
-        scale=scale, impl=impl, interpret=interpret)
+        scale=scale, impl=impl, interpret=interpret, lengths=lengths)
     return hs[:, :, 0], (h_fin[:, 0], c_fin[:, 0])

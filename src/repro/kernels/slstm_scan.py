@@ -114,7 +114,8 @@ def slstm_scan(xg: jax.Array, r: jax.Array, h0: jax.Array, c0: jax.Array,
                block_size: int = 1,
                scale: float = 1.0,
                impl: str = "pallas",
-               interpret: Optional[bool] = None):
+               interpret: Optional[bool] = None,
+               lengths: Optional[jax.Array] = None):
     """Run the full sLSTM time recurrence in one fused pass.
 
     xg: (T, B, H, 4dh) precomputed non-recurrent gate inputs
@@ -127,9 +128,11 @@ def slstm_scan(xg: jax.Array, r: jax.Array, h0: jax.Array, c0: jax.Array,
     ``scale``; a leading 1 means FIXED. Returns
     ``(hs (T, B, H, dh), (h_fin, (c_fin, n_fin, m_fin)))``, differentiable
     w.r.t. (xg, r, h0, c0, n0, m0) through the fused reverse-time
-    backward.
+    backward. ``lengths`` (B,) int32 makes the batch ragged: row b
+    freezes its (h, c, n, m) carry after step ``lengths[b]`` and frozen
+    steps contribute zero gradient (``cell_scan.cell_scan`` contract).
     """
     return cell_scan(xg, r, h0, (c0, n0, m0), cell=SLSTM_CELL,
                      keep_blocks=keep_blocks, dense_mask=dense_mask,
                      block_size=block_size, scale=scale, impl=impl,
-                     interpret=interpret)
+                     interpret=interpret, lengths=lengths)

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 
 from repro.core import layers as L
 from repro.core import lstm as lstm_mod
+from repro.core import metrics
 from repro.core.dropout_plan import DropoutPlan
 from repro.core.sdrop import DropoutSpec
 
@@ -89,8 +90,14 @@ def init_params(key, cfg: LSTMLMConfig):
     return p
 
 
-def forward(params, tokens, cfg: LSTMLMConfig, *, state=None, ctx=None):
-    """tokens: (B, S) -> (logits (B,S,V), final state)."""
+def forward(params, tokens, cfg: LSTMLMConfig, *, state=None, ctx=None,
+            lengths=None):
+    """tokens: (B, S) -> (logits (B,S,V), final state).
+
+    ``lengths`` (B,) int32 marks a ragged batch: row b's recurrent carries
+    freeze after its length (so the returned state carries over correctly
+    in truncated-BPTT training) and frozen steps cost zero gradient.
+    """
     if ctx is None:
         ctx = cfg.plan.bind(None)
     B, S = tokens.shape
@@ -100,7 +107,7 @@ def forward(params, tokens, cfg: LSTMLMConfig, *, state=None, ctx=None):
         state = lstm_mod.zero_state(cfg.num_layers, B, cfg.hidden)
     ys, state = lstm_mod.lstm_stack(
         params["lstm"], x.transpose(1, 0, 2), state, ctx=ctx,
-        engine=cfg.engine)
+        engine=cfg.engine, lengths=lengths)
     h = ys.transpose(1, 0, 2)                              # (B,S,H)
     h = ctx.apply("out", h)
     if cfg.tie_embeddings:
@@ -115,15 +122,26 @@ def forward(params, tokens, cfg: LSTMLMConfig, *, state=None, ctx=None):
 
 def loss_fn(params, batch, cfg: LSTMLMConfig, *, state=None, drop_key=None,
             rules=None, step=0):
+    """Mean NLL per token — per *real* token when batch carries "lengths"."""
     ctx = cfg.plan.bind(drop_key, step)
-    logits, _ = forward(params, batch["tokens"], cfg, state=state, ctx=ctx)
+    lengths = batch.get("lengths")
+    logits, _ = forward(params, batch["tokens"], cfg, state=state, ctx=ctx,
+                        lengths=lengths)
     lp = jax.nn.log_softmax(logits, axis=-1)
     nll = -jnp.take_along_axis(lp, batch["labels"][..., None], axis=-1)
-    return nll.mean()
+    if lengths is None:
+        return nll.mean()
+    mask = metrics.length_mask(lengths, batch["tokens"].shape[1])
+    return metrics.masked_mean(nll[..., 0], mask)
 
 
-def perplexity(params, tokens, labels, cfg: LSTMLMConfig) -> float:
-    logits, _ = forward(params, tokens, cfg)
+def perplexity(params, tokens, labels, cfg: LSTMLMConfig,
+               lengths=None) -> float:
+    """exp(mean NLL) — over real tokens only when ``lengths`` is given."""
+    logits, _ = forward(params, tokens, cfg, lengths=lengths)
     lp = jax.nn.log_softmax(logits, axis=-1)
     nll = -jnp.take_along_axis(lp, labels[..., None], axis=-1)
-    return float(jnp.exp(nll.mean()))
+    if lengths is None:
+        return float(jnp.exp(nll.mean()))
+    mask = metrics.length_mask(lengths, tokens.shape[1])
+    return float(jnp.exp(metrics.masked_mean(nll[..., 0], mask)))

@@ -50,6 +50,7 @@ import jax.numpy as jnp
 
 from repro.core import layers as L
 from repro.core import lstm as lstm_mod
+from repro.core import metrics
 from repro.core.dropout_plan import DropoutPlan
 from repro.core.sdrop import DropoutSpec
 
@@ -86,7 +87,12 @@ def init_params(key, cfg: NMTConfig):
     }
 
 
-def encode(params, src, cfg: NMTConfig, *, ctx=None):
+def encode(params, src, cfg: NMTConfig, *, ctx=None, lengths=None):
+    """src (B, S) -> (enc_out (B, S, H), final state).
+
+    ``lengths`` (B,) int32 marks ragged sources: each row's encoder state
+    freezes at its last real token, so the state handed to the decoder is
+    the same one an unpacked per-row encode would produce."""
     if ctx is None:
         ctx = cfg.plan.bind(None)
     B, S = src.shape
@@ -94,7 +100,7 @@ def encode(params, src, cfg: NMTConfig, *, ctx=None):
     state = lstm_mod.zero_state(cfg.num_layers, B, cfg.hidden)
     ys, state = lstm_mod.lstm_stack(
         params["encoder"], x.transpose(1, 0, 2), state, ctx=ctx, site="enc",
-        engine=cfg.engine)
+        engine=cfg.engine, lengths=lengths)
     enc = ys.transpose(1, 0, 2)                            # (B,S,H)
     enc = ctx.apply("enc/out", enc)
     return enc, state
@@ -152,12 +158,15 @@ def _site_args(sched):
 
 
 def decode_train(params, tgt_in, enc_out, enc_state, cfg: NMTConfig, *,
-                 ctx=None, src_mask=None):
+                 ctx=None, src_mask=None, tgt_lengths=None):
     """Teacher-forced decoding with Luong general attention + input feeding.
 
     tgt_in: (B, St); enc_out: (B, Ss, H). Returns logits (B, St, V).
     Two-pass restructure per the module docstring; ``cfg.engine`` picks the
     pass-1 execution (stepwise oracle / scheduled scan / fused kernel).
+    ``tgt_lengths`` (B,) int32 marks ragged targets: every decoder carry
+    (h_l, c_l, feed) freezes past each row's length and frozen steps cost
+    zero gradient — identical across all three engines.
     """
     if ctx is None:
         ctx = cfg.plan.bind(None)
@@ -175,6 +184,17 @@ def decode_train(params, tgt_in, enc_out, enc_state, cfg: NMTConfig, *,
     feed0 = jnp.zeros((B, H), x.dtype)
     site_names = _scan_site_names(nl)
 
+    def freeze(carry_new, carry_old, t):
+        """Ragged carry freeze: rows past their length keep t-1's state."""
+        if tgt_lengths is None:
+            return carry_new
+        act = t < tgt_lengths                              # (B,)
+        nh, nc, nf = carry_new
+        oh, oc, of_ = carry_old
+        return (jnp.where(act[None, :, None], nh, oh),
+                jnp.where(act[None, :, None], nc, oc),
+                jnp.where(act[:, None], nf, of_))
+
     if cfg.engine == "stepwise":
         # oracle: everything in-scan, masks drawn per step via ctx.state
         # (row t of a schedule is bit-identical — same per-step key).
@@ -184,8 +204,10 @@ def decode_train(params, tgt_in, enc_out, enc_state, cfg: NMTConfig, *,
                 {"w": dec[0]["W"], "b": dec[0]["b"]}, x_t,
                 ctx.state("dec/layer0/nr", B, cfg.embed, t=t))
             sts = [ctx.state(n, B, H, t=t) for n in site_names]
-            return _dec_step(params, nl, carry, gx0_t, sts, enc_proj,
-                             enc_out, score_bias)
+            new_carry, _ = _dec_step(params, nl, carry, gx0_t, sts,
+                                     enc_proj, enc_out, score_bias)
+            new_carry = freeze(new_carry, carry, t)
+            return new_carry, new_carry[2]
 
         _, h_tildes = jax.lax.scan(step, (h0, c0, feed0),
                                    (x_seq, jnp.arange(St)))
@@ -207,7 +229,8 @@ def decode_train(params, tgt_in, enc_out, enc_state, cfg: NMTConfig, *,
                 tuple(p["b"] for p in dec[1:]),
                 params["w_feed"], params["w_comb"]["w"], enc_proj, enc_out,
                 score_bias, h0, c0, feed0,
-                sites=tuple(_site_args(s) for s in scheds), impl=impl)
+                sites=tuple(_site_args(s) for s in scheds), impl=impl,
+                lengths=tgt_lengths)
         else:
             # scheduled: same restructure as a slim lax.scan. PER_STEP
             # mask rows ride through as xs, FIXED ones close over as
@@ -217,15 +240,17 @@ def decode_train(params, tgt_in, enc_out, enc_state, cfg: NMTConfig, *,
                       for s, r in zip(scheds, xs_rows)]
 
             def step(carry, xs):
-                gx0_t, rows = xs
+                gx0_t, rows, t = xs
                 sts = [consts[i] if rows[i] is None
                        else scheds[i].state_for_row(rows[i])
                        for i in range(len(scheds))]
-                return _dec_step(params, nl, carry, gx0_t, sts, enc_proj,
-                                 enc_out, score_bias)
+                new_carry, _ = _dec_step(params, nl, carry, gx0_t, sts,
+                                         enc_proj, enc_out, score_bias)
+                new_carry = freeze(new_carry, carry, t)
+                return new_carry, new_carry[2]
 
             _, h_tildes = jax.lax.scan(step, (h0, c0, feed0),
-                                       (gx0, xs_rows))
+                                       (gx0, xs_rows, jnp.arange(St)))
     # pass 2: time-batched output dropout + vocab projection.
     ht = h_tildes.transpose(1, 0, 2)                       # (B,St,H)
     ht = ctx.apply("dec/out", ht)
@@ -234,14 +259,32 @@ def decode_train(params, tgt_in, enc_out, enc_state, cfg: NMTConfig, *,
 
 def loss_fn(params, batch, cfg: NMTConfig, *, drop_key=None, rules=None,
             step=0):
-    """batch: {"src", "tgt_in", "tgt_out", ["src_mask", "tgt_mask"]}."""
+    """batch: {"src", "tgt_in", "tgt_out", ["src_mask", "tgt_mask",
+    "src_lengths", "tgt_lengths"]}.
+
+    Token-packed batches carry "src_lengths"/"tgt_lengths" (B,) int32
+    instead of (or in addition to) the boolean masks: lengths freeze the
+    recurrent carries inside both stacks (real FLOPs/grad savings, see
+    kernels/cell_scan.py) and also derive the attention/loss masks when
+    those aren't supplied explicitly.
+    """
     ctx = cfg.plan.bind(drop_key, step)
-    enc, st = encode(params, batch["src"], cfg, ctx=ctx)
+    src_lengths = batch.get("src_lengths")
+    tgt_lengths = batch.get("tgt_lengths")
+    enc, st = encode(params, batch["src"], cfg, ctx=ctx,
+                     lengths=src_lengths)
+    src_mask = batch.get("src_mask")
+    if src_mask is None and src_lengths is not None:
+        src_mask = metrics.length_mask(src_lengths,
+                                       batch["src"].shape[1]) > 0
     logits = decode_train(params, batch["tgt_in"], enc, st, cfg,
-                          ctx=ctx, src_mask=batch.get("src_mask"))
+                          ctx=ctx, src_mask=src_mask,
+                          tgt_lengths=tgt_lengths)
     lp = jax.nn.log_softmax(logits, axis=-1)
     nll = -jnp.take_along_axis(lp, batch["tgt_out"][..., None], -1)[..., 0]
     mask = batch.get("tgt_mask")
+    if mask is None and tgt_lengths is not None:
+        mask = metrics.length_mask(tgt_lengths, batch["tgt_in"].shape[1])
     if mask is not None:
         return (nll * mask).sum() / jnp.maximum(mask.sum(), 1)
     return nll.mean()

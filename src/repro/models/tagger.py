@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from repro.core import layers as L
 from repro.core import lstm as lstm_mod
+from repro.core import metrics
 from repro.core.dropout_plan import DropoutPlan
 from repro.core.sdrop import DropoutSpec
 
@@ -70,11 +71,30 @@ def char_cnn(params, chars, cfg: TaggerConfig):
     return jnp.max(jax.nn.relu(conv), axis=2)              # (B,S,F)
 
 
+def _reverse_valid(xs, lengths):
+    """Per-row reversal of each row's valid prefix. xs: (S, B, D).
+
+    Position t maps to ``lengths[b] - 1 - t`` for t < lengths[b] and stays
+    put on the padded tail, so a ragged batch's backward LSTM reads real
+    tokens first exactly as an unpacked per-row reversal would.
+    """
+    S = xs.shape[0]
+    t = jnp.arange(S)[:, None]
+    idx = jnp.where(t < lengths[None, :], lengths[None, :] - 1 - t, t)
+    return jnp.take_along_axis(xs, idx[:, :, None], axis=0)
+
+
 def features(params, batch, cfg: TaggerConfig, *, ctx=None):
-    """-> (B, S, 2H) BiLSTM features."""
+    """-> (B, S, 2H) BiLSTM features.
+
+    When the batch carries "lengths" (B,) int32 the rows are ragged: both
+    direction stacks freeze their carries past each row's length, and the
+    backward stack reverses only the valid prefix (pads never enter it).
+    """
     if ctx is None:
         ctx = cfg.plan.bind(None)
     words, chars = batch["words"], batch["chars"]
+    lengths = batch.get("lengths")
     B, S = words.shape
     we = jnp.take(params["word_embed"], words, axis=0)
     ce = char_cnn(params, chars, cfg)
@@ -87,12 +107,17 @@ def features(params, batch, cfg: TaggerConfig, *, ctx=None):
         state = lstm_mod.zero_state(1, B, cfg.hidden)
         # site prefix = direction -> independent fwd/bwd RH streams
         ys, _ = lstm_mod.lstm_stack(params[dirn], xs, state, ctx=ctx,
-                                    site=dirn, engine=cfg.engine)
+                                    site=dirn, engine=cfg.engine,
+                                    lengths=lengths)
         return ys
 
     xs = x.transpose(1, 0, 2)                              # (S,B,feat)
     fwd = run("fwd", xs)
-    bwd = run("bwd", xs[::-1])[::-1]
+    if lengths is None:
+        bwd = run("bwd", xs[::-1])[::-1]
+    else:
+        bwd = _reverse_valid(run("bwd", _reverse_valid(xs, lengths)),
+                             lengths)
     h = jnp.concatenate([fwd, bwd], axis=-1).transpose(1, 0, 2)
     return h
 
@@ -131,9 +156,17 @@ def loss_fn(params, batch, cfg: TaggerConfig, *, drop_key=None, rules=None,
             step=0):
     ctx = cfg.plan.bind(drop_key, step)
     emit = emissions(params, batch, cfg, ctx=ctx)
-    mask = batch.get("mask", jnp.ones(batch["words"].shape, bool))
+    mask = batch.get("mask")
+    if mask is None:
+        lmask = metrics.resolve_mask(batch, batch["words"])
+        mask = (lmask > 0 if lmask is not None
+                else jnp.ones(batch["words"].shape, bool))
     logZ = crf_log_norm(emit, params["crf"], mask)
     score = crf_score(emit, batch["tags"], params["crf"], mask)
+    if "lengths" in batch:
+        # dummy rows (length 0) must not dilute the per-sequence mean
+        real = (batch["lengths"] > 0).astype(jnp.float32)
+        return ((logZ - score) * real).sum() / jnp.maximum(real.sum(), 1.0)
     return (logZ - score).mean()
 
 

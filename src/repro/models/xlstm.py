@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import masks as _masks
+from repro.core import metrics
 from repro.core import sparse_matmul as sm
 from repro.core.dropout_plan import DropoutPlan
 from repro.distributed.sharding import tag, shard_act
@@ -395,8 +396,15 @@ def mlstm_block_apply(pl, x, cfg: XLSTMConfig, drop_state=None, initial=None,
 
 def slstm_block_apply(pl, x, cfg: XLSTMConfig, nr_state=None, ctx=None,
                       rh_site: str = "slstm/rh",
-                      initial=None, step0: int = 0, rules=None):
-    """sLSTM block with scan over time; RH structured dropout per step."""
+                      initial=None, step0: int = 0, rules=None,
+                      lengths=None):
+    """sLSTM block with scan over time; RH structured dropout per step.
+
+    ``lengths`` (B,) int32 marks ragged rows: carries (h, c, n, m) freeze
+    past each row's length so the returned final state matches a per-row
+    unpacked run. The freeze predicate uses the *within-sequence* index
+    (``t - step0``) — ``step0`` only shifts the mask-schedule time axis.
+    """
     B, S, D = x.shape
     H, dh = cfg.n_heads, cfg.dh_s
     h = _rms(pl["ln"]["g"], x)
@@ -440,7 +448,7 @@ def slstm_block_apply(pl, x, cfg: XLSTMConfig, nr_state=None, ctx=None,
                           scale=rh_sched.scale)
         xgh = xg.transpose(1, 0, 2).reshape(S, B, H, 4 * dh)
         hs, (hf, stf) = _kops.slstm_scan(xgh, pl["R"], h0, *st0,
-                                         impl=impl, **kw)
+                                         impl=impl, lengths=lengths, **kw)
         hs = hs.transpose(1, 0, 2, 3)
     else:
         def step(carry, inp):
@@ -455,6 +463,11 @@ def slstm_block_apply(pl, x, cfg: XLSTMConfig, nr_state=None, ctx=None,
             h_new, st_new = slstm_step(xg_t, h_prev, st, pl["R"],
                                        rh_state=rh, rules=rules,
                                        pin_h=cfg.pin_h_carry)
+            if lengths is not None:
+                act = ((t - step0) < lengths)[:, None, None]
+                h_new = jnp.where(act, h_new, h_prev)
+                st_new = tuple(jnp.where(act, v, s)
+                               for v, s in zip(st_new, st))
             return (h_new, st_new), h_new
 
         (hf, stf), hs = jax.lax.scan(step, (h0, st0),
@@ -478,7 +491,16 @@ def slstm_block_apply(pl, x, cfg: XLSTMConfig, nr_state=None, ctx=None,
 # ---------------------------------------------------------------------------
 
 
-def forward(params, tokens, cfg: XLSTMConfig, *, rules=None, ctx=None):
+def forward(params, tokens, cfg: XLSTMConfig, *, rules=None, ctx=None,
+            lengths=None):
+    """tokens (B, S) -> features (B, S, D).
+
+    ``lengths`` (B,) int32 marks a ragged batch. Both block families are
+    causal, so real-token features never see padding; the lengths are
+    threaded into the sLSTM blocks so their recurrent carries freeze at
+    each row's last real token (mLSTM needs no freeze for the loss — its
+    chunkwise form is causal — and ``forward`` discards final states).
+    """
     if ctx is None:
         ctx = cfg.plan.bind(None)
     x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
@@ -514,7 +536,8 @@ def forward(params, tokens, cfg: XLSTMConfig, *, rules=None, ctx=None):
         nr = ctx.state("slstm/nr", x.shape[:2], cfg.d_model,
                        t=g * cfg.slstm_every + per_group)
         x, _ = slstm_block_apply(sl, x, cfg, nr_state=nr, ctx=ctx,
-                                 rh_site=f"slstm{g}/rh", rules=rules)
+                                 rh_site=f"slstm{g}/rh", rules=rules,
+                                 lengths=lengths)
         mi += per_group
     n_m = kinds.count("m")
     if mi < n_m:
@@ -591,8 +614,17 @@ def lm_logits(params, feats):
 
 def loss_fn(params, batch, cfg: XLSTMConfig, *, rules=None, drop_key=None,
             step=0):
+    """Mean NLL — per *real* token when the batch carries "lengths"."""
     ctx = cfg.plan.bind(drop_key, step)
-    feats = forward(params, batch["tokens"], cfg, rules=rules, ctx=ctx)
+    lengths = batch.get("lengths")
+    feats = forward(params, batch["tokens"], cfg, rules=rules, ctx=ctx,
+                    lengths=lengths)
+    if lengths is not None:
+        mask = metrics.length_mask(lengths, batch["tokens"].shape[1])
+        B, S = batch["tokens"].shape
+        chunk = max(1, -(-(B * S) // cfg.loss_chunks))
+        return metrics.masked_lm_loss({"w": params["lm_head"]}, feats,
+                                      batch["labels"], mask, chunk=chunk)
     tcfg = T.TransformerConfig(vocab=cfg.vocab, d_model=cfg.d_model,
                                loss_chunks=cfg.loss_chunks)
     return T.lm_loss({"lm_head": params["lm_head"]}, feats, batch["labels"],

@@ -1,0 +1,525 @@
+"""Ragged (token-packed) batching: packed == per-sequence unpacked.
+
+The contract this file pins down (docs/engines.md "Ragged batches"):
+
+  * a batch with a ``lengths`` column computes the SAME loss and the SAME
+    parameter gradients as running each row separately at its true length
+    and token-weighted-averaging — for every recurrent engine (stepwise /
+    scheduled / fused) and both fused impls (xla / pallas-interpret);
+  * frozen steps repeat the last valid carry (finals = the state at each
+    row's last real step, the truncated-BPTT handoff invariant);
+  * ``data.pipeline.PackedBatcher`` packing is a pure function of
+    (seed, epoch): restart-at-step is bit-identical, every sequence
+    appears exactly once per epoch, dummy fill rows are length-0 zeros.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:                     # property tests ride the importorskip convention:
+    import hypothesis    # absent hypothesis skips them, never the module
+    from hypothesis import given, settings
+    from hypothesis import strategies as hst
+except ImportError:      # pragma: no cover
+    hypothesis = None
+
+from repro.configs import adapters
+from repro.configs.base import ArchSpec
+from repro.core import metrics
+from repro.data import pipeline, synthetic
+from repro.distributed.sharding import strip
+from repro.kernels.lstm_scan import lstm_scan
+from repro.kernels.slstm_scan import slstm_scan
+from repro.models import lstm_lm, seq2seq, tagger, xlstm
+
+KEY = jax.random.PRNGKey(0)
+ENGINES = ("stepwise", "scheduled", "fused")
+IMPLS = ("xla", "pallas")        # pallas auto-interprets off TPU
+
+
+def _tree_max_diff(a, b):
+    return max(float(jnp.abs(x - y).max())
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ---------------------------------------------------------------------------
+# kernel level
+# ---------------------------------------------------------------------------
+
+
+class TestKernelRagged:
+    """lstm_scan / slstm_scan with ``lengths`` == per-row unpacked runs."""
+
+    @pytest.mark.parametrize("impl", IMPLS)
+    def test_lstm_scan_matches_per_row(self, impl):
+        T, B, H = 10, 4, 16
+        ks = [jax.random.fold_in(KEY, i) for i in range(4)]
+        gx = jax.random.normal(ks[0], (T, B, 4 * H))
+        u = jax.random.normal(ks[1], (H, 4 * H)) * 0.2
+        h0 = jax.random.normal(ks[2], (B, H))
+        c0 = jax.random.normal(ks[3], (B, H))
+        lens = jnp.array([10, 6, 1, 8], jnp.int32)
+
+        def packed_loss(gx, u, h0, c0):
+            hs, _ = lstm_scan(gx, u, h0, c0, impl=impl, lengths=lens)
+            m = metrics.length_mask(lens, T).T[:, :, None]     # (T,B,1)
+            return (hs * m).sum()
+
+        loss, grads = jax.value_and_grad(packed_loss, argnums=(0, 1, 2, 3))(
+            gx, u, h0, c0)
+
+        ref_loss, ref_gu = 0.0, jnp.zeros_like(u)
+        hs_p, _ = lstm_scan(gx, u, h0, c0, impl=impl, lengths=lens)
+        for b in range(B):
+            L = int(lens[b])
+
+            def row_loss(gx_b, u, h0_b, c0_b):
+                hs, _ = lstm_scan(gx_b, u, h0_b, c0_b, impl=impl)
+                return hs.sum()
+
+            l, (g_gx, g_u, g_h0, g_c0) = jax.value_and_grad(
+                row_loss, argnums=(0, 1, 2, 3))(
+                gx[:L, b:b + 1], u, h0[b:b + 1], c0[b:b + 1])
+            ref_loss += float(l)
+            ref_gu = ref_gu + g_u
+            np.testing.assert_allclose(grads[0][:L, b], g_gx[:, 0],
+                                       atol=1e-5)
+            # frozen tail steps: zero gradient into gx
+            np.testing.assert_array_equal(np.asarray(grads[0][L:, b]), 0.0)
+            np.testing.assert_allclose(grads[2][b], g_h0[0], atol=1e-5)
+            np.testing.assert_allclose(grads[3][b], g_c0[0], atol=1e-5)
+            # outputs: real prefix matches; frozen tail repeats last valid
+            hs_b, (hf_b, cf_b) = lstm_scan(gx[:L, b:b + 1], u, h0[b:b + 1],
+                                           c0[b:b + 1], impl=impl)
+            np.testing.assert_allclose(np.asarray(hs_p[:L, b]),
+                                       np.asarray(hs_b[:, 0]), atol=1e-6)
+            np.testing.assert_allclose(np.asarray(hs_p[L:, b]),
+                                       np.broadcast_to(hs_b[-1, 0],
+                                                       (T - L, H)),
+                                       atol=1e-6)
+        assert abs(float(loss) - ref_loss) < 1e-4 * max(1.0, abs(ref_loss))
+        np.testing.assert_allclose(np.asarray(grads[1]), np.asarray(ref_gu),
+                                   atol=1e-4)
+
+    @pytest.mark.parametrize("impl", IMPLS)
+    def test_lstm_scan_finals_are_last_valid_state(self, impl):
+        T, B, H = 8, 3, 8
+        gx = jax.random.normal(KEY, (T, B, 4 * H))
+        u = jax.random.normal(jax.random.fold_in(KEY, 1), (H, 4 * H)) * 0.3
+        h0 = jnp.zeros((B, H))
+        c0 = jnp.zeros((B, H))
+        lens = jnp.array([8, 3, 5], jnp.int32)
+        _, (hf, cf) = lstm_scan(gx, u, h0, c0, impl=impl, lengths=lens)
+        for b in range(B):
+            L = int(lens[b])
+            _, (hf_b, cf_b) = lstm_scan(gx[:L, b:b + 1], u, h0[b:b + 1],
+                                        c0[b:b + 1], impl=impl)
+            np.testing.assert_allclose(np.asarray(hf[b]),
+                                       np.asarray(hf_b[0]), atol=1e-6)
+            np.testing.assert_allclose(np.asarray(cf[b]),
+                                       np.asarray(cf_b[0]), atol=1e-6)
+
+    @pytest.mark.parametrize("impl", IMPLS)
+    def test_slstm_scan_matches_per_row(self, impl):
+        T, B, H, dh = 7, 3, 2, 8
+        ks = [jax.random.fold_in(KEY, 10 + i) for i in range(2)]
+        xg = jax.random.normal(ks[0], (T, B, H, 4 * dh))
+        r = jax.random.normal(ks[1], (H, dh, 4 * dh)) * 0.2
+        zeros = jnp.zeros((B, H, dh))
+        h0, c0, n0 = zeros, zeros, zeros
+        m0 = jnp.full((B, H, dh), -1e30)
+        lens = jnp.array([7, 2, 5], jnp.int32)
+
+        def packed_loss(xg, r):
+            hs, _ = slstm_scan(xg, r, h0, c0, n0, m0, impl=impl,
+                               lengths=lens)
+            m = metrics.length_mask(lens, T).T[:, :, None, None]
+            return (hs * m).sum()
+
+        loss, (g_xg, g_r) = jax.value_and_grad(
+            packed_loss, argnums=(0, 1))(xg, r)
+        ref_loss, ref_gr = 0.0, jnp.zeros_like(r)
+        _, (hf, stf) = slstm_scan(xg, r, h0, c0, n0, m0, impl=impl,
+                                  lengths=lens)
+        for b in range(B):
+            L = int(lens[b])
+
+            def row_loss(xg_b, r):
+                hs, _ = slstm_scan(xg_b, r, h0[b:b + 1], c0[b:b + 1],
+                                   n0[b:b + 1], m0[b:b + 1], impl=impl)
+                return hs.sum()
+
+            l, (gx_b, gr_b) = jax.value_and_grad(
+                row_loss, argnums=(0, 1))(xg[:L, b:b + 1], r)
+            ref_loss += float(l)
+            ref_gr = ref_gr + gr_b
+            np.testing.assert_allclose(np.asarray(g_xg[:L, b]),
+                                       np.asarray(gx_b[:, 0]), atol=1e-5)
+            np.testing.assert_array_equal(np.asarray(g_xg[L:, b]), 0.0)
+            _, (hf_b, _) = slstm_scan(xg[:L, b:b + 1], r, h0[b:b + 1],
+                                      c0[b:b + 1], n0[b:b + 1],
+                                      m0[b:b + 1], impl=impl)
+            np.testing.assert_allclose(np.asarray(hf[b]),
+                                       np.asarray(hf_b[0]), atol=1e-6)
+        assert abs(float(loss) - ref_loss) < 1e-4 * max(1.0, abs(ref_loss))
+        np.testing.assert_allclose(np.asarray(g_r), np.asarray(ref_gr),
+                                   atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# model level: packed batch == token-weighted per-row reference
+# ---------------------------------------------------------------------------
+
+
+def _per_row_reference(loss_row, params, lens):
+    """Token-weighted mean of per-row losses + averaged grads."""
+    tot, ntok = 0.0, 0
+    gref = jax.tree.map(jnp.zeros_like, params)
+    for b in range(len(lens)):
+        L = int(lens[b])
+        if L == 0:
+            continue
+        l, g = jax.value_and_grad(loss_row)(params, b)
+        tot += float(l)
+        ntok += L
+        gref = jax.tree.map(lambda a, x: a + x, gref, g)
+    return tot / ntok, jax.tree.map(lambda a: a / ntok, gref)
+
+
+class TestLSTMLMPacked:
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_matches_per_row(self, engine):
+        cfg = lstm_lm.LSTMLMConfig(vocab=40, embed=8, hidden=8,
+                                   num_layers=2, engine=engine,
+                                   plan=lstm_lm.DropoutPlan())
+        params = lstm_lm.init_params(KEY, cfg)
+        rng = np.random.default_rng(0)
+        B, S = 4, 9
+        toks = jnp.asarray(rng.integers(0, 40, (B, S)))
+        labs = jnp.asarray(rng.integers(0, 40, (B, S)))
+        lens = jnp.array([9, 4, 1, 6], jnp.int32)
+        batch = {"tokens": toks, "labels": labs, "lengths": lens}
+        loss, grads = jax.value_and_grad(lstm_lm.loss_fn)(params, batch, cfg)
+
+        def row(p, b):
+            L = int(lens[b])
+            bb = {"tokens": toks[b:b + 1, :L], "labels": labs[b:b + 1, :L]}
+            return lstm_lm.loss_fn(p, bb, cfg) * L
+
+        ref, gref = _per_row_reference(row, params, lens)
+        assert abs(float(loss) - ref) < 1e-5
+        assert _tree_max_diff(grads, gref) < 1e-5
+
+    def test_structured_dropout_case3_matches_per_row(self):
+        """Case-III structured masks are batch-independent (one kept-unit
+        id set per step, shared across rows), so the same drop_key gives
+        each B=1 slice the identical mask sequence — packed loss must
+        equal the token-weighted per-row mean under ACTIVE dropout too."""
+        plan = lstm_lm.DropoutPlan.case("case3", 0.5, block_size=4,
+                                        sites=("nr", "rh"))
+        cfg = lstm_lm.LSTMLMConfig(vocab=40, embed=16, hidden=16,
+                                   num_layers=2, engine="scheduled",
+                                   plan=plan)
+        params = lstm_lm.init_params(KEY, cfg)
+        rng = np.random.default_rng(1)
+        B, S = 3, 8
+        toks = jnp.asarray(rng.integers(0, 40, (B, S)))
+        labs = jnp.asarray(rng.integers(0, 40, (B, S)))
+        lens = jnp.array([8, 3, 5], jnp.int32)
+        dk = jax.random.PRNGKey(7)
+        batch = {"tokens": toks, "labels": labs, "lengths": lens}
+        loss = lstm_lm.loss_fn(params, batch, cfg, drop_key=dk, step=2)
+        tot, ntok = 0.0, 0
+        for b in range(B):
+            L = int(lens[b])
+            bb = {"tokens": toks[b:b + 1, :L], "labels": labs[b:b + 1, :L]}
+            tot += float(lstm_lm.loss_fn(params, bb, cfg, drop_key=dk,
+                                         step=2)) * L
+            ntok += L
+        assert abs(float(loss) - tot / ntok) < 1e-5
+
+    def test_perplexity_masked(self):
+        cfg = lstm_lm.LSTMLMConfig(vocab=30, embed=8, hidden=8,
+                                   num_layers=1, engine="scheduled",
+                                   plan=lstm_lm.DropoutPlan())
+        params = lstm_lm.init_params(KEY, cfg)
+        rng = np.random.default_rng(2)
+        toks = jnp.asarray(rng.integers(0, 30, (2, 6)))
+        labs = jnp.asarray(rng.integers(0, 30, (2, 6)))
+        lens = jnp.array([6, 2], jnp.int32)
+        ppl = lstm_lm.perplexity(params, toks, labs, cfg, lengths=lens)
+        nll = 0.0
+        for b, L in enumerate([6, 2]):
+            p = lstm_lm.perplexity(params, toks[b:b + 1, :L],
+                                   labs[b:b + 1, :L], cfg)
+            nll += np.log(p) * L
+        assert abs(ppl - np.exp(nll / 8)) < 1e-4
+
+
+class TestNMTPacked:
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_matches_per_row(self, engine):
+        cfg = seq2seq.NMTConfig(src_vocab=30, tgt_vocab=35, embed=8,
+                                hidden=8, num_layers=2, engine=engine,
+                                plan=seq2seq.DropoutPlan())
+        params = seq2seq.init_params(KEY, cfg)
+        rng = np.random.default_rng(3)
+        B, Ss, St = 3, 7, 6
+        src = jnp.asarray(rng.integers(0, 30, (B, Ss)))
+        tin = jnp.asarray(rng.integers(0, 35, (B, St)))
+        tout = jnp.asarray(rng.integers(0, 35, (B, St)))
+        sl = jnp.array([7, 3, 5], jnp.int32)
+        tl = jnp.array([6, 2, 4], jnp.int32)
+        batch = {"src": src, "tgt_in": tin, "tgt_out": tout,
+                 "src_lengths": sl, "tgt_lengths": tl}
+        loss, grads = jax.value_and_grad(seq2seq.loss_fn)(params, batch, cfg)
+
+        def row(p, b):
+            bb = {"src": src[b:b + 1, :int(sl[b])],
+                  "tgt_in": tin[b:b + 1, :int(tl[b])],
+                  "tgt_out": tout[b:b + 1, :int(tl[b])]}
+            return seq2seq.loss_fn(p, bb, cfg) * int(tl[b])
+
+        ref, gref = _per_row_reference(row, params, tl)
+        assert abs(float(loss) - ref) < 1e-5
+        assert _tree_max_diff(grads, gref) < 1e-5
+
+    def test_encoder_finals_freeze_at_length(self):
+        """The encoder state handed to the decoder is each row's state at
+        its LAST REAL token, not at the padded end."""
+        cfg = seq2seq.NMTConfig(src_vocab=30, tgt_vocab=30, embed=8,
+                                hidden=8, num_layers=2,
+                                plan=seq2seq.DropoutPlan())
+        params = seq2seq.init_params(KEY, cfg)
+        rng = np.random.default_rng(4)
+        src = jnp.asarray(rng.integers(0, 30, (3, 9)))
+        sl = jnp.array([9, 4, 6], jnp.int32)
+        _, st = seq2seq.encode(params, src, cfg, lengths=sl)
+        for b in range(3):
+            L = int(sl[b])
+            _, st_b = seq2seq.encode(params, src[b:b + 1, :L], cfg)
+            np.testing.assert_allclose(np.asarray(st.h[:, b]),
+                                       np.asarray(st_b.h[:, 0]), atol=1e-6)
+            np.testing.assert_allclose(np.asarray(st.c[:, b]),
+                                       np.asarray(st_b.c[:, 0]), atol=1e-6)
+
+
+class TestTaggerPacked:
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_matches_per_row_with_dummy_row(self, engine):
+        """Bidirectional freeze + valid-prefix reversal + dummy (length-0)
+        rows excluded from the per-sequence CRF mean."""
+        cfg = tagger.TaggerConfig(vocab=50, char_vocab=20, word_embed=8,
+                                  char_embed=6, char_filters=6, hidden=8,
+                                  num_tags=5, engine=engine,
+                                  plan=tagger.DropoutPlan())
+        params = tagger.init_params(KEY, cfg)
+        rng = np.random.default_rng(5)
+        B, S, W = 4, 8, 5
+        words = jnp.asarray(rng.integers(0, 50, (B, S)))
+        chars = jnp.asarray(rng.integers(0, 20, (B, S, W)))
+        tags = jnp.asarray(rng.integers(0, 5, (B, S)))
+        lens = jnp.array([8, 3, 0, 5], jnp.int32)     # row 2 = dummy fill
+        # zero out the dummy row the way PackedBatcher does
+        words = words.at[2].set(0)
+        chars = chars.at[2].set(0)
+        tags = tags.at[2].set(0)
+        batch = {"words": words, "chars": chars, "tags": tags,
+                 "lengths": lens}
+        loss, grads = jax.value_and_grad(tagger.loss_fn)(params, batch, cfg)
+
+        tot, nreal = 0.0, 0
+        gref = jax.tree.map(jnp.zeros_like, params)
+        for b in range(B):
+            L = int(lens[b])
+            if L == 0:
+                continue
+
+            def row(p):
+                bb = {"words": words[b:b + 1, :L],
+                      "chars": chars[b:b + 1, :L],
+                      "tags": tags[b:b + 1, :L]}
+                return tagger.loss_fn(p, bb, cfg)
+
+            l, g = jax.value_and_grad(row)(params)
+            tot += float(l)
+            nreal += 1
+            gref = jax.tree.map(lambda a, x: a + x, gref, g)
+        gref = jax.tree.map(lambda a: a / nreal, gref)
+        assert abs(float(loss) - tot / nreal) < 1e-5
+        assert _tree_max_diff(grads, gref) < 1e-5
+
+
+class TestXLSTMPacked:
+    @pytest.mark.parametrize("engine", ENGINES)
+    def test_matches_per_row(self, engine):
+        cfg = xlstm.XLSTMConfig(num_layers=2, d_model=16, n_heads=2,
+                                vocab=40, slstm_every=2, chunk=4,
+                                engine=engine, remat="none", loss_chunks=2)
+        params = strip(xlstm.init_params(KEY, cfg))
+        rng = np.random.default_rng(6)
+        B, S = 3, 8
+        toks = jnp.asarray(rng.integers(0, 40, (B, S)))
+        labs = jnp.asarray(rng.integers(0, 40, (B, S)))
+        lens = jnp.array([8, 3, 6], jnp.int32)
+        batch = {"tokens": toks, "labels": labs, "lengths": lens}
+        loss, grads = jax.value_and_grad(xlstm.loss_fn)(params, batch, cfg)
+
+        def row(p, b):
+            L = int(lens[b])
+            bb = {"tokens": toks[b:b + 1, :L], "labels": labs[b:b + 1, :L]}
+            return xlstm.loss_fn(p, bb, cfg) * L
+
+        ref, gref = _per_row_reference(row, params, lens)
+        assert abs(float(loss) - ref) < 1e-5
+        assert _tree_max_diff(grads, gref) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# property: random ragged length vectors
+# ---------------------------------------------------------------------------
+
+
+def _check_lengths_property(lens_list):
+    cfg = lstm_lm.LSTMLMConfig(vocab=30, embed=8, hidden=8, num_layers=1,
+                               engine="scheduled",
+                               plan=lstm_lm.DropoutPlan())
+    params = lstm_lm.init_params(KEY, cfg)
+    B, S = len(lens_list), max(lens_list)
+    rng = np.random.default_rng(hash(tuple(lens_list)) % (2 ** 31))
+    toks = jnp.asarray(rng.integers(0, 30, (B, S)))
+    labs = jnp.asarray(rng.integers(0, 30, (B, S)))
+    lens = jnp.asarray(lens_list, jnp.int32)
+    batch = {"tokens": toks, "labels": labs, "lengths": lens}
+    loss = lstm_lm.loss_fn(params, batch, cfg)
+    tot, ntok = 0.0, 0
+    for b, L in enumerate(lens_list):
+        bb = {"tokens": toks[b:b + 1, :L], "labels": labs[b:b + 1, :L]}
+        tot += float(lstm_lm.loss_fn(params, bb, cfg)) * L
+        ntok += L
+    assert abs(float(loss) - tot / ntok) < 1e-5
+
+
+if hypothesis is not None:
+    @given(hst.lists(hst.integers(min_value=1, max_value=10), min_size=2,
+                     max_size=5))
+    @settings(max_examples=10, deadline=None)
+    def test_ragged_lengths_property(lens_list):
+        _check_lengths_property(lens_list)
+else:                                                  # pragma: no cover
+    @pytest.mark.parametrize("lens_list", [[5, 1], [3, 7, 2], [1, 1, 9, 4]])
+    def test_ragged_lengths_property(lens_list):
+        _check_lengths_property(lens_list)
+
+
+# ---------------------------------------------------------------------------
+# packing pipeline
+# ---------------------------------------------------------------------------
+
+
+class TestPacking:
+    def _docs(self, n=120, max_len=32, seed=9):
+        return synthetic.lm_ragged_docs(n, 50, max_len, seed=seed)
+
+    def test_bucket_boundaries(self):
+        assert pipeline.bucket_boundaries(64, 4) == (8, 16, 32, 64)
+        assert pipeline.bucket_boundaries(10, 1) == (10,)
+
+    def test_every_doc_exactly_once_per_epoch(self):
+        docs = self._docs()
+        pb = pipeline.PackedBatcher(docs, token_budget=256, seed=1)
+        seen = []
+        for cap, rows in pb._plan(0):
+            assert len(rows) == max(1, 256 // cap)
+            seen.extend(int(i) for i in rows if i >= 0)
+        assert sorted(seen) == list(range(120))
+
+    def test_batch_shapes_and_dummies(self):
+        docs = self._docs()
+        pb = pipeline.PackedBatcher(docs, token_budget=256, seed=1)
+        for s in range(pb.steps_per_epoch):
+            b = pb.batch_fn(s)
+            B, cap = b["tokens"].shape
+            assert cap in pb.boundaries
+            assert B == max(1, 256 // cap)
+            assert (b["lengths"] <= cap).all()
+            dummy = b["lengths"] == 0
+            assert (b["tokens"][dummy] == 0).all()
+            assert (b["labels"][dummy] == 0).all()
+
+    def test_restart_at_step_is_bit_identical(self):
+        docs = self._docs()
+        pb1 = pipeline.PackedBatcher(docs, token_budget=256, seed=2)
+        pb2 = pipeline.PackedBatcher(docs, token_budget=256, seed=2)
+        for s in (0, 3, pb1.steps_per_epoch + 1):      # incl. next epoch
+            b1, b2 = pb1.batch_fn(s), pb2.batch_fn(s)
+            assert sorted(b1) == sorted(b2)
+            for k in b1:
+                np.testing.assert_array_equal(b1[k], b2[k])
+
+    def test_epochs_reshuffle(self):
+        docs = self._docs()
+        pb = pipeline.PackedBatcher(docs, token_budget=256, seed=3)
+        p0 = [tuple(rows) for _, rows in pipeline.pack_plan(
+            docs["lengths"], 256, pb.boundaries, seed=3, epoch=0)]
+        p1 = [tuple(rows) for _, rows in pipeline.pack_plan(
+            docs["lengths"], 256, pb.boundaries, seed=3, epoch=1)]
+        assert p0 != p1
+
+    def test_host_sharding_partitions_the_epoch(self):
+        docs = self._docs()
+        pbs = [pipeline.PackedBatcher(docs, token_budget=256, seed=4,
+                                      host_index=h, host_count=2)
+               for h in range(2)]
+        assert pbs[0].steps_per_epoch == pbs[1].steps_per_epoch
+        seen = []
+        for pb in pbs:
+            for s in range(pb.steps_per_epoch):
+                epoch, idx = divmod(s, pb.steps_per_epoch)
+                _, rows = pb._plan(epoch)[idx * 2 + pb.host_index]
+                seen.extend(int(i) for i in rows if i >= 0)
+        assert sorted(seen) == list(range(120))
+
+    def test_rejects_overlong_sequences(self):
+        with pytest.raises(ValueError):
+            pipeline.pack_plan(np.array([100]), 256, (8, 16, 32, 64))
+
+    def test_packed_batch_trains(self):
+        """A PackedBatcher batch feeds lstm_lm.loss_fn as-is (the length
+        column is the models' ragged opt-in) and beats rectangular slot
+        utilization on a skewed corpus."""
+        docs = self._docs(n=64, max_len=32)
+        pb = pipeline.PackedBatcher(docs, token_budget=128, seed=5)
+        cfg = lstm_lm.LSTMLMConfig(vocab=50, embed=8, hidden=8,
+                                   num_layers=1, engine="scheduled",
+                                   plan=lstm_lm.DropoutPlan())
+        params = lstm_lm.init_params(KEY, cfg)
+        b = jax.tree.map(jnp.asarray, pb.batch_fn(0))
+        loss = lstm_lm.loss_fn(params, b, cfg)
+        assert np.isfinite(float(loss))
+        real = int(docs["lengths"].sum())
+        packed_slots = sum(
+            pb.batch_fn(s)["tokens"].size for s in range(pb.steps_per_epoch))
+        rect_slots = -(-64 // (128 // 32)) * (128 // 32) * 32
+        assert real / packed_slots > real / rect_slots
+
+    def test_adapters_ragged_specs(self):
+        from repro.configs.shapes import ShapeSpec
+
+        def spec(kind):
+            return ArchSpec(name=kind, family="rnn", kind=kind,
+                            full=None, smoke=None)
+
+        shape = ShapeSpec("s", seq_len=16, global_batch=8, kind="train")
+        d = adapters.train_batch_specs(spec("lstm_lm"), None, shape,
+                                       ragged=True)
+        assert d["lengths"].shape == (8,)
+        d = adapters.train_batch_specs(spec("nmt"), None, shape,
+                                       ragged=True)
+        assert "src_lengths" in d and "tgt_lengths" in d
+        axes = adapters.batch_logical_axes(spec("lstm_lm"), None, shape)
+        assert axes["tokens"] == ("batch", "seq")
+        with pytest.raises(ValueError):
+            adapters.train_batch_specs(spec("ssm"), None, shape,
+                                       ragged=True)

@@ -1,0 +1,92 @@
+"""Stdlib-only markdown link checker for the docs site.
+
+Checks every ``[text](target)`` in the given markdown files (or the
+repo's default doc set) and fails on:
+
+  * relative file targets that do not exist on disk (resolved against the
+    containing file's directory);
+  * fragment targets (``file.md#section`` or ``#section``) whose heading
+    slug is absent from the target file (GitHub-style slugs: lowercase,
+    punctuation stripped, spaces -> hyphens);
+  * bare intra-repo absolute paths (``/src/...``) — always wrong on
+    GitHub, use relative links.
+
+External ``http(s)://`` and ``mailto:`` targets are skipped — CI must not
+depend on the network. Inline code spans and fenced code blocks are
+stripped before matching so doctest output and shell snippets cannot
+produce false links.
+
+Run:  python tools/check_links.py [files...]
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+DEFAULT = ["README.md", "ROADMAP.md", "PAPER.md", "CHANGES.md",
+           *sorted(str(p.relative_to(REPO)) for p in REPO.glob("docs/*.md"))]
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"^(```|~~~).*?^\1\s*$", re.M | re.S)
+CODE_RE = re.compile(r"`[^`]*`")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.M)
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug for a markdown heading."""
+    text = CODE_RE.sub(lambda m: m.group(0)[1:-1], heading)
+    text = re.sub(r"[^\w\- ]", "", text.lower())
+    return text.strip().replace(" ", "-")
+
+
+def anchors(md_path: Path) -> set:
+    return {slugify(h) for h in HEADING_RE.findall(
+        FENCE_RE.sub("", md_path.read_text(encoding="utf-8")))}
+
+
+def check_file(md_path: Path) -> list:
+    errors = []
+    text = FENCE_RE.sub("", md_path.read_text(encoding="utf-8"))
+    text = CODE_RE.sub("", text)
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, frag = target.partition("#")
+        if path_part.startswith("/"):
+            errors.append(f"{md_path}: absolute path link '{target}'")
+            continue
+        dest = md_path if not path_part else (
+            md_path.parent / path_part).resolve()
+        if not dest.exists():
+            errors.append(f"{md_path}: broken link '{target}' "
+                          f"(no such file: {dest})")
+            continue
+        if frag and dest.suffix == ".md" and slugify(frag) not in anchors(dest):
+            errors.append(f"{md_path}: broken anchor '{target}' "
+                          f"(no heading slug '#{slugify(frag)}' in {dest})")
+    return errors
+
+
+def main(argv: list) -> int:
+    files = [Path(a) for a in argv] if argv else [REPO / f for f in DEFAULT]
+    errors, n_links = [], 0
+    for f in files:
+        if not f.exists():
+            errors.append(f"{f}: file not found")
+            continue
+        text = CODE_RE.sub("", FENCE_RE.sub(
+            "", f.read_text(encoding="utf-8")))
+        n_links += len([t for t in LINK_RE.findall(text)
+                        if not t.startswith(("http://", "https://"))])
+        errors.extend(check_file(f))
+    for e in errors:
+        print(f"FAIL  {e}")
+    print(f"check_links: {len(files)} files, {n_links} local links, "
+          f"{len(errors)} errors")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
