@@ -394,6 +394,179 @@ def check_ragged(row: dict, baseline_path: str,
 
 
 # ---------------------------------------------------------------------------
+# devices axis: sharded vs single-device step times (PR 9)
+# ---------------------------------------------------------------------------
+
+# device counts the matrix sweeps (intersected with what the host offers;
+# CI forces 8 CPU devices via --xla_force_host_platform_device_count)
+DEVICE_COUNTS = (1, 2, 4, 8)
+# engines the devices axis prices (stepwise is the reference engine, not a
+# production path — pricing it per device count would double the runtime)
+DEVICE_ENGINES = ("scheduled", "fused")
+
+
+class _ShardedRunner:
+    """A _Runner twin whose step runs under shard_map on a d-device mesh
+    (launch/steps.py::make_sharded_train_step — batch sharded over "data",
+    params replicated, grads psum'd exactly)."""
+
+    def __init__(self, kind, cfg, batch, seq, n_batches, n_devices):
+        from repro.configs import adapters
+        from repro.distributed.sharding import strip
+        from repro.launch import mesh as mesh_mod
+        from repro.launch import steps as steps_mod
+
+        self.key = jax.random.PRNGKey(0)
+        self.params = strip(adapters.init_params(kind, self.key, cfg))
+        self.opt = optim.chain(optim.clip_by_global_norm(1.0),
+                               optim.adamw(1e-3))
+        self.opt_state = self.opt.init(self.params)
+        bf = _batch_fn(kind, cfg, batch, seq)
+        self.batches = [jax.tree.map(jnp.asarray, bf(i))
+                        for i in range(n_batches)]
+        mesh = mesh_mod.make_data_mesh(n_devices)
+        self._step = jax.jit(steps_mod.make_sharded_train_step(
+            kind, cfg, self.opt, mesh))
+
+    def step(self, i):
+        b = self.batches[i % len(self.batches)]
+        self.params, self.opt_state, loss = self._step(
+            self.params, self.opt_state, b, jnp.int32(i),
+            jax.random.fold_in(self.key, i))
+        jax.block_until_ready(loss)
+
+    def hlo_flops(self, i=0):
+        """Per-device FLOPs of the lowered step (launch/hlo_cost.py on the
+        HLO text — the shard_map body carries LOCAL shapes, so this is the
+        roofline model's per-device count, machine-independent). None when
+        the analyzer can't parse the module (best-effort)."""
+        try:
+            from repro.launch.hlo_cost import analyze_hlo
+            b = self.batches[i % len(self.batches)]
+            text = self._step.lower(
+                self.params, self.opt_state, b, jnp.int32(i),
+                jax.random.fold_in(self.key, i)).compile().as_text()
+            return float(analyze_hlo(text).flops)
+        except Exception:
+            return None
+
+
+def _devices_cells(quick: bool):
+    """The devices axis prices the two LM families (the acceptance kinds
+    with the heaviest recurrences); batch sizes divide every swept d."""
+    cells = _cells(quick)
+    return {k: cells[k] for k in ("lstm_lm", "xlstm")}
+
+
+def time_devices(kind, cfg_fn, case, batch, seq, steps, n_devices,
+                 warmup=2):
+    """Paired sharded-vs-single step times for one (cell, engine, d).
+
+    Same drift-cancelling estimator as ``time_engines``: both runners are
+    built up front and stepped in interleaved rounds, the reported ratio is
+    the median of per-round single/sharded ratios (> 1 means the sharded
+    step is faster). On a forced-device CPU host all "devices" share the
+    same cores, so the ratio prices shard_map OVERHEAD (it hovers near or
+    below 1); on real multi-chip meshes it prices scaling. The gate checks
+    drift of this paired ratio, not absolute scaling."""
+    rows = {}
+    for eng in DEVICE_ENGINES:
+        cfg = cfg_fn(case, eng)
+        single = _Runner(kind, cfg, batch, seq, warmup + steps)
+        sharded = _ShardedRunner(kind, cfg, batch, seq, warmup + steps,
+                                 n_devices)
+        for i in range(warmup):
+            single.step(i)
+            sharded.step(i)
+        t_single, t_sharded = [], []
+        for i in range(warmup, warmup + steps):
+            t0 = time.time()
+            single.step(i)
+            t1 = time.time()
+            sharded.step(i)
+            t2 = time.time()
+            t_single.append(t1 - t0)
+            t_sharded.append(t2 - t1)
+        rows[eng] = {
+            "single_ms": float(np.min(t_single) * 1e3),
+            "sharded_ms": float(np.min(t_sharded) * 1e3),
+            "sharded_vs_single": float(np.median(
+                [a / b for a, b in zip(t_single, t_sharded)])),
+            "hlo_flops_per_device": sharded.hlo_flops(),
+        }
+        del single, sharded
+        jax.clear_caches()
+        gc.collect()
+    return rows
+
+
+def run_devices(quick: bool = False, verbose: bool = True):
+    """The devices-axis matrix: {cell: {engine: {str(d): row}}} over the
+    host's available power-of-two device counts, plus the roofline check —
+    per-device HLO FLOPs at d devices should track flops(1)/d (the batch
+    work splits; Phase-A NR matmuls and the scans are batch-parallel)."""
+    avail = len(jax.devices())
+    counts = [d for d in DEVICE_COUNTS if d <= avail]
+    steps = 4 if quick else 8
+    out = {}
+    for name, (kind, cfg_fn, B, S, _) in _devices_cells(quick).items():
+        B = max(B, max(counts))
+        out[name] = {eng: {} for eng in DEVICE_ENGINES}
+        for d in counts:
+            rows = time_devices(kind, cfg_fn, "case3", B, S, steps, d)
+            for eng, row in rows.items():
+                out[name][eng][str(d)] = row
+                if verbose:
+                    fl = row["hlo_flops_per_device"]
+                    f1 = out[name][eng].get("1", {}).get(
+                        "hlo_flops_per_device")
+                    frac = (f" flops/dev {fl / f1:.2f}x of 1-dev "
+                            f"(roofline {1 / d:.2f})"
+                            if fl and f1 else "")
+                    print(f"{name:20s} {eng:9s} d={d}: single "
+                          f"{row['single_ms']:8.1f} ms  sharded "
+                          f"{row['sharded_ms']:8.1f} ms  single/sharded "
+                          f"{row['sharded_vs_single']:.2f}x{frac}")
+    return out
+
+
+def check_devices(dev: dict, baseline_path: str,
+                  tolerance_cell: float = 1.5) -> list:
+    """Gate the devices axis: drift of the paired single/sharded ratio per
+    (cell, engine, d) vs the snapshot's ``devices_quick`` section. Absent
+    sections (pre-PR9 snapshots) or cells skip, never fail. Forced CPU
+    devices share cores, so only drift — a shard_map path regression —
+    is gated, not absolute scaling."""
+    with open(baseline_path) as f:
+        base = json.load(f)
+    base_dev = base.get("devices_quick") or {}
+    if not base_dev:
+        print("  (baseline has no devices_quick section — devices gate "
+              "records only)")
+        return []
+    failures = []
+    for name, by_eng in dev.items():
+        for eng, by_d in by_eng.items():
+            for d, row in by_d.items():
+                b = base_dev.get(name, {}).get(eng, {}).get(d)
+                if not b or "sharded_vs_single" not in b:
+                    continue
+                drift = b["sharded_vs_single"] / row["sharded_vs_single"]
+                status = "FAIL" if drift > tolerance_cell else "ok"
+                print(f"  gate {name:20s} {eng} d={d} [sharded]: baseline "
+                      f"{b['sharded_vs_single']:.2f}x now "
+                      f"{row['sharded_vs_single']:.2f}x  drift "
+                      f"{drift:.2f} [{status}]")
+                if drift > tolerance_cell:
+                    failures.append(
+                        f"{name}/{eng}/d={d}: single/sharded step ratio "
+                        f"fell {b['sharded_vs_single']:.2f}x -> "
+                        f"{row['sharded_vs_single']:.2f}x (drift "
+                        f"{drift:.2f} > tolerance {tolerance_cell})")
+    return failures
+
+
+# ---------------------------------------------------------------------------
 # matrix + snapshot
 # ---------------------------------------------------------------------------
 
@@ -449,6 +622,9 @@ def snapshot(tag: str, out_path: str, quick: bool = False) -> dict:
         "fused_arch_ratios": arch_ratios(cells, "fused_vs_scheduled"),
         # token-packed vs rectangular effective tokens/sec (PR 8)
         "ragged": run_ragged(quick=quick),
+        # sharded-vs-single step times per device count (PR 9); on a
+        # 1-device host this is just the d=1 overhead row
+        "devices": run_devices(quick=quick),
     }
     if not quick:
         # the CI gate runs --quick, whose smaller geometries have
@@ -458,8 +634,10 @@ def snapshot(tag: str, out_path: str, quick: bool = False) -> dict:
         snap["quick_cells"] = run_matrix(quick=True)
         snap["quick_arch_ratios"] = arch_ratios(snap["quick_cells"])
         snap["ragged_quick"] = run_ragged(quick=True)
+        snap["devices_quick"] = run_devices(quick=True)
     else:
         snap["ragged_quick"] = snap["ragged"]
+        snap["devices_quick"] = snap["devices"]
     with open(out_path, "w") as f:
         json.dump(snap, f, indent=1, default=float)
     print(f"\nsnapshot {tag} -> {out_path}")
@@ -575,13 +753,22 @@ def check_regression(cells: dict, baseline_path: str,
 
 
 def main(quick: bool = False, check: bool = True, out: str = "",
-         tolerance_cell: float = 1.5, tolerance_arch: float = 1.25) -> dict:
-    cells = run_matrix(quick=quick)
-    ragged = run_ragged(quick=quick)
+         tolerance_cell: float = 1.5, tolerance_arch: float = 1.25,
+         devices_only: bool = False) -> dict:
+    if devices_only:
+        cells, ragged = {}, None
+    else:
+        cells = run_matrix(quick=quick)
+        ragged = run_ragged(quick=quick)
+    # the devices axis needs >1 host device to say anything beyond the d=1
+    # overhead row; always run it when asked explicitly (--devices-only)
+    dev = (run_devices(quick=quick)
+           if devices_only or len(jax.devices()) > 1 else {})
     result = {"backend": jax.default_backend(), "quick": bool(quick),
+              "n_devices": len(jax.devices()),
               "cells": cells, "arch_ratios": arch_ratios(cells),
               "fused_arch_ratios": arch_ratios(cells, "fused_vs_scheduled"),
-              "ragged": ragged}
+              "ragged": ragged, "devices": dev}
     if out:
         os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
         with open(out, "w") as f:
@@ -596,9 +783,13 @@ def main(quick: bool = False, check: bool = True, out: str = "",
             print(f"\nperf gate vs {os.path.basename(baseline)} "
                   f"(tolerance {tolerance_cell}x per cell / "
                   f"{tolerance_arch}x per-arch geomean):")
-            failures = check_regression(cells, baseline, tolerance_cell,
-                                        tolerance_arch, quick=True)
-            failures += check_ragged(ragged, baseline, tolerance_cell)
+            failures = []
+            if not devices_only:
+                failures += check_regression(cells, baseline, tolerance_cell,
+                                             tolerance_arch, quick=True)
+                failures += check_ragged(ragged, baseline, tolerance_cell)
+            if dev:
+                failures += check_devices(dev, baseline, tolerance_cell)
             if failures:
                 for msg in failures:
                     print(f"PERF REGRESSION: {msg}", file=sys.stderr)
@@ -619,7 +810,11 @@ if __name__ == "__main__":
                          "arch x case cell")
     ap.add_argument("--tolerance-arch", type=float, default=1.25,
                     help="allowed drift of the per-arch geomean over cases")
+    ap.add_argument("--devices-only", action="store_true",
+                    help="run (and gate) only the devices-axis matrix — the "
+                         "CI distributed job's sharded-vs-single check")
     args = ap.parse_args()
     main(quick=args.quick, check=not args.no_check, out=args.out,
          tolerance_cell=args.tolerance_cell,
-         tolerance_arch=args.tolerance_arch)
+         tolerance_arch=args.tolerance_arch,
+         devices_only=args.devices_only)

@@ -109,6 +109,58 @@ def apply_engine(spec: ArchSpec, cfg, text: str):
 
 
 # ---------------------------------------------------------------------------
+# distributed loss weights (the shard_map data-parallel path)
+# ---------------------------------------------------------------------------
+
+# Kinds wired through launch/steps.py::make_sharded_train_step. Matches
+# ENGINE_KINDS: the recurrent families whose loss_fn accepts the ``shard``
+# kwarg (shard-safe dense masks — see core/dropout_plan.py).
+SHARD_KINDS = ENGINE_KINDS
+
+
+def loss_weight(kind: str):
+    """Weight of ``loss_fn(kind)``'s mean for one batch, as an f32 scalar.
+
+    Every kind's loss is a weighted mean ``sum(elems * m) / max(sum(m), 1)``
+    (clamped so all-dummy batches yield 0.0, see core/metrics.masked_mean).
+    The returned fn computes ``sum(m)`` — exactly the denominator the
+    unsharded loss divides by — so the data-parallel combination
+
+        global_loss = psum(local_loss * local_w) / max(psum(local_w), 1)
+
+    reproduces the single-device loss bit-for-bit in exact arithmetic,
+    ragged batches and all-pad shards included (distributed/data_parallel.py).
+    """
+    if kind in ("lstm_lm", "xlstm"):
+        def w(batch, cfg):
+            B, S = batch["tokens"].shape
+            if "lengths" in batch:
+                from repro.core import metrics
+                return metrics.length_mask(batch["lengths"], S).sum()
+            return jnp.float32(B * S)
+        return w
+    if kind == "nmt":
+        def w(batch, cfg):
+            B, S = batch["tgt_in"].shape
+            mask = batch.get("tgt_mask")
+            if mask is None and "tgt_lengths" in batch:
+                from repro.core import metrics
+                mask = metrics.length_mask(batch["tgt_lengths"], S)
+            if mask is not None:
+                return mask.astype(jnp.float32).sum()
+            return jnp.float32(B * S)
+        return w
+    if kind == "tagger":
+        def w(batch, cfg):
+            if "lengths" in batch:
+                return (batch["lengths"] > 0).astype(jnp.float32).sum()
+            return jnp.float32(batch["tags"].shape[0])
+        return w
+    raise ValueError(f"{kind} has no sharded-loss weight; "
+                     f"supported: {SHARD_KINDS}")
+
+
+# ---------------------------------------------------------------------------
 # training / prefill batch specs
 # ---------------------------------------------------------------------------
 

@@ -42,6 +42,27 @@ Block sizes are caps, not hard requirements: when a site's feature dimension
 is not divisible by ``spec.block_size`` the ctx uses the largest divisor of
 the dimension that does not exceed it, so one ``--dropout case3:0.5:bs128``
 override runs unchanged on a 64-wide smoke config and a 8192-wide full one.
+
+Batch sharding (the ``shard_map`` data-parallel path)
+-----------------------------------------------------
+
+When the training step runs under ``jax.shard_map`` with the batch rows
+split across devices (distributed/data_parallel.py), the model code inside
+each shard sees only its LOCAL rows — but the masks must match what the
+single-device run would draw for those same rows. ``plan.bind(key, step,
+shard=BatchShard(index, count))`` threads the shard's position through the
+ctx:
+
+  * STRUCTURED specs are batch-independent (every row drops the same
+    units), so keep-block id tables come out identical on every shard —
+    replicated for free, nothing to do;
+  * RANDOM specs are per-row: the ctx samples the mask at the GLOBAL batch
+    size (``count`` x the local rows, same key and shape as the
+    single-device run — counter-based PRNG makes that bit-identical) and
+    dynamic-slices this shard's row block out. Dense per-step bitmasks
+    therefore shard with the batch rows they mask, row-for-row equal to
+    the unsharded reference (tests/test_distributed.py asserts it for all
+    three engines).
 """
 from __future__ import annotations
 
@@ -58,6 +79,26 @@ from repro.core.masks import TimePattern
 from repro.core.sdrop import DropoutSpec, DropoutState
 
 _INACTIVE = DropoutSpec(rate=0.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchShard:
+    """Position of one device's batch rows within the global batch.
+
+    ``index`` is this shard's position along the (flattened) batch mesh
+    axes — a traced int32 from ``lax.axis_index`` inside a ``shard_map``
+    body, or a plain int. ``count`` is the static number of batch shards.
+    Local row ``b`` of this shard is global row ``index * local_batch + b``:
+    batches are sharded contiguously over their leading axis (the
+    PartitionSpec contract of distributed/data_parallel.py).
+    """
+
+    index: object
+    count: int
+
+    def __post_init__(self):
+        if int(self.count) < 1:
+            raise ValueError(f"shard count must be >= 1, got {self.count}")
 
 
 def site_stream(site: str) -> int:
@@ -191,18 +232,24 @@ class DropoutPlan:
     # -- binding ------------------------------------------------------------
 
     def bind(self, key: Optional[jax.Array], step=None, *,
-             deterministic: bool = False) -> "DropoutCtx":
+             deterministic: bool = False,
+             shard: Optional["BatchShard"] = None) -> "DropoutCtx":
         """Bind the plan to a PRNG key for one training step.
 
         ``key=None`` or ``deterministic=True`` yields an eval-mode ctx whose
         states/applies are all no-ops (the explicit replacement for the old
         implicit ``drop_key is None`` convention).
+
+        ``shard`` marks the ctx as one batch shard of a data-parallel step
+        (see the module docstring): RANDOM-pattern dense masks are sampled
+        at the global batch size and row-sliced to this shard, so sharded
+        and single-device runs draw identical per-row masks.
         """
         if key is None or deterministic or not self.any_active:
             return DropoutCtx(plan=self, key=None)
         if step is not None:
             key = jax.random.fold_in(key, step)
-        return DropoutCtx(plan=self, key=key)
+        return DropoutCtx(plan=self, key=key, shard=shard)
 
 
 @dataclasses.dataclass
@@ -287,14 +334,32 @@ class MaskSchedule:
 
 @dataclasses.dataclass(frozen=True)
 class DropoutCtx:
-    """A plan bound to (key, step): the only source of dropout randomness."""
+    """A plan bound to (key, step): the only source of dropout randomness.
+
+    ``shard`` (optional) marks the ctx as one batch shard of a
+    data-parallel ``shard_map`` step: structured masks are batch-
+    independent and replicate untouched; dense masks are sampled globally
+    and sliced to this shard's rows (``_shard_rows``).
+    """
 
     plan: DropoutPlan
     key: Optional[jax.Array] = None
+    shard: Optional[BatchShard] = None
 
     @property
     def deterministic(self) -> bool:
         return self.key is None
+
+    @property
+    def _sharded(self) -> bool:
+        return self.shard is not None and self.shard.count > 1
+
+    def _shard_rows(self, mask: jax.Array, n_local: int,
+                    axis: int) -> jax.Array:
+        """This shard's ``n_local`` contiguous rows of a globally sampled
+        dense mask (rows = flattened leading batch dims along ``axis``)."""
+        return jax.lax.dynamic_slice_in_dim(
+            mask, self.shard.index * n_local, n_local, axis)
 
     def spec(self, site: str) -> DropoutSpec:
         return self.plan.spec(site)
@@ -322,7 +387,12 @@ class DropoutCtx:
         n = 1
         for s in shape:
             n *= int(s)
-        st = sdrop.make_state(self.site_key(site, t=t), spec, n, dim)
+        # dense masks under batch sharding: sample the GLOBAL mask (same
+        # key + shape as the unsharded run -> bit-identical), keep our rows
+        n_sample = n * self.shard.count if self._sharded else n
+        st = sdrop.make_state(self.site_key(site, t=t), spec, n_sample, dim)
+        if st.dense_mask is not None and self._sharded:
+            st.dense_mask = self._shard_rows(st.dense_mask, n, 0)
         if st.dense_mask is not None and len(shape) > 1:
             st.dense_mask = st.dense_mask.reshape(*shape, dim)
         return st
@@ -359,7 +429,14 @@ class DropoutCtx:
         n = 1
         for s in shape:
             n *= int(s)
-        dm = jax.vmap(lambda k: _masks.random_mask(k, n, dim, spec.rate))(keys)
+        # dense schedules under batch sharding: sample the GLOBAL (T, n_total,
+        # dim) mask — bit-identical to the single-device run — then keep the
+        # contiguous row block owned by this shard (dropout_plan module
+        # docstring, "Batch sharding").
+        n_sample = n * self.shard.count if self._sharded else n
+        dm = jax.vmap(lambda k: _masks.random_mask(k, n_sample, dim, spec.rate))(keys)
+        if self._sharded:
+            dm = self._shard_rows(dm, n, 1)
         dm = dm.reshape(dm.shape[0], *shape, dim)
         return MaskSchedule(spec=spec, steps=steps, dense_mask=dm,
                             scale=1.0 / (1.0 - spec.rate))

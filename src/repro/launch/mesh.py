@@ -24,3 +24,19 @@ def make_host_mesh():
     """Whatever this host actually has (CPU tests: 1 device)."""
     n = len(jax.devices())
     return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def make_data_mesh(n: int):
+    """(n, 1) ("data", "model") mesh over the first ``n`` host devices.
+
+    The data-parallel training mesh (launch/train.py --mesh, the
+    distributed tests' device sweep): batch shards over "data", params
+    replicate over the size-1 "model" axis. Raises if the host has fewer
+    than ``n`` devices."""
+    devs = jax.devices()
+    if n < 1 or n > len(devs):
+        raise ValueError(f"mesh size {n} out of range for "
+                         f"{len(devs)} host devices")
+    import numpy as np
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(devs[:n]).reshape(n, 1), ("data", "model"))

@@ -115,6 +115,54 @@ def make_train_step(spec: ArchSpec, cfg, opt: optim.optimizers.Optimizer,
     return train_step
 
 
+def make_sharded_loss_and_grad(spec_or_kind, cfg, mesh: Mesh, *,
+                               rules: Optional[shd.ShardingRules] = None,
+                               use_dropout: bool = True):
+    """(params, batch, step, key) -> (loss, grads) under batch-sharded
+    shard_map — loss and grads match the single-device ``loss_fn`` allclose
+    (exactly, in exact arithmetic; see distributed/data_parallel.py).
+
+    ``spec_or_kind`` is an ArchSpec or a kind string; only the recurrent
+    families (``adapters.SHARD_KINDS``) have the shard-safe dropout path.
+    """
+    from repro.distributed import data_parallel as dp
+    kind = getattr(spec_or_kind, "kind", spec_or_kind)
+    if kind not in adapters.SHARD_KINDS:
+        raise ValueError(f"{kind!r} has no sharded train path; "
+                         f"supported: {adapters.SHARD_KINDS}")
+    lfn = adapters.loss_fn(kind)
+    wfn = adapters.loss_weight(kind)
+
+    def local_loss(params, batch, step, key, shard):
+        return lfn(params, batch, cfg, rules=rules,
+                   drop_key=key if use_dropout else None,
+                   step=step, shard=shard)
+
+    return dp.sharded_value_and_grad(
+        local_loss, lambda b: wfn(b, cfg), mesh)
+
+
+def make_sharded_train_step(spec_or_kind, cfg,
+                            opt: optim.optimizers.Optimizer, mesh: Mesh, *,
+                            rules: Optional[shd.ShardingRules] = None,
+                            use_dropout: bool = True):
+    """Data-parallel twin of ``make_train_step``: same signature
+    ``(params, opt_state, batch, step, key) -> (params, opt_state, loss)``,
+    with loss/grads computed under shard_map on ``mesh`` (params and
+    optimizer state replicated, batch sharded, grads psum'd exactly)."""
+    grad_fn = make_sharded_loss_and_grad(spec_or_kind, cfg, mesh,
+                                         rules=rules,
+                                         use_dropout=use_dropout)
+
+    def train_step(params, opt_state, batch, step, key):
+        loss, grads = grad_fn(params, batch, step, key)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = optim.apply_updates(params, updates)
+        return params, opt_state, loss
+
+    return train_step
+
+
 def make_prefill_step(spec: ArchSpec, cfg, rules):
     f = adapters.prefill_fn(spec)
 

@@ -95,6 +95,13 @@ def main(argv=None):
                          "per layer) or 'stepwise' (in-scan reference); "
                          "applies to the recurrent archs, no-op elsewhere")
     ap.add_argument("--straggler-factor", type=float, default=3.0)
+    ap.add_argument("--mesh", default="",
+                    help="data-parallel sharded training: 'auto' (all host "
+                         "devices) or an int device count. Runs the step "
+                         "under shard_map — batch sharded over 'data', "
+                         "params/U replicated, grads psum'd exactly "
+                         "(docs/distributed.md). Recurrent archs only; "
+                         "--batch must divide by the mesh size")
     args = ap.parse_args(argv)
 
     spec = configs.get_arch(args.arch)
@@ -107,14 +114,25 @@ def main(argv=None):
         cfg = adapters.apply_engine(spec, cfg, args.engine)
         if spec.kind in adapters.ENGINE_KINDS:
             print(f"[engine] recurrent engine -> {cfg.engine!r}")
-    mesh = mesh_mod.make_host_mesh()
+    if args.mesh:
+        n_dev = (len(jax.devices()) if args.mesh == "auto"
+                 else int(args.mesh))
+        mesh = mesh_mod.make_data_mesh(n_dev)
+        print(f"[mesh] data-parallel over {n_dev} device(s)")
+    else:
+        mesh = mesh_mod.make_host_mesh()
     rules = shd.rules_for_mesh(mesh)
 
     init_fn, p_shapes, p_shard, _ = steps_mod.param_setup(
         spec, cfg, mesh, rules, seed=args.seed)
     opt = optim.chain(optim.clip_by_global_norm(1.0), optim.adamw(args.lr))
-    train_step = steps_mod.make_train_step(
-        spec, cfg, opt, rules, use_dropout=not args.no_dropout)
+    if args.mesh:
+        train_step = steps_mod.make_sharded_train_step(
+            spec, cfg, opt, mesh, rules=rules,
+            use_dropout=not args.no_dropout)
+    else:
+        train_step = steps_mod.make_train_step(
+            spec, cfg, opt, rules, use_dropout=not args.no_dropout)
     jitted = jax.jit(train_step, donate_argnums=(0, 1))
 
     params = init_fn()

@@ -121,9 +121,14 @@ def forward(params, tokens, cfg: LSTMLMConfig, *, state=None, ctx=None,
 
 
 def loss_fn(params, batch, cfg: LSTMLMConfig, *, state=None, drop_key=None,
-            rules=None, step=0):
-    """Mean NLL per token — per *real* token when batch carries "lengths"."""
-    ctx = cfg.plan.bind(drop_key, step)
+            rules=None, step=0, shard=None):
+    """Mean NLL per token — per *real* token when batch carries "lengths".
+
+    ``shard`` (core.dropout_plan.BatchShard) marks this call as one batch
+    shard of a data-parallel step: dense dropout masks are sampled at the
+    global batch size and row-sliced so sharded grads match single-device.
+    """
+    ctx = cfg.plan.bind(drop_key, step, shard=shard)
     lengths = batch.get("lengths")
     logits, _ = forward(params, batch["tokens"], cfg, state=state, ctx=ctx,
                         lengths=lengths)

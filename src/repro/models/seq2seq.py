@@ -258,7 +258,7 @@ def decode_train(params, tgt_in, enc_out, enc_state, cfg: NMTConfig, *,
 
 
 def loss_fn(params, batch, cfg: NMTConfig, *, drop_key=None, rules=None,
-            step=0):
+            step=0, shard=None):
     """batch: {"src", "tgt_in", "tgt_out", ["src_mask", "tgt_mask",
     "src_lengths", "tgt_lengths"]}.
 
@@ -268,7 +268,7 @@ def loss_fn(params, batch, cfg: NMTConfig, *, drop_key=None, rules=None,
     kernels/cell_scan.py) and also derive the attention/loss masks when
     those aren't supplied explicitly.
     """
-    ctx = cfg.plan.bind(drop_key, step)
+    ctx = cfg.plan.bind(drop_key, step, shard=shard)
     src_lengths = batch.get("src_lengths")
     tgt_lengths = batch.get("tgt_lengths")
     enc, st = encode(params, batch["src"], cfg, ctx=ctx,

@@ -153,8 +153,8 @@ def crf_score(emit, tags, trans, mask):
 
 
 def loss_fn(params, batch, cfg: TaggerConfig, *, drop_key=None, rules=None,
-            step=0):
-    ctx = cfg.plan.bind(drop_key, step)
+            step=0, shard=None):
+    ctx = cfg.plan.bind(drop_key, step, shard=shard)
     emit = emissions(params, batch, cfg, ctx=ctx)
     mask = batch.get("mask")
     if mask is None:

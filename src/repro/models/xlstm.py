@@ -613,9 +613,9 @@ def lm_logits(params, feats):
 
 
 def loss_fn(params, batch, cfg: XLSTMConfig, *, rules=None, drop_key=None,
-            step=0):
+            step=0, shard=None):
     """Mean NLL — per *real* token when the batch carries "lengths"."""
-    ctx = cfg.plan.bind(drop_key, step)
+    ctx = cfg.plan.bind(drop_key, step, shard=shard)
     lengths = batch.get("lengths")
     feats = forward(params, batch["tokens"], cfg, rules=rules, ctx=ctx,
                     lengths=lengths)

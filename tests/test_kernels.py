@@ -598,3 +598,146 @@ class TestLSTMPointwise:
         g, c = mk((8, 256), jnp.float32, 9) * 10, mk((8, 64), jnp.float32, 10)
         h, _ = ops.lstm_pointwise(g, c)
         assert float(jnp.abs(h).max()) <= 1.0 + 1e-6
+
+
+class TestKernelShardSafety:
+    """Per-shard kernel calls on disjoint batch slices == the full batch.
+
+    The shard_map data-parallel path (distributed/data_parallel.py) runs
+    each fused scan on its shard's batch rows with the schedule tables
+    replicated and dense masks row-sliced. That is only correct if the
+    kernels carry NO cross-row state: calling them on each batch block
+    independently must concatenate to the single full-batch call, forward
+    AND backward (d gx blocks concatenate; dU, which every row touches,
+    sums across shards because the loss is additive over rows).
+    """
+
+    def _lstm_args(self, T=5, B=8, H=16):
+        gx = mk((T, B, 4 * H), jnp.float32, 401) * 0.3
+        u = mk((H, 4 * H), jnp.float32, 402) * 0.1
+        h0 = mk((B, H), jnp.float32, 403) * 0.5
+        c0 = mk((B, H), jnp.float32, 404) * 0.5
+        kb = jnp.stack([masks.sample_keep_blocks(
+            jax.random.fold_in(KEY, 405 + t), H, 0.5, 4) for t in range(T)])
+        dm = (jax.random.uniform(jax.random.fold_in(KEY, 406),
+                                 (T, B, H)) > 0.5).astype(jnp.float32)
+        lengths = jnp.array([5, 3, 0, 4, 2, 5, 1, 3], jnp.int32)
+        wy = mk((T, B, H), jnp.float32, 407)
+        return gx, u, h0, c0, kb, dm, lengths, wy
+
+    @pytest.mark.parametrize("impl", ["xla", "pallas"])
+    @pytest.mark.parametrize("mode", ["structured", "dense", "ragged"])
+    def test_lstm_scan_shards_concat(self, impl, mode):
+        T, B, H, n_shards = 5, 8, 16, 4
+        gx, u, h0, c0, kb, dm, lengths, wy = self._lstm_args(T, B, H)
+        kw = dict(block_size=4, scale=2.0, impl=impl)
+        if mode == "structured":
+            kw["keep_blocks"] = kb            # batch-independent: replicate
+        elif mode == "dense":
+            kw["dense_mask"] = dm             # per-row: slice with the rows
+        else:
+            kw["keep_blocks"] = kb
+            kw["lengths"] = lengths
+
+        def run(gx, u, h0, c0, lo, nb):
+            k = dict(kw)
+            if "dense_mask" in k:
+                k["dense_mask"] = jax.lax.dynamic_slice_in_dim(
+                    k["dense_mask"], lo, nb, 1)
+            if "lengths" in k:
+                k["lengths"] = jax.lax.dynamic_slice_in_dim(
+                    k["lengths"], lo, nb, 0)
+            return ops.lstm_scan(gx[:, lo:lo + nb], u, h0[lo:lo + nb],
+                                 c0[lo:lo + nb], **k)
+
+        ys_full, (hf_full, cf_full) = run(gx, u, h0, c0, 0, B)
+        nb = B // n_shards
+        parts = [run(gx, u, h0, c0, i * nb, nb) for i in range(n_shards)]
+        np.testing.assert_allclose(
+            np.concatenate([np.asarray(p[0]) for p in parts], axis=1),
+            np.asarray(ys_full), rtol=1e-6, atol=1e-6,
+            err_msg=f"{impl}/{mode} ys")
+        np.testing.assert_allclose(
+            np.concatenate([np.asarray(p[1][1]) for p in parts], axis=0),
+            np.asarray(cf_full), rtol=1e-6, atol=1e-6,
+            err_msg=f"{impl}/{mode} c_fin")
+
+        def loss(gx, u, h0, c0, lo, nb):
+            ys, (hf, cf) = run(gx, u, h0, c0, lo, nb)
+            w = jax.lax.dynamic_slice_in_dim(wy, lo, nb, 1)
+            return (ys * w).sum() + (hf * cf).sum()
+
+        gf = jax.grad(loss, argnums=(0, 1))(gx, u, h0, c0, 0, B)
+        gs = [jax.grad(loss, argnums=(0, 1))(gx, u, h0, c0, i * nb, nb)
+              for i in range(n_shards)]
+        # d gx: each shard only touches its rows -> the blocks sum to full
+        np.testing.assert_allclose(
+            np.asarray(sum(g[0] for g in gs)), np.asarray(gf[0]),
+            rtol=2e-5, atol=2e-5, err_msg=f"{impl}/{mode} dgx")
+        # dU: every shard contributes; the psum equals the full-batch grad
+        np.testing.assert_allclose(
+            np.asarray(sum(g[1] for g in gs)), np.asarray(gf[1]),
+            rtol=2e-5, atol=2e-5, err_msg=f"{impl}/{mode} dU")
+
+    @pytest.mark.parametrize("impl", ["xla", "pallas"])
+    def test_decoder_scan_shards_concat(self, impl):
+        """decoder_scan (attention + input feeding in-scan): disjoint
+        batch-block calls — enc memory, score_bias, initial states and
+        the sites' dense masks all row-sliced — concatenate to the
+        full-batch call, fwd + bwd."""
+        T, B, S, H, bs, NL, n_shards = 3, 4, 4, 8, 4, 2, 2
+        dec = TestDecoderScan()
+        args = dec._args(T, B, S, H)
+        sites = dec._sites("mixed", T, B, H, bs)
+        wy = mk((T, B, H), jnp.float32, 410)
+
+        def shard_args(a, st, lo, nb):
+            a = dict(a)
+            for k in ("enc_proj", "enc_out", "score_bias", "feed0"):
+                a[k] = a[k][lo:lo + nb]
+            a["gx0"] = a["gx0"][:, lo:lo + nb]
+            a["h0"] = a["h0"][:, lo:lo + nb]
+            a["c0"] = a["c0"][:, lo:lo + nb]
+            st = tuple((kb, None if dm is None else dm[:, lo:lo + nb], b, s)
+                       for kb, dm, b, s in st)
+            return a, st
+
+        def run(a, st, lo, nb):
+            a, st = shard_args(a, st, lo, nb)
+            return ops.decoder_scan(**a, sites=st, impl=impl)
+
+        y_full = run(args, sites, 0, B)
+        nb = B // n_shards
+        parts = [run(args, sites, i * nb, nb) for i in range(n_shards)]
+        np.testing.assert_allclose(
+            np.concatenate([np.asarray(p[0]) for p in parts], axis=1),
+            np.asarray(y_full[0]), rtol=1e-6, atol=1e-6,
+            err_msg=f"{impl} h_tildes")
+        for j, nm in zip(range(3), ("h", "c", "feed")):
+            ax = 0 if nm == "feed" else 1
+            np.testing.assert_allclose(
+                np.concatenate([np.asarray(p[1][j]) for p in parts],
+                               axis=ax),
+                np.asarray(y_full[1][j]), rtol=1e-6, atol=1e-6,
+                err_msg=f"{impl} {nm}_fin")
+
+        diff = ("gx0", "us", "w_feed", "w_comb")
+
+        def loss(d, lo, nb):
+            a = dict(args)
+            a.update(d)
+            a, st = shard_args(a, sites, lo, nb)
+            htil, (hf, cf, ff) = ops.decoder_scan(**a, sites=st, impl=impl)
+            w = jax.lax.dynamic_slice_in_dim(wy, lo, nb, 1)
+            return (htil * w).sum() + (hf * cf).sum() + ff.sum()
+
+        d0 = {k: args[k] for k in diff}
+        gf = jax.grad(loss)(d0, 0, B)
+        gs = [jax.grad(loss)(d0, i * nb, nb) for i in range(n_shards)]
+        for (p, a), *rest in zip(
+                jax.tree_util.tree_flatten_with_path(gf)[0],
+                *(jax.tree_util.tree_flatten_with_path(g)[0] for g in gs)):
+            summed = sum(np.asarray(r[1]) for r in rest)
+            np.testing.assert_allclose(summed, np.asarray(a),
+                                       rtol=2e-5, atol=2e-5,
+                                       err_msg=f"{impl} grad {p}")
